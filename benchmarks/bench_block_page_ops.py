@@ -1,0 +1,29 @@
+"""Paper Table 2: block/page-level operations, merges and stages for each
+scheme over (change-segment %) × (RAM buffer %), Wiki workload."""
+from __future__ import annotations
+
+from .common import build_table, corpus, emit, run_inserts
+
+
+def run(rows):
+    tokens = corpus("wiki")
+    for cs in (50.0, 25.0, 12.5):
+        for ram in (1.0, 2.0, 5.0, 10.0):
+            for scheme in ("MB", "MDB", "MDB-L"):
+                t = build_table(scheme, ram, cs)
+                run_inserts(t, tokens)
+                led = t.ledger
+                frac = led.block_op_fraction() * 100
+                rows.append((
+                    f"table2/{scheme}/cs={cs}/ram={ram}",
+                    float(led.block_ops),
+                    f"block={led.block_ops};page={led.page_ops};"
+                    f"block_frac={frac:.2f}%;merges={led.merges};"
+                    f"stages={led.stages}"))
+    return rows
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    emit(rows)

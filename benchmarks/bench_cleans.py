@@ -1,0 +1,32 @@
+"""Paper Figure 5: clean (erase) counts vs RAM buffer size (a) and vs
+change-segment size (b)."""
+from __future__ import annotations
+
+from .common import build_table, corpus, emit, run_inserts
+
+
+def run(rows):
+    for dataset in ("wiki", "meme"):
+        tokens = corpus(dataset)
+        for ram in (1.0, 2.0, 5.0, 10.0):
+            for scheme in ("MB", "MDB", "MDB-L"):
+                t = build_table(scheme, ram, 12.5)
+                run_inserts(t, tokens)
+                rows.append((f"fig5a/{dataset}/{scheme}/ram={ram}",
+                             float(t.ledger.cleans),
+                             f"cleans={t.ledger.cleans}"))
+        if dataset == "wiki":
+            for cs in (50.0, 25.0, 12.5):
+                for scheme in ("MB", "MDB", "MDB-L"):
+                    t = build_table(scheme, 5.0, cs)
+                    run_inserts(t, tokens)
+                    rows.append((f"fig5b/{dataset}/{scheme}/cs={cs}",
+                                 float(t.ledger.cleans),
+                                 f"cleans={t.ledger.cleans}"))
+    return rows
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    emit(rows)

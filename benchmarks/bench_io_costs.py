@@ -1,0 +1,40 @@
+"""Paper Figure 4 (+§3.5 naive baseline): total I/O cost of insert-only
+workloads per scheme × SSD configuration × dataset."""
+from __future__ import annotations
+
+from .common import DEVICES, build_table, corpus, emit, run_inserts
+
+
+def run(rows, include_naive: bool = True):
+    for dataset in ("wiki", "meme"):
+        tokens = corpus(dataset)
+        base_times = {}
+        for scheme in ("MB", "MDB", "MDB-L"):
+            t = build_table(scheme, 5.0, 12.5)
+            run_inserts(t, tokens)
+            for dev_name, dev in DEVICES.items():
+                io_s = t.ledger.time_us(dev) / 1e6
+                base_times[(scheme, dev_name)] = io_s
+                rows.append((f"fig4/{dataset}/{scheme}/{dev_name}",
+                             io_s * 1e6,
+                             f"io_s={io_s:.3f};cleans={t.ledger.cleans};"
+                             f"block_ops={t.ledger.block_ops};"
+                             f"page_ops={t.ledger.page_ops}"))
+        if include_naive:
+            t = build_table("naive", 0.0, 0.0)
+            run_inserts(t, tokens)
+            for dev_name, dev in DEVICES.items():
+                io_s = t.ledger.time_us(dev) / 1e6
+                best = min(base_times[(s, dev_name)]
+                           for s in ("MB", "MDB", "MDB-L"))
+                rows.append((f"fig4naive/{dataset}/naive/{dev_name}",
+                             io_s * 1e6,
+                             f"io_s={io_s:.3f};cleans={t.ledger.cleans};"
+                             f"slowdown_vs_best={io_s / max(best, 1e-9):.0f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    emit(rows)

@@ -1,0 +1,63 @@
+"""Paper Figure 3: average query time.
+
+(a) vs change-segment size (RAM fixed 5%), (b) vs RAM buffer size (CS fixed
+12.5%), (c) across SSD configurations (RAM 5%, CS 12.5%) — update-intensive
+interleaved workload per §3.4.
+"""
+from __future__ import annotations
+
+from .common import DEVICES, build_table, corpus, emit, run_interleaved_queries
+
+N_QUERIES = 4000
+
+
+def _avg_query_ms(table, dev) -> float:
+    return table.qstats.avg_time_ms(dev)
+
+
+def fig3a(tokens, rows, dataset):
+    dev = DEVICES["MLC-1"]
+    for cs in (50.0, 25.0, 12.5):
+        for scheme in ("MB", "MDB", "MDB-L"):
+            t = build_table(scheme, 5.0, cs)
+            run_interleaved_queries(t, tokens, N_QUERIES)
+            ms = _avg_query_ms(t, dev)
+            rows.append((f"fig3a/{dataset}/{scheme}/cs={cs}", ms * 1000,
+                         f"avg_query_ms={ms:.4f}"))
+
+
+def fig3b(tokens, rows, dataset):
+    dev = DEVICES["MLC-1"]
+    for ram in (1.0, 2.0, 5.0, 10.0):
+        for scheme in ("MB", "MDB", "MDB-L"):
+            t = build_table(scheme, ram, 12.5)
+            run_interleaved_queries(t, tokens, N_QUERIES)
+            ms = _avg_query_ms(t, dev)
+            rows.append((f"fig3b/{dataset}/{scheme}/ram={ram}", ms * 1000,
+                         f"avg_query_ms={ms:.4f}"))
+
+
+def fig3c(tokens, rows, dataset):
+    for dev_name, dev in DEVICES.items():
+        for scheme in ("MB", "MDB", "MDB-L"):
+            t = build_table(scheme, 5.0, 12.5)
+            run_interleaved_queries(t, tokens, N_QUERIES)
+            ms = _avg_query_ms(t, dev)
+            rows.append((f"fig3c/{dataset}/{scheme}/{dev_name}", ms * 1000,
+                         f"avg_query_ms={ms:.4f}"))
+
+
+def run(rows):
+    for dataset in ("wiki", "meme"):
+        tokens = corpus(dataset)
+        fig3a(tokens, rows, dataset)
+        fig3b(tokens, rows, dataset)
+        if dataset == "wiki":
+            fig3c(tokens, rows, dataset)
+    return rows
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    emit(rows)

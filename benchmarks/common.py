@@ -1,0 +1,76 @@
+"""Shared benchmark scaffolding: scaled-down paper workload + CSV helpers.
+
+The paper drives 136M (Wiki) / 402M (Meme) tokens through a 100–200MB
+table; we run the same *shape* of experiment at 1/128 scale (1–2M zipf
+tokens, 1MB table) so the full suite completes in minutes on one CPU core.
+All comparisons are within-suite, so the paper's *trends/ratios* are the
+reproduction target (EXPERIMENTS.md §Paper), not absolute times.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import DEVICES, TableGeometry, make_table  # noqa: E402
+
+# 64 blocks × 32 pages × 64 entries = 131,072 entries ≈ 1MB of 8B pairs
+GEOM = TableGeometry(num_blocks=16, pages_per_block=128, entries_per_page=64)
+
+WIKI_TOKENS = 1_000_000     # unique/total ≈ 7% (paper Wiki: 7.1%)
+MEME_TOKENS = 2_000_000     # unique/total ≈ 4% (paper Meme: 4.2%)
+
+
+def corpus(name: str, n_tokens: int | None = None) -> np.ndarray:
+    rng = np.random.default_rng(42 if name == "wiki" else 1337)
+    n = n_tokens or (WIKI_TOKENS if name == "wiki" else MEME_TOKENS)
+    a = 1.35 if name == "wiki" else 1.45
+    return (rng.zipf(a, size=n) % (1 << 22)).astype(np.int64)
+
+
+def build_table(scheme: str, ram_pct: float, cs_pct: float):
+    return make_table(scheme, GEOM, ram_buffer_pct=ram_pct,
+                      change_segment_pct=cs_pct)
+
+
+def run_inserts(table, tokens: np.ndarray, chunk: int = 16384) -> float:
+    t0 = time.time()
+    table.insert_batch(tokens, chunk=chunk)
+    table.finalize()
+    return time.time() - t0
+
+
+def run_interleaved_queries(table, tokens: np.ndarray, n_queries: int,
+                            warm_frac: float = 0.25, seed: int = 0):
+    """Paper §3.3: warm-start inserts, then interleave queries with the
+    remaining inserts."""
+    rng = np.random.default_rng(seed)
+    warm = int(len(tokens) * warm_frac)
+    table.insert_batch(tokens[:warm])
+    rest = tokens[warm:]
+    q_keys = rng.choice(tokens, size=n_queries)
+    found = 0
+    step = max(len(rest) // n_queries, 1)
+    qi = 0
+    for i in range(0, len(rest), 16384):
+        table.insert_batch(rest[i:i + 16384])
+        want = min(n_queries, (i + 16384) // step)
+        while qi < want:
+            if table.query(int(q_keys[qi])) != 0:
+                found += 1
+            qi += 1
+    while qi < n_queries:
+        if table.query(int(q_keys[qi])) != 0:
+            found += 1
+        qi += 1
+    return found
+
+
+def emit(rows, file=None):
+    out = file or sys.stdout
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}", file=out, flush=True)

@@ -1,0 +1,52 @@
+"""Benchmark suite entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig3*   — paper Figure 3 (query times)           bench_query_times
+  fig4*   — paper Figure 4 + §3.5 naive (I/O cost) bench_io_costs
+  fig5*   — paper Figure 5 (cleans)                bench_cleans
+  table2* — paper Table 2 (op mix)                 bench_block_page_ops
+  kernel* — Pallas flash-hash microbench           bench_kernels
+  roofline* — dry-run-derived roofline terms       bench_roofline
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--only fig3,...]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_block_page_ops, bench_cleans, bench_io_costs,
+               bench_kernels, bench_query_times, bench_roofline)
+from .common import emit
+
+SUITES = {
+    "fig3": bench_query_times,
+    "fig4": bench_io_costs,
+    "fig5": bench_cleans,
+    "table2": bench_block_page_ops,
+    "kernel": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (default: all)")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    rows = []
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        suite_rows = []
+        SUITES[name].run(suite_rows)
+        emit(suite_rows)
+        rows.extend(suite_rows)
+        print(f"# suite {name}: {len(suite_rows)} rows in "
+              f"{time.time() - t0:.1f}s", file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

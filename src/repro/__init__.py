@@ -1,0 +1,5 @@
+"""repro: "Hash in a Flash" — flash-friendly counting hash tables, rebuilt as a
+TPU-native JAX framework (data-pipeline statistics, MoE load accounting,
+KV-prefix refcounting) plus a multi-arch LM training/serving stack."""
+
+__version__ = "0.1.0"

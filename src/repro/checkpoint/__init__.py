@@ -1,0 +1,2 @@
+from .checkpoint import (CheckpointManager, latest_step,  # noqa: F401
+                         restore_checkpoint, save_checkpoint)

@@ -1,0 +1,18 @@
+"""Core: the paper's counting hash table for two-tier memories.
+
+Event-level SSD simulation (paper-faithful benchmarks) plus the TPU-native
+JAX twin used by the framework's data/statistics and serving layers.
+"""
+from .flash_model import (CostLedger, FlashDevice, TableGeometry, DEVICES,
+                          MLC1, MLC2, SLC)
+from .hashing import HashPair, Pow2Hash, hash_pair_for
+from .table_sim import (EMPTY, MBTable, MDBTable, MDBLTable, NaiveTable,
+                        SCHEMES, make_table)
+from .tfidf import TfIdfPipeline, token_id, tokenize
+
+__all__ = [
+    "CostLedger", "FlashDevice", "TableGeometry", "DEVICES", "MLC1", "MLC2",
+    "SLC", "HashPair", "Pow2Hash", "hash_pair_for", "EMPTY", "MBTable",
+    "MDBTable", "MDBLTable", "NaiveTable", "SCHEMES", "make_table",
+    "TfIdfPipeline", "token_id", "tokenize",
+]

@@ -1,0 +1,112 @@
+"""Two-level hash function pair from the paper (§2).
+
+    g(x) = (a*x + b) mod q          -- primary (entry-level, closed table)
+    s(x) = g(x) div r               -- secondary (block-level, open buffer)
+
+The *placement property*: all keys in secondary slot ``m`` land in the
+contiguous primary range ``[r*m, r*(m+1))`` (modulo probe overflow), so a
+buffered slot can be merged with exactly one device block.
+
+Two implementations:
+
+* :class:`HashPair` — the paper's linear-congruential pair, used by the
+  event-level SSD simulation (numpy int64; exact).
+* :class:`Pow2Hash` — TPU-native variant for the JAX/Pallas path: ``q`` and
+  ``r`` are powers of two, so ``mod``/``div`` become mask/shift and the whole
+  computation stays inside uint32 (no 64-bit multiplies, which TPUs lack and
+  jax-without-x64 forbids). ``g(x) = (x * mult) & (q-1)`` with an odd Knuth
+  multiplier; eq. (3) ``s(x) = g(x) div r`` holds identically, which is all
+  the placement property needs. Recorded as a hardware adaptation in
+  DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# Knuth multiplicative constants (odd, fit uint32).
+_DEFAULT_A = 2_654_435_761
+_DEFAULT_B = 1_013_904_223
+
+
+@dataclasses.dataclass(frozen=True)
+class HashPair:
+    """The paper's (g, s) pair. ``q`` = total entries, ``r`` = entries/block."""
+
+    q: int  # number of entries in the primary (closed) table
+    r: int  # entries per block == primary entries per secondary slot
+    a: int = _DEFAULT_A
+    b: int = _DEFAULT_B
+
+    def __post_init__(self):
+        if self.q % self.r != 0:
+            raise ValueError(f"q={self.q} must be a multiple of r={self.r}")
+        if self.q <= 0 or self.r <= 0:
+            raise ValueError("q and r must be positive")
+
+    @property
+    def num_slots(self) -> int:
+        """Secondary-table slot count (== number of primary blocks)."""
+        return self.q // self.r
+
+    # Inputs: python ints or numpy int64 arrays with x < 2**31 → a*x+b < 2**63
+    # stays exact in int64.
+    def g(self, x):
+        return (self.a * x + self.b) % self.q
+
+    def s(self, x):
+        return self.g(x) // self.r
+
+    def block_of(self, x):
+        """The device block a key belongs to (== s(x))."""
+        return self.s(x)
+
+    def home_within_block(self, x):
+        """Entry offset of the key's home position inside its block."""
+        return self.g(x) % self.r
+
+
+@dataclasses.dataclass(frozen=True)
+class Pow2Hash:
+    """uint32-only (g, s) pair with power-of-two table geometry (JAX path)."""
+
+    q_log2: int  # log2(total entries)
+    r_log2: int  # log2(entries per block)
+    mult: int = _DEFAULT_A  # odd multiplier
+
+    def __post_init__(self):
+        if self.r_log2 > self.q_log2:
+            raise ValueError("r must not exceed q")
+        if self.mult % 2 == 0:
+            raise ValueError("multiplier must be odd")
+
+    @property
+    def q(self) -> int:
+        return 1 << self.q_log2
+
+    @property
+    def r(self) -> int:
+        return 1 << self.r_log2
+
+    @property
+    def num_slots(self) -> int:
+        return 1 << (self.q_log2 - self.r_log2)
+
+    def g(self, x):
+        """x: int32/uint32 array (jax or numpy) or python int → int32 in [0,q)."""
+        if isinstance(x, int):
+            return ((x * self.mult) & 0xFFFFFFFF) & (self.q - 1)
+        # jax/numpy: cast to uint32; multiply wraps; mask keeps it in range.
+        import numpy as _np
+        u = x.astype("uint32") * _np.uint32(self.mult)
+        return (u & _np.uint32(self.q - 1)).astype("int32")
+
+    def s(self, x):
+        return self.g(x) >> self.r_log2
+
+    def home_within_block(self, x):
+        return self.g(x) & (self.r - 1)
+
+
+def hash_pair_for(num_blocks: int, block_entries: int, a: int = _DEFAULT_A,
+                  b: int = _DEFAULT_B) -> HashPair:
+    return HashPair(q=num_blocks * block_entries, r=block_entries, a=a, b=b)

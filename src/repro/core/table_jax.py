@@ -1,0 +1,248 @@
+"""Device-resident (JAX) counting hash table — the TPU-native twin of
+:mod:`table_sim`, used by the framework's data-statistics, MoE-accounting
+and serving layers.
+
+Mapping (DESIGN.md §2): HBM table = data segment; ``sort+segment_sum``
+dedup = RAM buffer; HBM append-log = MDB-L change segment; Pallas tile
+merge = block-level update. Stats counters mirror the paper's ledger:
+``tile_stores`` is the clean/wear analogue (one per block rewrite).
+
+Everything is functional: ``state -> op -> state`` and jit-friendly; the
+scheme (MB vs MDB-L) is a static config choice, so each policy compiles to
+its own program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_hash import ops as hops
+from .hashing import Pow2Hash
+
+EMPTY = hops.EMPTY
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashTableConfig:
+    """Geometry + policy of a device table."""
+
+    q_log2: int = 16              # total entries (power of two)
+    r_log2: int = 10              # entries per block (≥128-lane friendly)
+    scheme: str = "MDB-L"         # "MB" | "MDB-L"
+    log_capacity: int = 1 << 14   # change-segment entries (MDB-L)
+    max_updates_per_block: int = 1 << 9   # VMEM cap per tile merge
+    overflow_capacity: int = 1 << 10
+    interpret: bool = True        # Pallas interpret mode (CPU container)
+
+    @property
+    def pair(self) -> Pow2Hash:
+        return Pow2Hash(q_log2=self.q_log2, r_log2=self.r_log2)
+
+    @property
+    def num_blocks(self) -> int:
+        return 1 << (self.q_log2 - self.r_log2)
+
+    @property
+    def block_entries(self) -> int:
+        return 1 << self.r_log2
+
+
+class TableStats(NamedTuple):
+    tile_loads: jax.Array       # blocks read from HBM during merges
+    tile_stores: jax.Array      # blocks rewritten (the paper's "cleans")
+    staged_entries: jax.Array   # entries appended to the log (seq writes)
+    merges: jax.Array
+    stages: jax.Array
+    dropped: jax.Array          # overflow-capacity losses (should be 0)
+
+
+class DeviceTableState(NamedTuple):
+    keys: jax.Array        # (n_b, r) int32
+    counts: jax.Array      # (n_b, r) int32
+    log_keys: jax.Array    # (log_cap,) int32 — MDB-L change segment
+    log_counts: jax.Array  # (log_cap,) int32
+    log_ptr: jax.Array     # () int32
+    ov_keys: jax.Array     # (ov_cap,) int32 — overflow region
+    ov_counts: jax.Array   # (ov_cap,) int32
+    ov_ptr: jax.Array      # () int32
+    stats: TableStats
+
+
+def init(cfg: FlashTableConfig) -> DeviceTableState:
+    n_b, r = cfg.num_blocks, cfg.block_entries
+    z = lambda: jnp.zeros((), jnp.int32)
+    return DeviceTableState(
+        keys=jnp.full((n_b, r), EMPTY, jnp.int32),
+        counts=jnp.zeros((n_b, r), jnp.int32),
+        log_keys=jnp.full((cfg.log_capacity,), EMPTY, jnp.int32),
+        log_counts=jnp.zeros((cfg.log_capacity,), jnp.int32),
+        log_ptr=z(),
+        ov_keys=jnp.full((cfg.overflow_capacity,), EMPTY, jnp.int32),
+        ov_counts=jnp.zeros((cfg.overflow_capacity,), jnp.int32),
+        ov_ptr=z(),
+        stats=TableStats(z(), z(), z(), z(), z(), z()),
+    )
+
+
+@jax.jit
+def accumulate_deltas(tokens, deltas):
+    """RAM-buffer dedup with explicit deltas (supports deletion-by-−1)."""
+    order = jnp.argsort(tokens, stable=True)
+    t = tokens[order]
+    d = deltas[order]
+    is_head = jnp.concatenate([jnp.ones((1,), bool), t[1:] != t[:-1]])
+    is_head &= t != EMPTY
+    seg = jnp.cumsum(is_head) - 1
+    sums = jax.ops.segment_sum(jnp.where(t != EMPTY, d, 0), seg,
+                               num_segments=t.shape[0])
+    comp = jnp.argsort(jnp.where(is_head, 0, 1), stable=True)
+    keys = jnp.where(is_head[comp], t[comp], EMPTY)
+    cnts = jnp.where(is_head[comp],
+                     sums[jnp.clip(seg[comp], 0, t.shape[0] - 1)], 0)
+    return keys, cnts.astype(jnp.int32)
+
+
+def _append_overflow(state: DeviceTableState, spill_k, spill_c):
+    """Compact spilled entries into the overflow region (page-chained in the
+    paper; a pointer-bumped array here)."""
+    flat_k = spill_k.reshape(-1)
+    flat_c = spill_c.reshape(-1)
+    valid = flat_k != EMPTY
+    ov_cap = state.ov_keys.shape[0]
+    pos = state.ov_ptr + jnp.cumsum(valid.astype(jnp.int32)) - 1
+    in_range = valid & (pos < ov_cap)
+    idx = jnp.where(in_range, pos, ov_cap)  # OOB drops
+    ov_keys = state.ov_keys.at[idx].set(jnp.where(in_range, flat_k, EMPTY),
+                                        mode="drop")
+    ov_counts = state.ov_counts.at[idx].add(flat_c * in_range, mode="drop")
+    n_spill = valid.sum(dtype=jnp.int32)
+    n_fit = in_range.sum(dtype=jnp.int32)
+    return state._replace(
+        ov_keys=ov_keys, ov_counts=ov_counts,
+        ov_ptr=jnp.minimum(state.ov_ptr + n_spill, ov_cap),
+        stats=state.stats._replace(
+            dropped=state.stats.dropped + (n_spill - n_fit)))
+
+
+def _merge_now(cfg: FlashTableConfig, state: DeviceTableState
+               ) -> DeviceTableState:
+    """Drain the change segment into the data segment (full-grid merge)."""
+    pair = cfg.pair
+    uk, uc, carry_k, carry_c, _ = hops.bucket_updates(
+        pair, state.log_keys, state.log_counts, cfg.max_updates_per_block)
+    keys, counts, spill_k, spill_c = hops.merge(
+        pair, state.keys, state.counts, uk, uc, cfg.interpret)
+    state = state._replace(keys=keys, counts=counts)
+    state = _append_overflow(state, spill_k, spill_c)
+    # carried updates (exceeded a tile's max_u) stay staged, compacted to
+    # the log head; everything else is cleared.
+    carry_valid = carry_k != EMPTY
+    comp = jnp.argsort(~carry_valid, stable=True)
+    log_keys = jnp.where(carry_valid[comp], carry_k[comp], EMPTY)
+    log_counts = jnp.where(carry_valid[comp], carry_c[comp], 0)
+    n_carry = carry_valid.sum(dtype=jnp.int32)
+    n_b = cfg.num_blocks
+    stats = state.stats._replace(
+        tile_loads=state.stats.tile_loads + n_b,
+        tile_stores=state.stats.tile_stores + n_b,
+        merges=state.stats.merges + 1)
+    return state._replace(log_keys=log_keys, log_counts=log_counts,
+                          log_ptr=n_carry, stats=stats)
+
+
+def _stage(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
+           ) -> DeviceTableState:
+    """Append a deduped chunk to the MDB-L log (sequential write)."""
+    chunk = keys.shape[0]
+    cap = cfg.log_capacity
+
+    def do_merge(st):
+        return _merge_now(cfg, st)
+
+    state = jax.lax.cond(state.log_ptr + chunk > cap, do_merge,
+                         lambda st: st, state)
+    log_keys = jax.lax.dynamic_update_slice(state.log_keys, keys,
+                                            (state.log_ptr,))
+    log_counts = jax.lax.dynamic_update_slice(state.log_counts, cnts,
+                                              (state.log_ptr,))
+    n_new = (keys != EMPTY).sum(dtype=jnp.int32)
+    stats = state.stats._replace(
+        staged_entries=state.stats.staged_entries + n_new,
+        stages=state.stats.stages + 1)
+    return state._replace(log_keys=log_keys, log_counts=log_counts,
+                          log_ptr=state.log_ptr + chunk, stats=stats)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def update(cfg: FlashTableConfig, state: DeviceTableState, tokens,
+           deltas: Optional[jax.Array] = None) -> DeviceTableState:
+    """Insert a batch of tokens (or (token, Δ) pairs) into the table."""
+    tokens = tokens.astype(jnp.int32)
+    if deltas is None:
+        keys, cnts = hops.accumulate(tokens)
+    else:
+        keys, cnts = accumulate_deltas(tokens, deltas.astype(jnp.int32))
+    if cfg.scheme == "MB":
+        # no change segment: bucket + merge on every flush (paper's MB)
+        pair = cfg.pair
+        uk, uc, carry_k, carry_c, _ = hops.bucket_updates(
+            pair, keys, cnts, cfg.max_updates_per_block)
+        nk, nc, spill_k, spill_c = hops.merge(
+            pair, state.keys, state.counts, uk, uc, cfg.interpret)
+        state = state._replace(keys=nk, counts=nc)
+        state = _append_overflow(state, spill_k, spill_c)
+        n_b = cfg.num_blocks
+        stats = state.stats._replace(
+            tile_loads=state.stats.tile_loads + n_b,
+            tile_stores=state.stats.tile_stores + n_b,
+            merges=state.stats.merges + 1)
+        return state._replace(stats=stats)
+    if cfg.scheme == "MDB-L":
+        return _stage(cfg, state, keys, cnts)
+    raise ValueError(f"unknown scheme {cfg.scheme}")
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def flush(cfg: FlashTableConfig, state: DeviceTableState) -> DeviceTableState:
+    """Force a merge of any staged state (end-of-stream / checkpoint)."""
+    if cfg.scheme == "MB":
+        return state
+    return _merge_now(cfg, state)
+
+
+def _scan_segment(seg_keys, seg_counts, q, chunk: int = 1024):
+    """Masked linear scan of a log/overflow segment for a query batch."""
+    cap = seg_keys.shape[0]
+    chunk = min(chunk, cap)
+    n_chunks = -(-cap // chunk)
+
+    def body(i, acc):
+        lk = jax.lax.dynamic_slice(seg_keys, (i * chunk,), (chunk,))
+        lc = jax.lax.dynamic_slice(seg_counts, (i * chunk,), (chunk,))
+        m = (q[:, None] == lk[None, :]) & (lk[None, :] != EMPTY)
+        return acc + jnp.sum(m * lc[None, :], axis=1, dtype=jnp.int32)
+
+    return jax.lax.fori_loop(0, n_chunks,
+                             body, jnp.zeros(q.shape, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def lookup(cfg: FlashTableConfig, state: DeviceTableState, q_keys
+           ) -> Tuple[jax.Array, jax.Array]:
+    """Point queries (paper §2.7): data segment (Pallas probe) + change
+    segment scan + overflow scan. Returns (counts, probe_distances)."""
+    q = q_keys.astype(jnp.int32)
+    cnt, dist = hops.query_sorted(cfg.pair, state.keys, state.counts, q,
+                                  cfg.interpret)
+    cnt = cnt + _scan_segment(state.log_keys, state.log_counts, q)
+    cnt = cnt + _scan_segment(state.ov_keys, state.ov_counts, q)
+    return cnt, dist
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def load_factor(cfg: FlashTableConfig, state: DeviceTableState) -> jax.Array:
+    return (state.keys != EMPTY).mean()

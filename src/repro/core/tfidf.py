@@ -1,0 +1,99 @@
+"""TF-IDF on counting hash tables — the paper's driving application (§1, §3.2).
+
+Two counting tables are maintained while streaming a corpus:
+
+* ``term_table``  — global term frequencies (every token occurrence),
+* ``doc_table``   — document frequencies (each unique token once per doc).
+
+``tfidf(w, d) = tf(w, d) * log(N / df(w))`` (Salton–Buckley weighting [32]).
+
+Any of the paper's schemes (MB / MDB / MDB-L / naive) can back either table;
+the I/O ledgers of the tables are what the paper's Figures 3–5 measure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from .flash_model import TableGeometry
+from .table_sim import FlashHashTableBase, make_table
+
+
+def tokenize(text: str) -> List[str]:
+    return [t for t in
+            "".join(c.lower() if c.isalnum() else " " for c in text).split()
+            if t]
+
+
+def token_id(token: str, key_space: int = 1 << 30) -> int:
+    """Stable 31-bit token id (FNV-1a); the hash-table key domain."""
+    h = 2166136261
+    for ch in token.encode("utf-8"):
+        h ^= ch
+        h = (h * 16777619) & 0xFFFFFFFF
+    return h % key_space
+
+
+class TfIdfPipeline:
+    """Streaming TF-IDF scorer over a counting hash table."""
+
+    def __init__(self, geom: TableGeometry, scheme: str = "MDB-L",
+                 ram_buffer_pct: float = 5.0, change_segment_pct: float = 12.5,
+                 track_df: bool = True):
+        self.term_table: FlashHashTableBase = make_table(
+            scheme, geom, ram_buffer_pct, change_segment_pct)
+        self.doc_table: Optional[FlashHashTableBase] = (
+            make_table(scheme, geom, ram_buffer_pct, change_segment_pct)
+            if track_df else None)
+        self.num_docs = 0
+        self.total_tokens = 0
+
+    # -- ingestion ---------------------------------------------------------
+    def add_document(self, tokens: Sequence[str]) -> None:
+        ids = np.fromiter((token_id(t) for t in tokens), dtype=np.int64,
+                          count=len(tokens))
+        self.add_document_ids(ids)
+
+    def add_document_ids(self, ids: np.ndarray) -> None:
+        if len(ids) == 0:
+            self.num_docs += 1
+            return
+        self.term_table.insert_batch(ids)
+        if self.doc_table is not None:
+            self.doc_table.insert_batch(np.unique(ids))
+        self.num_docs += 1
+        self.total_tokens += len(ids)
+
+    # -- queries -------------------------------------------------------------
+    def term_frequency(self, token: str) -> int:
+        """A paper-workload query: 'how frequent is this keyword' (§3.3)."""
+        return self.term_table.query(token_id(token))
+
+    def idf(self, token: str) -> float:
+        if self.doc_table is None:
+            raise ValueError("df tracking disabled")
+        df = self.doc_table.query(token_id(token))
+        if df <= 0:
+            return 0.0
+        return math.log(self.num_docs / df)
+
+    def tfidf(self, doc_tokens: Sequence[str]) -> Dict[str, float]:
+        """Score one document against the accumulated corpus statistics."""
+        tf: Dict[str, int] = {}
+        for t in doc_tokens:
+            tf[t] = tf.get(t, 0) + 1
+        return {t: (c / max(len(doc_tokens), 1)) * self.idf(t)
+                for t, c in tf.items()}
+
+    def keywords(self, doc_tokens: Sequence[str], threshold: float) -> List[str]:
+        """Paper §1: keywords = words with TF-IDF above a threshold."""
+        scores = self.tfidf(doc_tokens)
+        return sorted((t for t, v in scores.items() if v >= threshold),
+                      key=lambda t: -scores[t])
+
+    def finalize(self) -> None:
+        self.term_table.finalize()
+        if self.doc_table is not None:
+            self.doc_table.finalize()

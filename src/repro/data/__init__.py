@@ -1,0 +1,3 @@
+from .corpus import SyntheticCorpus, read_text_corpus  # noqa: F401
+from .loader import LoaderConfig, make_batch, data_state  # noqa: F401
+from .stats import CorpusStats  # noqa: F401

@@ -1,0 +1,89 @@
+"""Corpus statistics service: the paper's counting hash table as the data
+layer's streaming statistics engine.
+
+``CorpusStats`` ingests token batches into a flash-hash device table
+(MDB-L policy by default — the paper's recommendation) and answers
+frequency queries. On top of it:
+
+* ``tfidf_weights`` — per-token IDF weights for corpus filtering/weighting,
+* ``doc_filter`` — the paper's TF-IDF keyword criterion as a document
+  filter for the pretraining loader,
+* ``expert_stats`` — counting-table accumulation of MoE expert-load
+  histograms (counting semantics across steps; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import table_jax as tj
+
+
+@dataclasses.dataclass
+class CorpusStats:
+    cfg: tj.FlashTableConfig
+    state: tj.DeviceTableState
+    docs_seen: int = 0
+    tokens_seen: int = 0
+
+    @classmethod
+    def create(cls, q_log2: int = 18, r_log2: int = 10,
+               scheme: str = "MDB-L") -> "CorpusStats":
+        cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2,
+                                  scheme=scheme)
+        return cls(cfg=cfg, state=tj.init(cfg))
+
+    # -- ingestion ----------------------------------------------------------
+    def ingest(self, tokens: np.ndarray) -> None:
+        """Add one batch/document of token ids (host array)."""
+        t = jnp.asarray(np.asarray(tokens).reshape(-1), jnp.int32)
+        self.state = tj.update(self.cfg, self.state, t)
+        self.docs_seen += 1
+        self.tokens_seen += int(t.shape[0])
+
+    def flush(self) -> None:
+        self.state = tj.flush(self.cfg, self.state)
+
+    # -- queries ------------------------------------------------------------
+    def counts(self, tokens: np.ndarray) -> np.ndarray:
+        q = jnp.asarray(np.asarray(tokens).reshape(-1), jnp.int32)
+        cnt, _ = tj.lookup(self.cfg, self.state, q)
+        return np.asarray(cnt)
+
+    def tfidf_weights(self, tokens: np.ndarray) -> np.ndarray:
+        """IDF-style weights: log(total / freq) per queried token."""
+        c = np.maximum(self.counts(tokens), 1)
+        return np.log(max(self.tokens_seen, 1) / c)
+
+    def doc_score(self, doc_tokens: np.ndarray) -> float:
+        """Mean TF-IDF of the document against corpus stats (paper §1:
+        keyword threshold → here a doc-quality score)."""
+        toks, tf = np.unique(np.asarray(doc_tokens), return_counts=True)
+        idf = self.tfidf_weights(toks)
+        return float((tf / max(len(doc_tokens), 1) * idf).sum())
+
+    def doc_filter(self, threshold: float):
+        """Loader-pluggable filter: keep docs above the TF-IDF score."""
+        def keep(doc_tokens: np.ndarray) -> bool:
+            return self.doc_score(doc_tokens) >= threshold
+        return keep
+
+    # -- MoE accounting -------------------------------------------------------
+    def ingest_expert_counts(self, layer: int, counts: np.ndarray) -> None:
+        """Accumulate per-expert token counts into the same table (keys are
+        (layer, expert) pairs — counting semantics, deletion-capable)."""
+        e = counts.shape[0]
+        keys = (np.arange(e, dtype=np.int64) | (np.int64(layer) << 16))
+        reps = jnp.asarray(keys, jnp.int32)
+        deltas = jnp.asarray(counts, jnp.int32)
+        self.state = tj.update(self.cfg, self.state, reps, deltas)
+
+    def expert_counts(self, layer: int, num_experts: int) -> np.ndarray:
+        keys = (np.arange(num_experts, dtype=np.int64)
+                | (np.int64(layer) << 16))
+        return self.counts(keys)

@@ -1,0 +1,2 @@
+# Pallas TPU kernels for the paper's compute hot-spot: the counting hash
+# table's block-level merge/query (validated on CPU via interpret=True).

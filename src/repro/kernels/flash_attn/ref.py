@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel: dense causal SDPA with
+GQA grouping and fp32 softmax (the kernel's bit-contract up to bf16
+accumulation differences)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sdpa_ref(q, k, v, causal: bool = True):
+    """q: (b, s, h, d); k/v: (b, s, kvh, d/dv) → (b, s, h, dv)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    dv = v.shape[3]
+    qr = q.reshape(b, s, kvh, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qr, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        scores = jnp.where((kpos <= qpos)[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, dv).astype(v.dtype)

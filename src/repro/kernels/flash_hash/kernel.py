@@ -1,0 +1,251 @@
+"""Pallas TPU kernels for the flash-hash counting table.
+
+TPU adaptation of the paper's block-level update (§2.1): the HBM-resident
+data segment is tiled ``(1, r)`` per grid step — one *flash block* == one
+VMEM tile. The grid walks blocks in ascending order (the paper's
+*semi-random write* discipline → in-order single-store tiles), each tile is
+read and written exactly once per merge (the paper's one-clean-per-block
+property), and all probing math inside the tile is vectorized compare/min
+over the lane dimension — no scatter, no per-element HBM traffic.
+
+Kernels
+-------
+* ``merge``       — grid over all blocks; per block, fold its (EMPTY-padded)
+  update list into the tile with vectorized cyclic linear probing.
+* ``merge_dirty`` — beyond-paper variant: grid only over *dirty* blocks via
+  a scalar-prefetched block-id list (saves the read+write of clean tiles —
+  on-device analogue of "only merge blocks with staged updates").
+* ``query``       — block-table indirection: scalar-prefetched block ids
+  pick the tile each query batch reads (PagedAttention-style indexing).
+
+All kernels run under ``interpret=True`` on CPU for validation; BlockSpecs
+use power-of-two ``r`` (lane-dim multiples of 128 for real TPUs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.hashing import Pow2Hash
+
+EMPTY = -1
+
+
+# --------------------------------------------------------------------------
+# merge kernel
+# --------------------------------------------------------------------------
+def _merge_kernel(pair: Pow2Hash, tk_ref, tc_ref, uk_ref, uc_ref,
+                  ok_ref, oc_ref, sk_ref, sc_ref):
+    r = tk_ref.shape[1]
+    max_u = uk_ref.shape[1]
+    keys0 = tk_ref[...]          # (1, r) int32 tile in VMEM
+    counts0 = tc_ref[...]
+    uk = uk_ref[...]             # (1, max_u)
+    uc = uc_ref[...]
+    ar = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+    au = jax.lax.broadcasted_iota(jnp.int32, (1, max_u), 1)
+    inf = jnp.int32(r + 1)
+    rmask = jnp.int32(r - 1)
+
+    def body(j, carry):
+        keys, counts, spill_k, spill_c, n_spill = carry
+        k = jax.lax.dynamic_index_in_dim(uk[0], j, keepdims=False)
+        c = jax.lax.dynamic_index_in_dim(uc[0], j, keepdims=False)
+        valid = k != EMPTY
+        home = (pair.g(k) & rmask).astype(jnp.int32)
+        d = (ar - home) & rmask                      # cyclic probe distance
+        d_match = jnp.min(jnp.where(keys == k, d, inf))
+        d_empty = jnp.min(jnp.where(keys == EMPTY, d, inf))
+        d_tgt = jnp.minimum(d_match, d_empty)
+        found = valid & (d_tgt < inf)
+        hit = (d == d_tgt) & found                   # one-hot over the tile
+        is_insert = d_empty < d_match
+        keys = jnp.where(hit & is_insert, k, keys)
+        counts = jnp.where(hit, counts + c, counts)
+        do_spill = valid & ~found
+        s_hit = (au == n_spill) & do_spill
+        spill_k = jnp.where(s_hit, k, spill_k)
+        spill_c = jnp.where(s_hit, c, spill_c)
+        n_spill = n_spill + do_spill.astype(jnp.int32)
+        return keys, counts, spill_k, spill_c, n_spill
+
+    init = (keys0, counts0,
+            jnp.full((1, max_u), EMPTY, jnp.int32),
+            jnp.zeros((1, max_u), counts0.dtype),
+            jnp.int32(0))
+    keys, counts, spill_k, spill_c, _ = jax.lax.fori_loop(
+        0, max_u, body, init)
+    ok_ref[...] = keys
+    oc_ref[...] = counts
+    sk_ref[...] = spill_k
+    sc_ref[...] = spill_c
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5))
+def merge(pair: Pow2Hash, table_keys, table_counts, upd_keys, upd_counts,
+          interpret: bool = True):
+    """Merge bucketed updates into the data segment.
+
+    table_keys/table_counts: (n_b, r) int32
+    upd_keys/upd_counts:     (n_b, max_u) int32, EMPTY-padded
+    Returns (new_keys, new_counts, spill_keys, spill_counts).
+    """
+    n_b, r = table_keys.shape
+    _, max_u = upd_keys.shape
+    kern = functools.partial(_merge_kernel, pair)
+    return pl.pallas_call(
+        kern,
+        grid=(n_b,),
+        in_specs=[
+            pl.BlockSpec((1, r), lambda b: (b, 0)),
+            pl.BlockSpec((1, r), lambda b: (b, 0)),
+            pl.BlockSpec((1, max_u), lambda b: (b, 0)),
+            pl.BlockSpec((1, max_u), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, r), lambda b: (b, 0)),
+            pl.BlockSpec((1, r), lambda b: (b, 0)),
+            pl.BlockSpec((1, max_u), lambda b: (b, 0)),
+            pl.BlockSpec((1, max_u), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_b, r), table_keys.dtype),
+            jax.ShapeDtypeStruct((n_b, r), table_counts.dtype),
+            jax.ShapeDtypeStruct((n_b, max_u), upd_keys.dtype),
+            jax.ShapeDtypeStruct((n_b, max_u), upd_counts.dtype),
+        ],
+        input_output_aliases={0: 0, 1: 1},   # in-place tile update
+        interpret=interpret,
+    )(table_keys, table_counts, upd_keys, upd_counts)
+
+
+# --------------------------------------------------------------------------
+# dirty-only merge (beyond-paper §Perf optimization)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(0, 6))
+def merge_dirty(pair: Pow2Hash, table_keys, table_counts, dirty_blocks,
+                upd_keys, upd_counts, interpret: bool = True):
+    """Like :func:`merge`, but the grid only visits ``dirty_blocks``.
+
+    dirty_blocks: (n_d,) int32 block ids (may repeat the last id as padding —
+    revisiting an already-merged block with EMPTY updates is a no-op).
+    upd_keys/upd_counts: (n_d, max_u) updates for the listed blocks.
+    """
+    n_b, r = table_keys.shape
+    n_d, max_u = upd_keys.shape
+
+    def kern(blocks_ref, *refs):  # scalar-prefetch ref only feeds index_maps
+        del blocks_ref
+        _merge_kernel(pair, *refs)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_d,),
+        in_specs=[
+            pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
+            pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
+            pl.BlockSpec((1, max_u), lambda i, blocks: (i, 0)),
+            pl.BlockSpec((1, max_u), lambda i, blocks: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
+            pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
+            pl.BlockSpec((1, max_u), lambda i, blocks: (i, 0)),
+            pl.BlockSpec((1, max_u), lambda i, blocks: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_b, r), table_keys.dtype),
+            jax.ShapeDtypeStruct((n_b, r), table_counts.dtype),
+            jax.ShapeDtypeStruct((n_d, max_u), upd_keys.dtype),
+            jax.ShapeDtypeStruct((n_d, max_u), upd_counts.dtype),
+        ],
+        input_output_aliases={1: 0, 2: 1},   # offset by scalar-prefetch arg
+        interpret=interpret,
+    )(dirty_blocks, table_keys, table_counts, upd_keys, upd_counts)
+
+
+# --------------------------------------------------------------------------
+# query kernel (block-table indirection)
+# --------------------------------------------------------------------------
+def _query_kernel(pair: Pow2Hash, blocks_ref, qk_ref, tk_ref, tc_ref,
+                  cnt_ref, dist_ref):
+    del blocks_ref  # only used by the index_map
+    r = tk_ref.shape[1]
+    qchunk = qk_ref.shape[1]
+    keys = tk_ref[...]
+    counts = tc_ref[...]
+    qk = qk_ref[...]                              # (1, qchunk)
+    ar = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+    inf = jnp.int32(r + 1)
+    rmask = jnp.int32(r - 1)
+
+    def one(j, carry):
+        cnts, dists = carry
+        k = jax.lax.dynamic_index_in_dim(qk[0], j, keepdims=False)
+        home = (pair.g(k) & rmask).astype(jnp.int32)
+        d = (ar - home) & rmask
+        d_match = jnp.min(jnp.where(keys == k, d, inf))
+        d_empty = jnp.min(jnp.where(keys == EMPTY, d, inf))
+        found = d_match < d_empty
+        hit = (d == d_match) & found
+        cnt = jnp.sum(jnp.where(hit, counts, 0))
+        dist = jnp.where(found, d_match, jnp.minimum(d_empty, r - 1)) + 1
+        au = jax.lax.broadcasted_iota(jnp.int32, (1, qchunk), 1)
+        sel = au == j
+        cnts = jnp.where(sel, cnt, cnts)
+        dists = jnp.where(sel, dist, dists)
+        return cnts, dists
+
+    cnts0 = jnp.zeros((1, qchunk), counts.dtype)
+    dists0 = jnp.zeros((1, qchunk), jnp.int32)
+    cnts, dists = jax.lax.fori_loop(0, qchunk, one, (cnts0, dists0))
+    cnt_ref[...] = cnts
+    dist_ref[...] = dists
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def query(pair: Pow2Hash, table_keys, table_counts, q_keys,
+          qchunk: int = 128, interpret: bool = True):
+    """Point queries. q_keys: (Q,) int32, Q % qchunk == 0. Queries must be
+    pre-sorted so that each chunk hits one block (callers use
+    ``ops.query``, which sorts/buckets); here each chunk's block id is the
+    block of its first key — keys in a chunk from other blocks return junk,
+    so ops-level bucketing pads chunks with the chunk's own block keys."""
+    n_b, r = table_keys.shape
+    (Q,) = q_keys.shape
+    assert Q % qchunk == 0
+    n_chunks = Q // qchunk
+    q2 = q_keys.reshape(n_chunks, qchunk)
+    blocks = pair.s(q2[:, 0]).astype(jnp.int32)    # (n_chunks,)
+    kern = functools.partial(_query_kernel, pair)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((1, qchunk), lambda i, blocks: (i, 0)),
+            pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
+            pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qchunk), lambda i, blocks: (i, 0)),
+            pl.BlockSpec((1, qchunk), lambda i, blocks: (i, 0)),
+        ],
+    )
+    cnts, dists = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_chunks, qchunk), table_counts.dtype),
+            jax.ShapeDtypeStruct((n_chunks, qchunk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(blocks, q2, table_keys, table_counts)
+    return cnts.reshape(Q), dists.reshape(Q)

@@ -1,0 +1,105 @@
+"""jit'd wrappers around the flash-hash Pallas kernels.
+
+Adds the outside-the-kernel plumbing the paper's schemes need:
+
+* ``bucket_updates`` — RAM-buffer drain: sort staged updates by destination
+  block (the secondary hash ``s``) and pack them into the dense
+  ``(n_b, max_u)`` per-block layout the merge kernel tiles over. Updates
+  beyond a block's ``max_u`` capacity are *carried over* (returned, stay
+  staged) — the deferred-update discipline that bounds VMEM per tile.
+* ``accumulate`` — the TPU-native RAM buffer: sort + segment-sum dedup of a
+  token batch into (unique key, count) pairs (open-hash pre-aggregation).
+* ``merge`` / ``merge_dirty`` / ``query`` — kernel entry points.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.hashing import Pow2Hash
+from . import kernel as _k
+
+EMPTY = _k.EMPTY
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def bucket_updates(pair: Pow2Hash, keys, counts, max_u: int):
+    """Pack (keys, counts) updates into (n_b, max_u) per-block buffers.
+
+    keys/counts: (U,) int32; EMPTY-keyed entries are padding and dropped.
+    Returns (upd_keys, upd_counts, carry_keys, carry_counts, n_dropped):
+    carry_* hold updates that exceeded a block's capacity (sparse, same
+    (U,) layout, EMPTY-padded).
+    """
+    n_b = pair.num_slots
+    (U,) = keys.shape
+    valid = keys != EMPTY
+    blk = jnp.where(valid, pair.s(keys), n_b).astype(jnp.int32)
+    order = jnp.argsort(blk, stable=True)
+    sk = keys[order]
+    sc = counts[order]
+    sb = blk[order]
+    # position within the block's group
+    start = jnp.searchsorted(sb, jnp.arange(n_b + 1, dtype=sb.dtype))
+    pos_in_b = jnp.arange(U, dtype=jnp.int32) - start[jnp.clip(sb, 0, n_b)]
+    keep = (sb < n_b) & (pos_in_b < max_u)
+    row = jnp.where(keep, sb, n_b)  # out-of-bounds rows get dropped
+    upd_keys = jnp.full((n_b, max_u), EMPTY, dtype=keys.dtype)
+    upd_counts = jnp.zeros((n_b, max_u), dtype=counts.dtype)
+    col = jnp.where(keep, pos_in_b, 0)
+    upd_keys = upd_keys.at[row, col].set(sk, mode="drop")
+    upd_counts = upd_counts.at[row, col].set(sc, mode="drop")
+    dropped = (sb < n_b) & ~keep
+    carry_keys = jnp.where(dropped, sk, EMPTY)
+    carry_counts = jnp.where(dropped, sc, 0)
+    return upd_keys, upd_counts, carry_keys, carry_counts, dropped.sum()
+
+
+@jax.jit
+def accumulate(tokens) -> Tuple[jax.Array, jax.Array]:
+    """Open-hash RAM buffer, TPU-native: dedup a batch into (keys, counts).
+
+    tokens: (T,) int32 (EMPTY entries ignored). Returns (T,)-shaped unique
+    keys (EMPTY-padded) + int32 counts: sort, then segment-sum runs.
+    """
+    t = jnp.sort(tokens)
+    is_head = jnp.concatenate([jnp.ones((1,), bool), t[1:] != t[:-1]])
+    is_head &= t != EMPTY
+    seg = jnp.cumsum(is_head) - 1                     # run ids
+    ones = (t != EMPTY).astype(jnp.int32)
+    counts = jax.ops.segment_sum(ones, seg, num_segments=t.shape[0])
+    heads_idx = jnp.where(is_head, jnp.arange(t.shape[0]), t.shape[0] - 1)
+    # compact run heads to the front, EMPTY-pad the tail
+    order = jnp.argsort(jnp.where(is_head, 0, 1), stable=True)
+    keys = jnp.where(is_head[order], t[order], EMPTY)
+    cnts = jnp.where(is_head[order],
+                     counts[jnp.clip(seg[order], 0, t.shape[0] - 1)], 0)
+    return keys, cnts.astype(jnp.int32)
+
+
+def merge(pair: Pow2Hash, table_keys, table_counts, upd_keys, upd_counts,
+          interpret: bool = True):
+    return _k.merge(pair, table_keys, table_counts, upd_keys, upd_counts,
+                    interpret)
+
+
+def merge_dirty(pair: Pow2Hash, table_keys, table_counts, dirty_blocks,
+                upd_keys, upd_counts, interpret: bool = True):
+    return _k.merge_dirty(pair, table_keys, table_counts, dirty_blocks,
+                          upd_keys, upd_counts, interpret)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def query_sorted(pair: Pow2Hash, table_keys, table_counts, q_keys,
+                 interpret: bool = True):
+    """Point queries; sorts by block first so consecutive grid steps reuse
+    the same VMEM tile (Pallas elides the re-fetch), then unsorts."""
+    blk = pair.s(q_keys)
+    order = jnp.argsort(blk, stable=True)
+    cnts, dists = _k.query(pair, table_keys, table_counts, q_keys[order],
+                           1, interpret)
+    inv = jnp.argsort(order, stable=True)
+    return cnts[inv], dists[inv]

@@ -1,0 +1,113 @@
+"""Pure-jnp oracle for the flash-hash Pallas kernels.
+
+Semantics (per block; the paper's closed-table rules, §2.2/§2.5):
+
+* entries live in a block of ``r`` (power of two) slots; key ``EMPTY=-1``
+  marks a free slot (free slots always carry count 0);
+* a key's home slot is ``home = g(x) mod r``; linear probing proceeds
+  cyclically *within the block only* (the paper never probes across block
+  boundaries — overflow spills to the overflow region, handled by the
+  caller);
+* merging an update ``(k, Δ)``: walk from ``home``; the first slot that
+  either holds ``k`` (accumulate ``Δ``) or is empty (insert ``k`` with
+  ``Δ``) wins; if the block is full and ``k`` absent → spill.
+
+The oracle is scan-over-updates, vmapped over blocks — bit-exact contract
+for the kernel across shapes/dtypes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.hashing import Pow2Hash
+
+EMPTY = -1
+
+
+def _home_in_block(pair: Pow2Hash, k):
+    return (pair.g(k) & (pair.r - 1)).astype(jnp.int32)
+
+
+def merge_block_ref(pair: Pow2Hash, keys, counts, upd_keys, upd_counts):
+    """Merge updates into one block. All inputs 1-D of length r / max_u.
+
+    Returns (new_keys, new_counts, spill_keys, spill_counts); spill arrays
+    have shape (max_u,), padded with EMPTY.
+    """
+    r = keys.shape[0]
+    max_u = upd_keys.shape[0]
+    ar = jnp.arange(r, dtype=jnp.int32)
+    au = jnp.arange(max_u, dtype=jnp.int32)
+    inf = jnp.int32(r + 1)
+
+    def step(carry, upd):
+        keys, counts, spill_k, spill_c, n_spill = carry
+        k, c = upd
+        valid = k != EMPTY
+        home = _home_in_block(pair, k)
+        d = (ar - home) & (r - 1)  # cyclic probe distance of every slot
+        d_match = jnp.min(jnp.where(keys == k, d, inf))
+        d_empty = jnp.min(jnp.where(keys == EMPTY, d, inf))
+        d_tgt = jnp.minimum(d_match, d_empty)
+        found = valid & (d_tgt < inf)
+        hit = (d == d_tgt) & found      # one-hot (d is a permutation)
+        is_insert = d_empty < d_match
+        new_keys = jnp.where(hit & is_insert, k, keys)
+        new_counts = jnp.where(hit, counts + c, counts)
+        do_spill = valid & ~found
+        s_hit = (au == n_spill) & do_spill
+        spill_k = jnp.where(s_hit, k, spill_k)
+        spill_c = jnp.where(s_hit, c, spill_c)
+        n_spill = n_spill + do_spill.astype(jnp.int32)
+        return (new_keys, new_counts, spill_k, spill_c, n_spill), None
+
+    init = (keys, counts,
+            jnp.full((max_u,), EMPTY, jnp.int32),
+            jnp.zeros((max_u,), counts.dtype),
+            jnp.int32(0))
+    (keys, counts, spill_k, spill_c, _), _ = jax.lax.scan(
+        step, init, (upd_keys, upd_counts))
+    return keys, counts, spill_k, spill_c
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def merge_ref(pair: Pow2Hash, table_keys, table_counts, upd_keys, upd_counts):
+    """Oracle for the full merge: vmap of merge_block_ref over blocks.
+
+    table_keys/table_counts: (n_b, r); upd_keys/upd_counts: (n_b, max_u)
+    (updates pre-bucketed by destination block, EMPTY-padded).
+    """
+    fn = functools.partial(merge_block_ref, pair)
+    return jax.vmap(fn)(table_keys, table_counts, upd_keys, upd_counts)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def query_ref(pair: Pow2Hash, table_keys, table_counts, q_keys):
+    """Oracle for point queries against the data segment only.
+
+    Returns (counts, probe_distance) per query; probe_distance is the
+    paper's page-read span proxy (slots walked from home, inclusive);
+    absent keys probe to the first empty slot (closed-table termination).
+    """
+    r = table_keys.shape[1]
+    inf = jnp.int32(r + 1)
+    ar = jnp.arange(r, dtype=jnp.int32)
+
+    def one(k):
+        blk = pair.s(k)
+        keys = table_keys[blk]
+        counts = table_counts[blk]
+        home = _home_in_block(pair, k)
+        d = (ar - home) & (r - 1)
+        d_match = jnp.min(jnp.where(keys == k, d, inf))
+        d_empty = jnp.min(jnp.where(keys == EMPTY, d, inf))
+        found = d_match < d_empty
+        hit = (d == d_match) & found
+        cnt = jnp.sum(jnp.where(hit, counts, 0)).astype(counts.dtype)
+        dist = jnp.where(found, d_match, jnp.minimum(d_empty, r - 1)) + 1
+        return cnt, dist.astype(jnp.int32)
+
+    return jax.vmap(one)(q_keys)

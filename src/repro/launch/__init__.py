@@ -1,0 +1,3 @@
+from .mesh import (MeshPlan, arch_mesh, make_production_mesh,  # noqa: F401
+                   plan_for)
+from .sharding import ParallelPlan  # noqa: F401

@@ -1,0 +1,283 @@
+"""Loop-weighted roofline terms from post-SPMD HLO text.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts each ``while`` body ONCE —
+useless for scanned layer stacks (24–96 trips). This module re-derives the
+three roofline inputs by parsing the scheduled HLO with per-computation
+symbol tables and multiplying by while-loop trip counts:
+
+* ``dot_flops``    — 2 · |result| · |contraction| per dot, loop-weighted;
+* ``hbm_bytes``    — Σ (operands + result) bytes over non-bookkeeping
+  instructions (each fusion = one read of its inputs + one write of its
+  output: exactly the HBM-traffic model of a fused program);
+* ``collectives``  — operand bytes per collective kind, loop-weighted.
+
+Everything is per-device (the HLO is the per-partition SPMD program).
+
+HBM-traffic model (``hbm_bytes``): each instruction's result is written to
+HBM once; reads are fused into producers except dot/conv operand streams
+(weights re-read per use); tensors ≤ ``VMEM_RESIDENT_BYTES`` are treated
+as fusion-resident (XLA:TPU keeps loop tiles in VMEM — v5e has 128MB; we
+use a conservative 4MiB). ``hbm_bytes_upper`` counts every operand+result
+with no residency credit (the XLA:CPU one-op-per-fusion view).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+VMEM_RESIDENT_BYTES = 4 * 1024 * 1024
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[\w\[\],{}\s/]*?\)?)\s*"
+    r"([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_WHILE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_BOOKKEEPING = {"tuple", "get-tuple-element", "parameter", "constant",
+                "bitcast", "after-all", "add-dependency", "copy-start",
+                "copy-done", "partition-id", "replica-id", "iota",
+                "broadcast", "while", "conditional", "call",
+                "optimization-barrier", "reshape"}
+
+# ops whose operands/results cannot be fused away on TPU — the realistic
+# HBM-traffic set. Elementwise chains are assumed fused into these
+# producers/consumers (XLA:TPU does; XLA:CPU's scheduled HLO does not, so
+# summing *all* instructions gives only an upper bound).
+_MAJOR = {"dot", "convolution", "gather", "scatter", "reduce",
+          "reduce-window", "sort", "concatenate", "dynamic-slice",
+          "dynamic-update-slice", "pad", "transpose", "copy", "slice",
+          "select-and-scatter", "cholesky", "triangular-solve", "fft",
+          "custom-call", "rng-bit-generator"}
+_BRANCHES = re.compile(
+    r"(?:true_computation=%?([\w.\-]+))|(?:false_computation=%?([\w.\-]+))"
+    r"|(?:branch_computations=\{([^}]*)\})")
+
+
+def _shape_list_bytes(text: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    shapes = []
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        d = [int(x) for x in dims.split(",") if x]
+        n = 1
+        for x in d:
+            n *= x
+        total += n * _DTYPE_BYTES.get(dt, 4)
+        shapes.append((dt, d))
+    return total, shapes
+
+
+class HloAnalysis:
+    def __init__(self, hlo_text: str, seq_len: int = 0):
+        """``seq_len``: when >0, tracks the bytes of (…, S, S) score-shaped
+        tensors separately — ``hbm_bytes_flashproj`` = hbm_bytes minus that
+        traffic, i.e. the projected traffic when attention runs as the
+        fused Pallas flash kernel (kernels/flash_attn — validated vs
+        oracle), whose S×S tiles stay in VMEM by construction."""
+        self.seq_len = seq_len
+        self.comps: Dict[str, List[str]] = {}
+        self.entry = None
+        self._split(hlo_text)
+        self.mult = self._while_multipliers()
+        self._analyze()
+
+    # -- parsing ------------------------------------------------------------
+    def _split(self, text: str) -> None:
+        cur, depth = None, 0
+        for line in text.splitlines():
+            if depth == 0:
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    name = m.group(2)
+                    cur = []
+                    self.comps[name] = cur
+                    if m.group(1):
+                        self.entry = name
+                    depth = 1
+                continue
+            depth += line.count("{") - line.count("}")
+            if cur is not None and depth >= 1:
+                cur.append(line)
+            if depth <= 0:
+                cur, depth = None, 0
+
+    def _while_multipliers(self) -> Dict[str, int]:
+        mult = {name: 1 for name in self.comps}
+        edges: Dict[str, List[Tuple[str, int]]] = {}
+        for name, lines in self.comps.items():
+            for line in lines:
+                if " while(" not in line:
+                    continue
+                m = _WHILE.search(line)
+                if not m:
+                    continue
+                cond, body = m.group(1), m.group(2)
+                trips = 1
+                for cl in self.comps.get(cond, []):
+                    c = _CONST_S32.search(cl)
+                    if c:
+                        trips = max(trips, int(c.group(1)))
+                edges.setdefault(name, []).append((body, trips))
+                edges.setdefault(name, []).append((cond, trips))
+        for _ in range(64):
+            changed = False
+            for src, outs in edges.items():
+                for dst, trips in outs:
+                    want = mult.get(src, 1) * trips
+                    if mult.get(dst, 1) < want:
+                        mult[dst] = want
+                        changed = True
+            if not changed:
+                break
+        return mult
+
+    # -- analysis -----------------------------------------------------------
+    def _countable(self):
+        """Computations that execute as control flow (not fusion bodies):
+        ENTRY + while bodies/conditions + conditional branches. Fusion /
+        reduce-applier / comparator computations are *inlined* into their
+        call sites and must not be separately counted."""
+        names = set()
+        if self.entry:
+            names.add(self.entry)
+        frontier = [self.entry] if self.entry else []
+        while frontier:
+            cur = frontier.pop()
+            for line in self.comps.get(cur, []):
+                m = _WHILE.search(line)
+                targets = []
+                if m:
+                    targets += [m.group(1), m.group(2)]
+                for b in _BRANCHES.finditer(line):
+                    for g in b.groups():
+                        if g:
+                            targets += [t.strip().lstrip("%")
+                                        for t in g.split(",") if t.strip()]
+                for t in targets:
+                    if t in self.comps and t not in names:
+                        names.add(t)
+                        frontier.append(t)
+        return names
+
+    def _analyze(self) -> None:
+        self.dot_flops = 0
+        self.hbm_bytes = 0          # major-op traffic (TPU-fusion model)
+        self.hbm_bytes_upper = 0    # every instruction (CPU-HLO upper bound)
+        self.score_bytes = 0        # (…, S, S) score-shaped traffic
+        self.transcendentals = 0
+        self.collectives = {c: {"bytes": 0, "count": 0, "static_count": 0}
+                            for c in COLLECTIVES}
+        countable = self._countable()
+        for name, lines in self.comps.items():
+            if name not in countable:
+                continue
+            k = self.mult.get(name, 1)
+            sym: Dict[str, int] = {}          # result bytes per name
+            sym_shapes: Dict[str, List[List[int]]] = {}
+            for line in lines:
+                m = _INSTR.match(line)
+                if not m:
+                    continue
+                iname, shape_txt, opcode = m.groups()
+                res_bytes, res_shapes = _shape_list_bytes(shape_txt)
+                sym[iname] = res_bytes
+                sym_shapes[iname] = [d for _, d in res_shapes]
+                if opcode in _BOOKKEEPING:
+                    continue
+                # operand names: inside the first (...) group
+                paren = line[m.end():]
+                close = paren.find(")")
+                operands = _OPERAND.findall(paren[:close])
+                op_bytes = sum(sym.get(o, 0) for o in operands)
+                base = opcode.replace("-start", "")
+                self.hbm_bytes_upper += (res_bytes + op_bytes) * k
+                # materialize-once model (see module docstring)
+                if res_bytes > VMEM_RESIDENT_BYTES or \
+                        base in self.collectives:
+                    self.hbm_bytes += res_bytes * k
+                    if self.seq_len and any(
+                            len(d) >= 2 and d[-1] == self.seq_len
+                            and d[-2] == self.seq_len
+                            for _, d in res_shapes):
+                        self.score_bytes += res_bytes * k
+                if opcode in ("dot", "convolution"):
+                    self.hbm_bytes += sum(
+                        b for b in (sym.get(o, 0) for o in operands)
+                        if b > VMEM_RESIDENT_BYTES) * k
+                if base in self.collectives:
+                    p = 1
+                    g = _GROUPS_IOTA.search(line)
+                    if g:
+                        p = int(g.group(2))
+                    else:
+                        g2 = _GROUPS_LIST.search(line)
+                        if g2:
+                            p = len([x for x in g2.group(1).split(",")
+                                     if x.strip()])
+                    if base == "all-gather":
+                        operand_b = res_bytes // max(p, 1)
+                    elif base == "reduce-scatter":
+                        operand_b = res_bytes * p
+                    else:
+                        operand_b = res_bytes
+                    c = self.collectives[base]
+                    c["bytes"] += operand_b * k
+                    c["count"] += k
+                    c["static_count"] += 1
+                if opcode == "dot":
+                    flops = self._dot_flops(line, res_shapes, operands,
+                                            sym_shapes)
+                    self.dot_flops += flops * k
+                elif opcode in ("exponential", "tanh", "logistic", "rsqrt",
+                                "log", "power"):
+                    n = 1
+                    for _, d in res_shapes:
+                        for x in d:
+                            n *= x
+                    self.transcendentals += n * k
+
+    @staticmethod
+    def _dot_flops(line, res_shapes, operands, sym_shapes) -> int:
+        if not res_shapes:
+            return 0
+        res_elems = 1
+        for x in res_shapes[0][1]:
+            res_elems *= x
+        contract = 1
+        m = _CONTRACT.search(line)
+        if m and operands:
+            lhs_shape = sym_shapes.get(operands[0])
+            if lhs_shape and lhs_shape[0] is not None and len(lhs_shape) > 0:
+                dims = [int(x) for x in m.group(1).split(",") if x]
+                shape0 = lhs_shape[0]
+                for dd in dims:
+                    if dd < len(shape0):
+                        contract *= shape0[dd]
+        return 2 * res_elems * contract
+
+    def summary(self) -> dict:
+        total = sum(v["bytes"] for v in self.collectives.values())
+        return {
+            "dot_flops": int(self.dot_flops),
+            "hbm_bytes": int(self.hbm_bytes),
+            "hbm_bytes_upper": int(self.hbm_bytes_upper),
+            "hbm_bytes_flashproj": int(self.hbm_bytes - self.score_bytes),
+            "score_bytes": int(self.score_bytes),
+            "transcendentals": int(self.transcendentals),
+            "collectives": dict(self.collectives,
+                                total_bytes=int(total)),
+            "while_trips": {k: v for k, v in self.mult.items() if v > 1},
+        }

@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+Train batches arrive *pre-microbatched*: ``(mb, B/mb, S)`` with the device
+batch dim (axis 1) sharded over (pod, data) — the loader emits this layout
+directly so grad accumulation needs no resharding reshape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ModelConfig, ShapeConfig
+from .sharding import ParallelPlan
+
+
+def effective_microbatches(pp: ParallelPlan, shape: ShapeConfig,
+                           dp: int) -> int:
+    """Largest mb ≤ plan's that keeps B/mb divisible by dp."""
+    mb = pp.microbatches
+    while mb > 1 and (shape.global_batch % mb != 0
+                      or (shape.global_batch // mb) % dp != 0):
+        mb //= 2
+    return max(mb, 1)
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig, mb: int
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    b = shape.global_batch // mb
+    s = shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((mb, b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((mb, b, s), jnp.int32),
+    }
+    if cfg.frontend != "none":
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (mb, b, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend != "none":
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """decode: one new token against a seq_len-deep cache."""
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "caches": M.abstract_caches(cfg, b, s, jnp.dtype(cfg.dtype)),
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mb: int = 1
+                ) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_specs(cfg, shape, mb)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)

@@ -1,0 +1,90 @@
+"""Mesh construction for the production pods.
+
+``make_production_mesh`` is the prescribed entry point: a 16×16 = 256-chip
+pod (axes ``data × model``), or 2×16×16 = 512 chips with a leading ``pod``
+axis (DCN-connected data parallelism across pods).
+
+Per-arch *logical factoring*: attention sharding needs the ``model`` axis
+split into (kv, group, replica) sub-axes so GQA head counts that don't
+divide 16 still shard cleanly (DESIGN.md §4). ``arch_mesh`` reshapes the
+same device array into ``(pod?, data, tp_kv, tp_g, tp_r)`` — identical
+devices, identical ICI neighborhoods (the split nests inside the original
+``model`` axis), just finer axis names.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from ..models.config import ModelConfig
+
+MODEL_AXIS = 16  # model-parallel width of one pod row
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Per-arch factoring of the model axis (tp_kv * tp_g * tp_r = 16)."""
+
+    tp_kv: int      # shards kv_heads (GQA) / q-head block (MLA)
+    tp_g: int       # shards the q-head group dim (heads // kv_heads)
+    tp_r: int       # attention-replicated remainder (still used by FFN/EP)
+    multi_pod: bool
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+    @property
+    def tp_axes(self) -> Tuple[str, ...]:
+        return ("tp_kv", "tp_g", "tp_r")
+
+    @property
+    def heads_axes(self) -> Tuple[str, ...]:
+        return ("tp_kv", "tp_g")
+
+    @property
+    def attn_tp(self) -> int:
+        return self.tp_kv * self.tp_g
+
+
+def plan_for(cfg: ModelConfig, *, multi_pod: bool = False,
+             model_axis: int = MODEL_AXIS) -> MeshPlan:
+    m = model_axis
+    if cfg.layer_pattern == ("ssm",) * len(cfg.layer_pattern):
+        return MeshPlan(1, 1, m, multi_pod)          # attention-free
+    if cfg.attn_type == "mla":
+        # latent is head-shared; factor q heads directly
+        mh = math.gcd(cfg.num_heads, m)
+        return MeshPlan(mh, 1, m // mh, multi_pod)
+    kv = math.gcd(cfg.num_kv_heads, m)
+    g = cfg.num_heads // cfg.num_kv_heads
+    mg = math.gcd(g, m // kv)
+    return MeshPlan(kv, mg, m // (kv * mg), multi_pod)
+
+
+def arch_mesh(base_mesh: Mesh, plan: MeshPlan) -> Mesh:
+    """Reshape the production mesh's device array to the arch's factoring.
+
+    The model axis is split in nested order (kv outermost), preserving ICI
+    adjacency within each sub-axis.
+    """
+    devices = base_mesh.devices
+    lead = devices.shape[:-1]
+    new_shape = lead + (plan.tp_kv, plan.tp_g, plan.tp_r)
+    names = (("pod",) if plan.multi_pod else ()) + ("data",) + plan.tp_axes
+    return Mesh(devices.reshape(new_shape), names)
+
+
+def small_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Test helper: build a mesh from however many devices exist."""
+    return jax.make_mesh(shape, axes)

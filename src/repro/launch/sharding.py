@@ -1,0 +1,151 @@
+"""Sharding-rules engine: logical param/activation axes → PartitionSpecs.
+
+Every model module declares logical axis names per param dim
+(``models.model.param_axes``); this module maps them onto the arch mesh
+(mesh.py) given a :class:`ParallelPlan`:
+
+* TP  — ``vocab``/``ffn``/``experts``/``inner``/``conv_chan`` shard over the
+  full model factoring (tp_kv·tp_g·tp_r = 16); ``heads`` over (tp_kv, tp_g);
+  ``kv_heads`` over tp_kv.
+* FSDP — the ``embed`` dim of every matrix (and the first-moment/second-
+  moment states, which inherit param specs) shards over ``data`` (+``pod``)
+  for the XL archs.
+* DP  — ``batch`` over (``pod``,) ``data``; ``seq`` (long-context KV) over
+  ``data``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeConfig
+from ..models import model as M
+from .mesh import MeshPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """Arch × shape parallelism settings."""
+
+    fsdp: bool = False               # shard params over data axis
+    fsdp_pod: bool = False           # ... and over the pod axis too
+    microbatches: int = 1            # grad-accumulation steps per train step
+    seq_shard_decode: bool = True    # shard KV cache seq dim when batch < DP
+
+
+def _fsdp_axes(plan: MeshPlan, pp: ParallelPlan) -> Tuple[str, ...]:
+    if not pp.fsdp:
+        return ()
+    return ("pod", "data") if (pp.fsdp_pod and plan.multi_pod) else ("data",)
+
+
+def logical_rules(plan: MeshPlan, pp: ParallelPlan) -> Dict[str, Any]:
+    fsdp = _fsdp_axes(plan, pp)
+    return {
+        "vocab": plan.tp_axes,
+        "ffn": plan.tp_axes,
+        "experts": plan.tp_axes,
+        "inner": plan.tp_axes,
+        "conv_chan": plan.tp_axes,
+        "heads": plan.heads_axes,
+        "kv_heads": ("tp_kv",),
+        "ssm_heads": plan.tp_axes,
+        "embed": fsdp if fsdp else None,
+        "q_lora": None,
+        "kv_lora": None,
+        "kv_lora_rope": None,
+        "head_dim": None,
+        "layers": None,
+        "batch": plan.batch_axes,
+        "seq": None,   # overridden for long-context decode
+    }
+
+
+def tp_only_rules(plan: MeshPlan) -> Dict[str, Any]:
+    """Param rules with FSDP removed — used as ``param_rules`` inside the
+    scanned layer body to force per-layer weight all-gather."""
+    return logical_rules(plan, ParallelPlan(fsdp=False))
+
+
+def spec_from_axes(axes: Tuple, rules: Dict[str, Any]) -> P:
+    """Map one param's logical dims to a PartitionSpec. A mesh axis may
+    appear once per spec; earlier dims win (e.g. MoE ``(experts, embed,
+    ffn)``: EP takes the model axes, the per-expert ffn dim stays local)."""
+    parts = []
+    used = set()
+    for ax in axes:
+        r = rules.get(ax, None) if ax is not None else None
+        if r is None:
+            parts.append(None)
+            continue
+        r = r if isinstance(r, tuple) else (r,)
+        r = tuple(a for a in r if a not in used)
+        used.update(r)
+        if not r:
+            parts.append(None)
+        elif len(r) == 1:
+            parts.append(r[0])
+        else:
+            parts.append(r)
+    return P(*parts)
+
+
+def tree_specs(axes_tree, rules) -> Any:
+    return jax.tree.map(
+        lambda a: spec_from_axes(a, rules), axes_tree,
+        is_leaf=M.is_axes_leaf)
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, plan: MeshPlan,
+                    pp: ParallelPlan):
+    rules = logical_rules(plan, pp)
+    specs = tree_specs(M.param_axes(cfg), rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, plan: MeshPlan,
+                    pp: ParallelPlan, shape: ShapeConfig):
+    rules = dict(logical_rules(plan, pp))
+    rules["embed"] = None  # caches never FSDP-shard
+    # batch=1 long-context decode: shard the KV-cache sequence dim instead
+    # of the (unshardable) batch dim — sequence parallelism for decode.
+    dp = (2 if plan.multi_pod else 1) * 16
+    if shape.kind == "decode" and shape.global_batch < dp:
+        rules["batch"] = None
+        if pp.seq_shard_decode:
+            rules["seq"] = ("data",)
+    specs = tree_specs(M.cache_axes(cfg), rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, plan: MeshPlan,
+                    shape: ShapeConfig):
+    """Input-batch shardings.
+
+    train: leaves are (mb, B/mb, seq[, ...]) — device batch is axis 1;
+    prefill/decode: (B, seq[, ...]) — device batch is axis 0 (replicated
+    when B < dp, e.g. long_500k's batch of 1).
+    """
+    dp = (2 if plan.multi_pod else 1) * 16
+    b_ax = plan.batch_axes if shape.global_batch >= dp else None
+    if shape.kind == "train":
+        tok = P(None, b_ax, None)
+        fe = P(None, b_ax, None, None)
+    else:
+        tok = P(b_ax, None)
+        fe = P(b_ax, None, None)
+    out = {"tokens": NamedSharding(mesh, tok)}
+    if shape.kind == "train":
+        out["labels"] = NamedSharding(mesh, tok)
+    if cfg.frontend != "none":
+        out["frontend_embeds"] = NamedSharding(mesh, fe)
+    return out
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

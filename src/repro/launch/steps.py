@@ -1,0 +1,114 @@
+"""jit-able train / prefill / decode steps + per-arch parallel plans.
+
+``train_step`` consumes a *pre-microbatched* batch — tokens shaped
+``(microbatches, global_batch/microbatches, seq)`` with the device batch
+dim sharded over (pod, data). Grad accumulation is a ``lax.scan`` over the
+leading dim (fp32 accumulators, single bucketed all-reduce at the end —
+XLA overlaps the per-microbatch reduce-scatters with the next microbatch's
+compute under the latency-hiding scheduler). The optimizer update runs on
+the param sharding (FSDP keeps moments sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ModelConfig, ShapeConfig
+from ..optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .sharding import ParallelPlan
+
+# ---------------------------------------------------------------------------
+# per-arch parallel plans (microbatch counts sized for ≤ ~1GB fp32 scores
+# per device at train_4k; FSDP for the ≥40B archs)
+# ---------------------------------------------------------------------------
+PLANS: Dict[str, ParallelPlan] = {
+    "granite_moe_1b": ParallelPlan(microbatches=1),
+    "phi35_moe_42b": ParallelPlan(fsdp=True, microbatches=4),
+    "minicpm3_4b": ParallelPlan(microbatches=8),
+    "starcoder2_7b": ParallelPlan(microbatches=8),
+    "llama32_3b": ParallelPlan(microbatches=4),
+    "nemotron4_340b": ParallelPlan(fsdp=True, fsdp_pod=True, microbatches=8),
+    "llava_next_mistral_7b": ParallelPlan(microbatches=4),
+    "mamba2_2p7b": ParallelPlan(microbatches=1),
+    "musicgen_large": ParallelPlan(microbatches=2),
+    "jamba15_large_398b": ParallelPlan(fsdp=True, fsdp_pod=True,
+                                       microbatches=8),
+}
+
+
+def plan_of(arch: str) -> ParallelPlan:
+    return PLANS.get(arch, ParallelPlan())
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    hyper: TrainHyper = TrainHyper()) -> Callable:
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    batch leaves are (microbatches, B_mb, ...) — scan accumulates grads.
+    """
+
+    def train_step(params, opt_state, batch):
+        def mb_grads(p, mbb):
+            (loss, metrics), grads = jax.value_and_grad(
+                M.loss_fn, has_aux=True)(p, cfg, mbb)
+            return loss, metrics, grads
+
+        def body(carry, mbb):
+            gsum, loss_sum = carry
+            loss, metrics, grads = mb_grads(params, mbb)
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return (gsum, loss_sum + loss), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        n_mb = jax.tree.leaves(batch)[0].shape[0]
+        (gsum, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)),
+                                           batch)
+        grads = jax.tree.map(lambda g: g / n_mb, gsum)
+        lr = cosine_schedule(opt_state.count, peak_lr=hyper.peak_lr,
+                             warmup_steps=hyper.warmup_steps,
+                             total_steps=hyper.total_steps)
+        params, opt_state, gnorm = adamw_update(opt_cfg, grads, opt_state,
+                                                params, lr)
+        metrics = {"loss": loss_sum / n_mb, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches = M.prefill(params, cfg, batch)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, caches, tokens, index):
+        logits, new_caches = M.decode_step(params, cfg, tokens, caches,
+                                           index)
+        # greedy next token (sampling lives in the serving loop)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return logits, new_caches, next_tok
+    return decode_step
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    params = M.abstract_params(cfg)
+    return jax.eval_shape(functools.partial(adamw_init, opt_cfg), params)

@@ -1,0 +1,108 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--tiny]``.
+
+Wires every substrate together: config registry → deterministic loader
+(with optional flash-hash TF-IDF document filtering) → sharded train step
+(on whatever mesh the process has; 1 CPU device here, a pod slice in
+production) → AdamW → resilient runtime (watchdog, NaN rollback,
+checkpoint/restart) → flash-hash corpus/expert statistics.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager, latest_step, restore_checkpoint
+from ..configs import get_config
+from ..data import CorpusStats, LoaderConfig, SyntheticCorpus, make_batch
+from ..models import model as M
+from ..optim import AdamWConfig, adamw_init
+from ..runtime import NaNGuard, ResilientTrainer, StepWatchdog
+from . import steps as steps_mod
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama32_3b")
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--peak-lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--tfidf-filter", action="store_true",
+                    help="filter documents by flash-hash TF-IDF score")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, tiny=args.tiny)
+    corpus = SyntheticCorpus(num_docs=512, mean_doc_len=args.seq_len,
+                             vocab_size=cfg.vocab_size, seed=args.seed)
+
+    doc_filter = None
+    stats = None
+    if args.tfidf_filter:
+        stats = CorpusStats.create(q_log2=16, r_log2=9)
+        for d in corpus:
+            stats.ingest(d)
+        stats.flush()
+        doc_filter = stats.doc_filter(threshold=0.0)
+        print(f"[stats] corpus: {stats.tokens_seen} tokens, "
+              f"{stats.docs_seen} docs via flash-hash table")
+
+    lcfg = LoaderConfig(
+        corpus=corpus, seq_len=args.seq_len, global_batch=args.global_batch,
+        microbatches=args.microbatches, vocab_size=cfg.vocab_size,
+        num_patches=cfg.num_patches if cfg.frontend != "none" else 0,
+        d_model=cfg.d_model, doc_filter=doc_filter)
+
+    opt_cfg = AdamWConfig()
+    hyper = steps_mod.TrainHyper(peak_lr=args.peak_lr, warmup_steps=20,
+                                 total_steps=args.steps)
+    train_step = jax.jit(steps_mod.make_train_step(cfg, opt_cfg, hyper))
+
+    params = M.init_params(jax.random.key(args.seed), cfg)
+    opt = adamw_init(opt_cfg, params)
+    state = {"params": params, "opt": opt}
+
+    ckpt = CheckpointManager(args.ckpt_dir, every_steps=args.ckpt_every)
+    start = 0
+    if latest_step(args.ckpt_dir) is not None:
+        state, meta = restore_checkpoint(args.ckpt_dir, state)
+        start = int(meta["step"]) + 1
+        print(f"[resume] from step {start}")
+
+    expert_stats = CorpusStats.create(q_log2=12, r_log2=8) \
+        if cfg.num_experts else None
+
+    def step_fn(state, step):
+        batch = jax.tree.map(jnp.asarray, make_batch(lcfg, step))
+        if cfg.frontend != "none":
+            batch["frontend_embeds"] = batch["frontend_embeds"].astype(
+                jnp.dtype(cfg.dtype))
+        params, opt, metrics = train_step(state["params"], state["opt"],
+                                          batch)
+        return {"params": params, "opt": opt}, metrics
+
+    trainer = ResilientTrainer(step_fn, ckpt, NaNGuard(), StepWatchdog(
+        on_straggler=lambda s, t, m: print(
+            f"[watchdog] step {s} straggled: {t:.2f}s vs median {m:.2f}s")))
+
+    t0 = time.time()
+    state, report = trainer.run(state, num_steps=args.steps,
+                                start_step=start)
+    dt = time.time() - t0
+    print(f"[done] steps={report.steps_done} loss={report.final_loss:.4f} "
+          f"restarts={report.restarts} rollbacks={report.rollbacks} "
+          f"wall={dt:.1f}s "
+          f"tok/s={report.steps_done * args.global_batch * args.seq_len / max(dt, 1e-9):.0f}")
+
+
+if __name__ == "__main__":
+    main()

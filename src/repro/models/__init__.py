@@ -1,0 +1,2 @@
+from .config import ModelConfig, ShapeConfig, SHAPES, shapes_for  # noqa: F401
+from . import model  # noqa: F401

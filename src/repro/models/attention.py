@@ -1,0 +1,304 @@
+"""Attention token mixers: GQA (+RoPE, optional sliding window) and MLA
+(MiniCPM3/DeepSeek latent attention, with absorbed-projection decode).
+
+Modes:
+* ``full``   — training / prefill over the whole sequence (causal).
+* ``decode`` — one new token against a KV cache; GQA caches (k, v); MLA
+  caches the compressed latent + shared rope-key (that's its point — the
+  cache line is ``kv_lora + rope_dim`` per token, not ``2*H*hd``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (_dense_init, apply_rope, axes_rmsnorm, bf16_grad_boundary, init_rmsnorm, rmsnorm)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def init_gqa(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d, h, hd), dtype),
+        "wk": _dense_init(ks[1], (d, kv, hd), dtype),
+        "wv": _dense_init(ks[2], (d, kv, hd), dtype),
+        "wo": _dense_init(ks[3], (h, hd, d), dtype),
+    }
+
+
+def axes_gqa():
+    return {"wq": ("embed", "heads", "head_dim"),
+            "wk": ("embed", "kv_heads", "head_dim"),
+            "wv": ("embed", "kv_heads", "head_dim"),
+            "wo": ("heads", "head_dim", "embed")}
+
+
+def _causal_mask(q_len, kv_len, q_offset, window: int = 0):
+    """(q_len, kv_len) additive mask; window>0 = sliding-window attention."""
+    qpos = jnp.arange(q_len)[:, None] + q_offset
+    kpos = jnp.arange(kv_len)[None, :]
+    ok = kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, mask):
+    """q: (b,s,h,dq) k: (b,t,kv,dq) v: (b,t,kv,dv); GQA via reshape.
+    fp32 softmax; dq may differ from dv (MLA)."""
+    b, s, h, dq = q.shape
+    kvh = k.shape[2]
+    dv = v.shape[3]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, dq)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / jnp.sqrt(dq).astype(jnp.float32))
+    scores = scores + mask  # (s,t) broadcast over (b,k,g)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, dv).astype(v.dtype)
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig):
+    """Online-softmax (flash-style) causal attention: scan over KV chunks
+    inside a scan over Q chunks; only (qc × kc) score tiles materialize —
+    sized to stay VMEM-resident on TPU (beyond-paper §Perf lever: kills the
+    O(S²) fp32 score traffic of the dense path; same FLOPs)."""
+    b, s, h, dq = q.shape
+    kvh = k.shape[2]
+    dv = v.shape[3]
+    g = h // kvh
+    qc = min(cfg.attn_q_chunk, s)
+    kc = min(cfg.attn_kv_chunk, s)
+    assert s % qc == 0 and s % kc == 0
+    nq, nk = s // qc, s // kc
+    scale = 1.0 / jnp.sqrt(dq).astype(jnp.float32)
+    qr = q.reshape(b, nq, qc, kvh, g, dq)
+    kr = k.reshape(b, nk, kc, kvh, dq)
+    vr = v.reshape(b, nk, kc, kvh, dv)
+
+    def one_q_chunk(_, qi):
+        q_tile = qr[:, qi]                        # (b, qc, kvh, g, dq)
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def inner(carry, ki):
+            m, l, acc = carry
+            k_tile = kr[:, ki]                    # (b, kc, kvh, dq)
+            v_tile = vr[:, ki]
+            scores = jnp.einsum("bqkgd,btkd->bkgqt", q_tile, k_tile,
+                                preferred_element_type=jnp.float32) * scale
+            k_pos = ki * kc + jnp.arange(kc)
+            ok = k_pos[None, :] <= q_pos[:, None]
+            if cfg.sliding_window:
+                ok &= k_pos[None, :] > q_pos[:, None] - cfg.sliding_window
+            scores = jnp.where(ok[None, None, None], scores, -1e30)
+            m_new = jnp.maximum(m, scores.max(-1))
+            p = jnp.exp(scores - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(v_tile.dtype), v_tile,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kvh, g, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (b, kvh, g, qc, dv) → (b, qc, h, dv)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, dv)
+        return None, out.astype(v.dtype)
+
+    _, chunks = jax.lax.scan(one_q_chunk, None, jnp.arange(nq))
+    return chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+
+
+def gqa_full(params, cfg: ModelConfig, x, positions):
+    """x: (b, s, d) → (b, s, d); causal full-sequence attention."""
+    if cfg.opt_bf16_grads:
+        x = bf16_grad_boundary(x)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_impl == "chunked":
+        o = _sdpa_chunked(q, k, v, cfg)
+    else:
+        mask = _causal_mask(x.shape[1], x.shape[1], 0, cfg.sliding_window)
+        o = _sdpa(q, k, v, mask)
+    pet = None if cfg.opt_bf16_grads else jnp.float32
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"],
+                      preferred_element_type=pet).astype(x.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (b, s_max, kv, hd)
+    v: jax.Array  # (b, s_max, kv, hd)
+
+
+def init_kv_cache(cfg: ModelConfig, batch, s_max, dtype) -> KVCache:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return KVCache(k=jnp.zeros((batch, s_max, kv, hd), dtype),
+                   v=jnp.zeros((batch, s_max, kv, hd), dtype))
+
+
+def kv_cache_axes() -> KVCache:
+    return KVCache(k=("batch", "seq", "kv_heads", "head_dim"),
+                   v=("batch", "seq", "kv_heads", "head_dim"))
+
+
+def gqa_decode(params, cfg: ModelConfig, x, cache: KVCache, index
+               ) -> Tuple[jax.Array, KVCache]:
+    """x: (b, 1, d); index: () int32 — position being written."""
+    b = x.shape[0]
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, index, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, index, 0, 0))
+    s_max = ck.shape[1]
+    kpos = jnp.arange(s_max)[None, :]
+    mask = jnp.where(kpos <= index, 0.0, -1e30).astype(jnp.float32)
+    o = _sdpa(q, ck, cv, mask)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, KVCache(ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_down": _dense_init(ks[0], (d, qr), dtype),
+        "q_norm": init_rmsnorm(ks[1], qr, dtype),
+        "wq_up": _dense_init(ks[2], (qr, h, nope + rope), dtype, in_axis=0),
+        "wkv_down": _dense_init(ks[3], (d, kr + rope), dtype),
+        "kv_norm": init_rmsnorm(ks[4], kr, dtype),
+        "wk_up": _dense_init(ks[5], (kr, h, nope), dtype, in_axis=0),
+        "wv_up": _dense_init(ks[6], (kr, h, vd), dtype, in_axis=0),
+        "wo": _dense_init(ks[7], (h, vd, d), dtype),
+    }
+
+
+def axes_mla():
+    return {"wq_down": ("embed", "q_lora"),
+            "q_norm": {"scale": ("q_lora",)},
+            "wq_up": ("q_lora", "heads", "head_dim"),
+            "wkv_down": ("embed", "kv_lora_rope"),
+            "kv_norm": {"scale": ("kv_lora",)},
+            "wk_up": ("kv_lora", "heads", "head_dim"),
+            "wv_up": ("kv_lora", "heads", "head_dim"),
+            "wo": ("heads", "head_dim", "embed")}
+
+
+def _mla_qkv_full(params, cfg: ModelConfig, x, positions):
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    kr = cfg.kv_lora_rank
+    dt = x.dtype
+    ql = jnp.einsum("bsd,dr->bsr", x, params["wq_down"],
+                    preferred_element_type=jnp.float32).astype(dt)
+    ql = rmsnorm(params["q_norm"], ql, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", ql, params["wq_up"],
+                   preferred_element_type=jnp.float32).astype(dt)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kvl = jnp.einsum("bsd,dr->bsr", x, params["wkv_down"],
+                     preferred_element_type=jnp.float32).astype(dt)
+    latent, k_rope = kvl[..., :kr], kvl[..., kr:]
+    latent = rmsnorm(params["kv_norm"], latent, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, latent, k_rope
+
+
+def mla_full(params, cfg: ModelConfig, x, positions):
+    """Training/prefill MLA: expand latent to per-head K/V (standard path)."""
+    b, s, _ = x.shape
+    h, nope, vd = cfg.num_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope, latent, k_rope = _mla_qkv_full(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", latent, params["wk_up"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsr,rhk->bshk", latent, params["wv_up"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (b, s, h, cfg.qk_rope_dim))],
+                        -1)
+    if cfg.attn_impl == "chunked":
+        o = _sdpa_chunked(q, k, v, cfg)
+    else:
+        mask = _causal_mask(s, s, 0)
+        o = _sdpa(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+class MLACache(NamedTuple):
+    latent: jax.Array  # (b, s_max, kv_lora)
+    k_rope: jax.Array  # (b, s_max, rope_dim)
+
+
+def init_mla_cache(cfg: ModelConfig, batch, s_max, dtype) -> MLACache:
+    return MLACache(
+        latent=jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, s_max, cfg.qk_rope_dim), dtype))
+
+
+def mla_cache_axes() -> MLACache:
+    return MLACache(latent=("batch", "seq", "kv_lora"),
+                    k_rope=("batch", "seq", None))
+
+
+def mla_decode(params, cfg: ModelConfig, x, cache: MLACache, index
+               ) -> Tuple[jax.Array, MLACache]:
+    """Absorbed-projection decode: score/value computed in latent space, so
+    per-step FLOPs and cache bytes scale with kv_lora, not H*hd."""
+    b = x.shape[0]
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q_nope, q_rope, latent, k_rope = _mla_qkv_full(params, cfg, x, pos)
+    cl = jax.lax.dynamic_update_slice(cache.latent, latent, (0, index, 0))
+    cr = jax.lax.dynamic_update_slice(cache.k_rope, k_rope[:, :, 0, :],
+                                      (0, index, 0))
+    # absorb wk_up into q: q_lat (b,1,h,kv_lora)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_up"],
+                       preferred_element_type=jnp.float32)
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat.astype(x.dtype), cl,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, cr,
+                           preferred_element_type=jnp.float32))
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim).astype(
+        jnp.float32)
+    kpos = jnp.arange(cl.shape[1])[None, :]
+    mask = jnp.where(kpos <= index, 0.0, -1e30).astype(jnp.float32)
+    probs = jax.nn.softmax(scores * scale + mask, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs, cl,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    o = jnp.einsum("bshr,rhk->bshk", ctx_lat, params["wv_up"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, MLACache(cl, cr)

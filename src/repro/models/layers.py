@@ -1,0 +1,168 @@
+"""Shared layer primitives: norms, RoPE, embeddings, dense FFN variants.
+
+Params are plain dict pytrees. Every ``init_*`` has a sibling ``axes_*``
+returning an identically-structured pytree of *logical axis name* tuples
+consumed by the sharding rules engine (launch/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+@jax.custom_vjp
+def bf16_grad_boundary(x):
+    """Identity fwd; bf16 cotangent (halves backward TP all-reduce bytes —
+    §Perf). Placed where residual-stream grads cross reduction points."""
+    return x
+
+
+def _bgb_fwd(x):
+    return x, None
+
+
+def _bgb_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+bf16_grad_boundary.defvjp(_bgb_fwd, _bgb_bwd)
+
+
+def _dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(key, d, dtype):
+    del key
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def axes_rmsnorm():
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def gated_rmsnorm(params, x, gate, eps: float):
+    """Mamba-2 output norm: RMSNorm(x * silu(gate))."""
+    return rmsnorm(params, x * jax.nn.silu(gate.astype(jnp.float32)
+                                           ).astype(x.dtype), eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_angles(positions, dim: int, theta: float):
+    """positions: (...,) int32 → (..., dim//2) angles."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    ang = rope_angles(positions, d, theta)          # (..., seq, d/2)
+    cos = jnp.cos(ang)[..., None, :]                # (..., seq, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    v = cfg.padded_vocab
+    p = {"tokens": (jax.random.normal(k1, (v, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = _dense_init(k2, (cfg.d_model, v), dtype)
+    return p
+
+
+def axes_embed(cfg: ModelConfig):
+    p = {"tokens": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["head"] = ("embed", "vocab")
+    return p
+
+
+def embed_tokens(params, tokens):
+    return params["tokens"][tokens]
+
+
+def lm_logits(params, cfg: ModelConfig, x):
+    """x: (..., d) → (..., padded_vocab) fp32 logits; padding lanes masked."""
+    if cfg.tie_embeddings:
+        w = params["tokens"].T
+    else:
+        w = params["head"]
+    logits = jnp.einsum("...d,dv->...v", x, w,
+                        preferred_element_type=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        lane = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(lane < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (swiglu / gelu / squared_relu)
+# ---------------------------------------------------------------------------
+def init_ffn(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_act == "swiglu":
+        return {"w_gate": _dense_init(ks[0], (d, f), dtype),
+                "w_up": _dense_init(ks[1], (d, f), dtype),
+                "w_down": _dense_init(ks[2], (f, d), dtype)}
+    return {"w_in": _dense_init(ks[0], (d, f), dtype),
+            "w_down": _dense_init(ks[1], (f, d), dtype)}
+
+
+def axes_ffn(cfg: ModelConfig):
+    if cfg.ffn_act == "swiglu":
+        return {"w_gate": ("embed", "ffn"), "w_up": ("embed", "ffn"),
+                "w_down": ("ffn", "embed")}
+    return {"w_in": ("embed", "ffn"), "w_down": ("ffn", "embed")}
+
+
+def ffn_apply(params, cfg: ModelConfig, x):
+    dt = x.dtype
+    if cfg.opt_bf16_grads:
+        x = bf16_grad_boundary(x)
+    if cfg.ffn_act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"],
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("...d,df->...f", x, params["w_up"],
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(dt)
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["w_in"],
+                       preferred_element_type=jnp.float32)
+        if cfg.ffn_act == "gelu":
+            h = jax.nn.gelu(h).astype(dt)
+        elif cfg.ffn_act == "squared_relu":   # Nemotron-4 (Primer)
+            h = jnp.square(jax.nn.relu(h)).astype(dt)
+        else:
+            raise ValueError(cfg.ffn_act)
+    pet = None if cfg.opt_bf16_grads else jnp.float32
+    return jnp.einsum("...f,fd->...d", h, params["w_down"],
+                      preferred_element_type=pet).astype(dt)

@@ -1,0 +1,370 @@
+"""Model assembly: pattern-driven decoder stacks with scan-over-groups.
+
+A model is ``embed → scan(groups) → final_norm → lm_head``. Each *group*
+is the unrolled ``layer_pattern`` (attn/mla/ssm mixer + dense/moe/none FFN
+per slot); group params are stacked on a leading ``layers`` axis and the
+stack is ``lax.scan``'d (rematerialized per group in training), so HLO size
+is independent of depth.
+
+Three execution modes share one layer definition:
+* ``forward_train``  — full-sequence causal, returns loss-ready logits;
+* ``prefill``        — full-sequence + returns per-layer caches;
+* ``decode_step``    — one token against stacked caches.
+
+Modality stubs (DESIGN.md §5): ``vlm`` replaces the first ``num_patches``
+positions with precomputed patch embeddings; ``audio`` consumes precomputed
+codec-frame embeddings the same way. Both keep the backbone shape-identical
+to a text LM, as the brief requires.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import (axes_embed, axes_ffn, axes_rmsnorm, embed_tokens,
+                     ffn_apply, init_embed, init_ffn, init_rmsnorm,
+                     lm_logits, rmsnorm)
+from .sharding_hints import param_hint_tree
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_slot(key, cfg: ModelConfig, kind: str, ffn_kind: str, dtype):
+    ks = jax.random.split(key, 4)
+    p: Params = {"mixer_ln": init_rmsnorm(ks[0], cfg.d_model, dtype)}
+    if kind == "attn":
+        if cfg.attn_type == "mla":
+            p["mixer"] = attn.init_mla(ks[1], cfg, dtype)
+        else:
+            p["mixer"] = attn.init_gqa(ks[1], cfg, dtype)
+    elif kind == "ssm":
+        p["mixer"] = ssm_mod.init_ssm(ks[1], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if ffn_kind != "none":
+        p["ffn_ln"] = init_rmsnorm(ks[2], cfg.d_model, dtype)
+        p["ffn"] = (init_ffn(ks[3], cfg, dtype) if ffn_kind == "dense"
+                    else moe_mod.init_moe(ks[3], cfg, dtype))
+    return p
+
+
+def _axes_slot(cfg: ModelConfig, kind: str, ffn_kind: str):
+    p: Params = {"mixer_ln": axes_rmsnorm()}
+    if kind == "attn":
+        p["mixer"] = (attn.axes_mla() if cfg.attn_type == "mla"
+                      else attn.axes_gqa())
+    else:
+        p["mixer"] = ssm_mod.axes_ssm()
+    if ffn_kind != "none":
+        p["ffn_ln"] = axes_rmsnorm()
+        p["ffn"] = (axes_ffn(cfg) if ffn_kind == "dense"
+                    else moe_mod.axes_moe(cfg))
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    """Concrete init. For the dry-run use ``abstract_params`` (no alloc)."""
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_final, *k_slots = jax.random.split(key, 2 + cfg.group_size)
+
+    groups = []
+    for slot, (kind, ffn_kind) in enumerate(zip(cfg.layer_pattern,
+                                                cfg.ffn_pattern)):
+        slot_keys = jax.random.split(k_slots[slot], cfg.num_groups)
+        groups.append(jax.vmap(
+            lambda k: _init_slot(k, cfg, kind, ffn_kind, dtype))(slot_keys))
+    return {
+        "embed": init_embed(k_embed, cfg, dtype),
+        "groups": groups,
+        "final_norm": init_rmsnorm(k_final, cfg.d_model, dtype),
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree (AOT lowering input; zero allocation)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg),
+        jax.random.key(0))
+
+
+def is_axes_leaf(t) -> bool:
+    """Leaf = plain tuple of logical axis names (str | None)."""
+    return (isinstance(t, tuple) and type(t) is tuple
+            and all(isinstance(x, (str, type(None))) for x in t))
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    """Logical-axis pytree matching ``init_params`` structure; scanned
+    leaves get a leading ``layers`` axis."""
+    groups = []
+    for kind, ffn_kind in zip(cfg.layer_pattern, cfg.ffn_pattern):
+        slot = _axes_slot(cfg, kind, ffn_kind)
+        slot = jax.tree.map(lambda t: ("layers",) + tuple(t), slot,
+                            is_leaf=is_axes_leaf)
+        groups.append(slot)
+    return {
+        "embed": axes_embed(cfg),
+        "groups": groups,
+        "final_norm": axes_rmsnorm(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+class SlotCacheSpec(NamedTuple):
+    kind: str
+
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int, dtype):
+    """Stacked (num_groups, ...) caches per slot."""
+    caches = []
+    for kind in cfg.layer_pattern:
+        if kind == "attn":
+            if cfg.attn_type == "mla":
+                c = attn.init_mla_cache(cfg, batch, s_max, dtype)
+            else:
+                c = attn.init_kv_cache(cfg, batch, s_max, dtype)
+        else:
+            c = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None],
+                                       (cfg.num_groups,) + x.shape), c))
+    return caches
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, s_max: int, dtype):
+    return jax.eval_shape(
+        lambda: init_caches(cfg, batch, s_max, dtype))
+
+
+def pad_caches(cfg: ModelConfig, caches, new_len: int):
+    """Grow attention caches' sequence dim to ``new_len`` (prefill produces
+    exactly-seq_len caches; serving pads to prefill+max_new_tokens)."""
+    out = []
+    for kind, c in zip(cfg.layer_pattern, caches):
+        if kind == "attn":
+            def grow(x):
+                pad = new_len - x.shape[2]
+                if pad <= 0:
+                    return x
+                widths = [(0, 0)] * x.ndim
+                widths[2] = (0, pad)
+                return jnp.pad(x, widths)
+            c = jax.tree.map(grow, c)
+        out.append(c)
+    return out
+
+
+def cache_axes(cfg: ModelConfig):
+    caches = []
+    for kind in cfg.layer_pattern:
+        if kind == "attn":
+            c = (attn.mla_cache_axes() if cfg.attn_type == "mla"
+                 else attn.kv_cache_axes())
+        else:
+            c = ssm_mod.ssm_cache_axes()
+        caches.append(jax.tree.map(lambda t: ("layers",) + tuple(t), c,
+                                   is_leaf=is_axes_leaf))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# group body
+# ---------------------------------------------------------------------------
+def _apply_ffn(p, cfg: ModelConfig, ffn_kind: str, x):
+    if ffn_kind == "none":
+        return x, 0.0, None
+    h = rmsnorm(p["ffn_ln"], x, cfg.norm_eps)
+    if ffn_kind == "dense":
+        return x + ffn_apply(p["ffn"], cfg, h), 0.0, None
+    y, aux, counts = moe_mod.moe_apply(p["ffn"], cfg, h)
+    return x + y, aux, counts
+
+
+def _reshard_group(cfg: ModelConfig, group_params):
+    """Per-layer param re-gather point (see sharding_hints.use_hints)."""
+    axes = [_axes_slot(cfg, k, f)
+            for k, f in zip(cfg.layer_pattern, cfg.ffn_pattern)]
+    return param_hint_tree(group_params, axes, is_leaf=is_axes_leaf)
+
+
+def _group_train(cfg: ModelConfig, x, positions, group_params):
+    from .sharding_hints import hint
+    group_params = _reshard_group(cfg, group_params)
+    x = hint(x, "batch", None, None)   # pin the residual stream layout
+    aux_total = jnp.float32(0.0)
+    counts_total = (jnp.zeros((cfg.num_experts,), jnp.int32)
+                    if cfg.num_experts else None)
+    for slot, (kind, ffn_kind) in enumerate(zip(cfg.layer_pattern,
+                                                cfg.ffn_pattern)):
+        p = group_params[slot]
+        h = rmsnorm(p["mixer_ln"], x, cfg.norm_eps)
+        if kind == "attn":
+            mix = (attn.mla_full if cfg.attn_type == "mla"
+                   else attn.gqa_full)(p["mixer"], cfg, h, positions)
+        else:
+            mix = ssm_mod.ssd_full(p["mixer"], cfg, h)
+        x = x + mix
+        x, aux, counts = _apply_ffn(p, cfg, ffn_kind, x)
+        aux_total = aux_total + aux
+        if counts is not None:
+            counts_total = counts_total + counts
+    return x, aux_total, counts_total
+
+
+def _group_decode(cfg: ModelConfig, x, index, group_params, group_caches):
+    new_caches = []
+    for slot, (kind, ffn_kind) in enumerate(zip(cfg.layer_pattern,
+                                                cfg.ffn_pattern)):
+        p = group_params[slot]
+        c = group_caches[slot]
+        h = rmsnorm(p["mixer_ln"], x, cfg.norm_eps)
+        if kind == "attn":
+            if cfg.attn_type == "mla":
+                mix, c = attn.mla_decode(p["mixer"], cfg, h, c, index)
+            else:
+                mix, c = attn.gqa_decode(p["mixer"], cfg, h, c, index)
+        else:
+            mix, c = ssm_mod.ssd_decode(p["mixer"], cfg, h, c)
+        x = x + mix
+        x, _, _ = _apply_ffn(p, cfg, ffn_kind, x)
+        new_caches.append(c)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    x = embed_tokens(params["embed"], batch["tokens"])
+    if cfg.frontend in ("vision_stub", "audio_stub"):
+        pe = batch["frontend_embeds"].astype(x.dtype)  # (b, P, d)
+        npatch = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, npatch:, :]], axis=1)
+    return x
+
+
+def forward_train(params: Params, cfg: ModelConfig, batch,
+                  remat: bool = True):
+    """batch: tokens (b,s) [+ frontend_embeds] → (logits fp32, aux, counts)."""
+    x = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+
+    def body(x, group_params):
+        y, aux, counts = _group_train(cfg, x, positions, group_params)
+        return y, (aux, counts)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (auxs, counts) = jax.lax.scan(body, x, params["groups"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x)
+    aux = jnp.sum(auxs)
+    total_counts = counts.sum(0) if counts is not None else None
+    return logits, aux, total_counts
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch,
+            aux_coef: float = 0.01, remat: bool = True):
+    """Next-token CE over positions with label >= 0 (+ MoE aux loss)."""
+    logits, aux, counts = forward_train(params, cfg, batch, remat)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    metrics = {"ce": ce, "aux": aux, "tokens": mask.sum()}
+    if counts is not None:
+        metrics["expert_counts"] = counts
+    return ce + aux_coef * aux, metrics
+
+
+def prefill(params: Params, cfg: ModelConfig, batch):
+    """Full-sequence forward that also materializes decode caches.
+
+    Implemented as forward_train (caches are rebuilt from k/v projections
+    per layer); returns last-position logits + caches sized to seq_len.
+    """
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    dtype = x.dtype
+
+    def body(x, group_params):
+        new_caches = []
+        for slot, (kind, ffn_kind) in enumerate(zip(cfg.layer_pattern,
+                                                    cfg.ffn_pattern)):
+            p = group_params[slot]
+            h = rmsnorm(p["mixer_ln"], x, cfg.norm_eps)
+            if kind == "attn":
+                if cfg.attn_type == "mla":
+                    mix, cache = _mla_prefill(p["mixer"], cfg, h, positions)
+                else:
+                    mix, cache = _gqa_prefill(p["mixer"], cfg, h, positions)
+            else:
+                mix, cache = _ssm_prefill(p["mixer"], cfg, h)
+            x = x + mix
+            x, _, _ = _apply_ffn(p, cfg, ffn_kind, x)
+            new_caches.append(cache)
+        return x, tuple(new_caches)
+
+    x, caches = jax.lax.scan(body, x, params["groups"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x[:, -1:, :])
+    return logits, list(caches)
+
+
+def _gqa_prefill(p, cfg, x, positions):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = attn.apply_rope(k, positions, cfg.rope_theta)
+    out = attn.gqa_full(p, cfg, x, positions)
+    return out, attn.KVCache(k=k, v=v)
+
+
+def _mla_prefill(p, cfg, x, positions):
+    kr = cfg.kv_lora_rank
+    kvl = jnp.einsum("bsd,dr->bsr", x, p["wkv_down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    latent, k_rope = kvl[..., :kr], kvl[..., kr:]
+    latent = rmsnorm(p["kv_norm"], latent, cfg.norm_eps)
+    k_rope = attn.apply_rope(k_rope[..., None, :], positions,
+                             cfg.rope_theta)[:, :, 0, :]
+    out = attn.mla_full(p, cfg, x, positions)
+    return out, attn.MLACache(latent=latent, k_rope=k_rope)
+
+
+def _ssm_prefill(p, cfg, x):
+    return ssm_mod.ssd_full(p, cfg, x, return_cache=True)
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens, caches, index):
+    """tokens: (b, 1) → (logits (b,1,V) fp32, new caches)."""
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(x, xs):
+        group_params, group_caches = xs
+        y, new_caches = _group_decode(cfg, x, index, group_params,
+                                      group_caches)
+        return y, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (params["groups"], tuple(caches)))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x)
+    return logits, list(new_caches)

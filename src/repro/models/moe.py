@@ -1,0 +1,180 @@
+"""Mixture-of-Experts channel mixer: top-k routing with sort-based dispatch.
+
+Dispatch is the "sparse" sort/scatter formulation (not the GShard one-hot
+einsum, whose (T, E, C) dispatch tensor is quadratically wasteful): token→
+expert assignments are argsorted by expert, packed into per-expert capacity
+buffers, batch-matmul'd per expert, and combined back weighted by router
+probs. Expert weights carry the ``experts`` logical axis → EP over the
+`model` mesh axis; the token shuffle lowers to an all-to-all under GSPMD.
+
+Load accounting: per-expert assignment counts are returned so the trainer
+can (a) apply the standard aux load-balancing loss and (b) feed the counts
+into the flash-hash counting table for corpus-level expert statistics
+(counting semantics — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense_init
+from .sharding_hints import hint
+
+
+@jax.custom_vjp
+def _bf16_grad_boundary(x):
+    """Identity fwd; casts the cotangent to bf16 and back — halves the
+    bytes of the expert⇄token all-to-all in the backward pass (§Perf)."""
+    return x
+
+
+def _bfb_fwd(x):
+    return x, None
+
+
+def _bfb_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype),)
+
+
+_bf16_grad_boundary.defvjp(_bfb_fwd, _bfb_bwd)
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p = {"router": _dense_init(ks[0], (d, e), jnp.float32)}
+    if cfg.ffn_act == "swiglu":
+        p["w_gate"] = _dense_init(ks[1], (e, d, f), dtype, in_axis=1)
+        p["w_up"] = _dense_init(ks[2], (e, d, f), dtype, in_axis=1)
+    else:
+        p["w_in"] = _dense_init(ks[1], (e, d, f), dtype, in_axis=1)
+    p["w_down"] = _dense_init(ks[3], (e, f, d), dtype, in_axis=1)
+    return p
+
+
+def axes_moe(cfg: ModelConfig):
+    p = {"router": ("embed", None)}
+    if cfg.ffn_act == "swiglu":
+        p["w_gate"] = ("experts", "embed", "ffn")
+        p["w_up"] = ("experts", "embed", "ffn")
+    else:
+        p["w_in"] = ("experts", "embed", "ffn")
+    p["w_down"] = ("experts", "ffn", "embed")
+    return p
+
+
+def _topk(probs, k: int):
+    """Iterative-argmax top-k over the last axis. Unlike lax.top_k (a
+    TopK custom call, which GSPMD cannot partition → full token gather),
+    this is plain max/one-hot ops that shard row-parallel."""
+    p = probs
+    vals, idxs = [], []
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)
+        v = jnp.max(p, axis=-1)
+        vals.append(v)
+        idxs.append(i.astype(jnp.int32))
+        p = p - jax.nn.one_hot(i, p.shape[-1], dtype=p.dtype) * 2.0
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
+def moe_apply(params, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array,
+                                                    jax.Array]:
+    """x: (b, s, d) → (y, aux_loss, expert_counts (E,)).
+
+    GShard-style *grouped* dispatch: each batch row is a dispatch group, so
+    routing, sort and position assignment are local to the row (b is the
+    data-parallel dim → zero cross-device traffic until the expert
+    buffers), and the only collectives are the two token⇄expert
+    all-to-alls induced by the ``experts``-axis sharding hints.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    x = hint(x, "batch", None, None)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    logits = hint(logits, "batch", None, None)   # keep top-k token-local
+    probs_all = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = _topk(probs_all, k)                   # (b, s, k)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (Switch) + counting-table stats ----
+    count_frac = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(
+        1.0, mode="drop")
+    aux = e * jnp.mean(probs_all.mean((0, 1)) * (count_frac / (b * s * k)))
+
+    # ---- grouped dispatch (group = batch row; capacity per group) ----
+    # Gather-only formulation: GSPMD partitions batched gathers on the
+    # group dim, while the scatter formulation replicates the full global
+    # dispatch tensors on every device (32GB/device at 256×4096 — observed
+    # in the granite dry-run HLO).
+    cap = max(int(cfg.capacity_factor * s * k / e), 1)
+    fe = top_i.reshape(b, s * k)                          # (b, sk)
+    fp = top_p.reshape(b, s * k)
+    ftok = jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[:, None], (s, k)).reshape(s * k)
+    ftok = jnp.broadcast_to(ftok[None], (b, s * k))
+    order = jnp.argsort(fe, axis=-1, stable=True)         # per-row sort
+    se = jnp.take_along_axis(fe, order, -1)
+    stok = jnp.take_along_axis(ftok, order, -1)
+    # position of each assignment within its expert, per row
+    first = jnp.concatenate(
+        [jnp.ones((b, 1), bool), se[:, 1:] != se[:, :-1]], -1)
+    runpos = jnp.arange(s * k, dtype=jnp.int32)[None, :]
+    run_start = jnp.where(first, runpos, 0)
+    run_start = jax.lax.cummax(run_start, axis=1)
+    pos = runpos - run_start
+    keep = pos < cap                                      # capacity drop
+    # expert run starts per row: start[b, e'] = first sorted index of e'
+    erange = jnp.arange(e + 1, dtype=jnp.int32)
+    start = jax.vmap(lambda row_se: jnp.searchsorted(
+        row_se, erange, side="left"))(se).astype(jnp.int32)  # (b, e+1)
+    # slot (e', c) ← sorted index j = start[e'] + c if within the run
+    cidx = jnp.arange(cap, dtype=jnp.int32)
+    j = start[:, :e, None] + cidx[None, None, :]          # (b, e, cap)
+    slot_valid = (j < start[:, 1:, None]) & (cidx[None, None, :] < cap)
+    j_flat = jnp.clip(j, 0, s * k - 1).reshape(b, e * cap)
+    tok_for_slot = jnp.take_along_axis(stok, j_flat, -1)  # (b, e*cap)
+    buf = jnp.take_along_axis(x, tok_for_slot[..., None], axis=1)
+    buf = jnp.where(slot_valid.reshape(b, e * cap)[..., None], buf, 0)
+    buf = buf.reshape(b, e, cap, d)
+    if cfg.opt_bf16_grads:
+        buf = _bf16_grad_boundary(buf)
+    buf = hint(buf, "batch", "experts", None, None)  # token→expert a2a
+    # ---- per-expert FFN (batched over the experts axis → EP) ----
+    if cfg.ffn_act == "swiglu":
+        # NOTE: no preferred_element_type here — 4-D batched bf16→f32
+        # dots are unsupported by the CPU thunk executor; the MXU
+        # accumulates bf16 dots in fp32 internally regardless.
+        g = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+        u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+        h = (jax.nn.silu(g.astype(jnp.float32)) *
+             u.astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = jnp.einsum("becd,edf->becf", buf, params["w_in"])
+        if cfg.ffn_act == "squared_relu":
+            h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+        else:
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out_buf = jnp.einsum("becf,efd->becd", h,
+                         params["w_down"]).astype(x.dtype)
+    if cfg.opt_bf16_grads:
+        out_buf = _bf16_grad_boundary(out_buf)
+    out_buf = hint(out_buf, "batch", "experts", None, None)
+    # ---- combine (gather-only): token t's k contributions live at sorted
+    # positions inv[t*k + i]; read them back from the flat slot buffer ----
+    inv = jnp.argsort(order, axis=-1, stable=True)        # (b, sk)
+    slot_of_sorted = jnp.where(keep, se * cap + pos, e * cap)  # OOB → pad
+    slot_of_assign = jnp.take_along_axis(slot_of_sorted, inv, -1)
+    flat = out_buf.reshape(b, e * cap, d)
+    flat = hint(flat, "batch", None, None)                # expert→token a2a
+    safe_slot = jnp.clip(slot_of_assign, 0, e * cap - 1)
+    contrib = jnp.take_along_axis(flat, safe_slot[..., None], axis=1)
+    ok = (slot_of_assign < e * cap)
+    w = (fp * ok).astype(contrib.dtype)                   # (b, sk)
+    y = (contrib * w[..., None]).reshape(b, s, k, d).sum(axis=2)
+    y = hint(y, "batch", None, None)
+    return y, aux, count_frac.astype(jnp.int32)

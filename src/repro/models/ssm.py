@@ -1,0 +1,251 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) token mixer.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+math *within* chunks (MXU-friendly batched matmuls) + a linear recurrence
+*across* chunks (``lax.scan`` over chunk states). Decode is the pure
+recurrent update: O(d_state * d_inner) per token, constant in context
+length — which is why mamba2/jamba are the `long_500k` architectures.
+
+The fused ``in_proj`` of the reference implementation is split into
+per-component projections (z, x, B, C, dt) so each can carry its own
+logical sharding axis (TP shards the d_inner/head dims; B/C/dt are small
+and replicated). Mathematically identical; noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (_dense_init, bf16_grad_boundary, gated_rmsnorm, init_rmsnorm)
+from .sharding_hints import hint
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_heads
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": _dense_init(ks[0], (d, di), dtype),
+        "wx": _dense_init(ks[1], (d, di), dtype),
+        "wb": _dense_init(ks[2], (d, ds), dtype),
+        "wc": _dense_init(ks[3], (d, ds), dtype),
+        "wdt": _dense_init(ks[4], (d, nh), dtype),
+        # causal depthwise conv over the concatenated (x, B, C) stream
+        "conv_w": (jax.random.normal(ks[5], (cw, di + 2 * ds), jnp.float32)
+                   * 0.02).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * ds,), dtype),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_norm": init_rmsnorm(ks[6], di, dtype),
+        "w_out": _dense_init(ks[7], (di, d), dtype),
+    }
+
+
+def axes_ssm():
+    return {"wz": ("embed", "inner"), "wx": ("embed", "inner"),
+            "wb": ("embed", None), "wc": ("embed", None),
+            "wdt": ("embed", None),
+            "conv_w": (None, "conv_chan"), "conv_b": ("conv_chan",),
+            "a_log": (None,), "d_skip": (None,), "dt_bias": (None,),
+            "out_norm": {"scale": ("inner",)},
+            "w_out": ("inner", "embed")}
+
+
+def _segsum(x):
+    """x: (..., l) → (..., l, l) lower-tri segment sums: out[i,j]=Σ_{j<k≤i}."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _conv_full(params, xbc):
+    """Causal depthwise conv1d; xbc: (b, l, c)."""
+    cw = params["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :]
+              * params["conv_w"][i][None, None, :] for i in range(cw))
+    return jax.nn.silu((out + params["conv_b"][None, None, :]
+                        ).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_full(params, cfg: ModelConfig, u, return_cache: bool = False):
+    """u: (b, l, d) → (b, l, d). l must be a multiple of ssm_chunk.
+    With ``return_cache``, also returns the SSMCache (terminal recurrent
+    state + conv tail) so decode can continue from the prefill."""
+    b, l, _ = u.shape
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    cs = min(cfg.ssm_chunk, l)
+    assert l % cs == 0, f"seq {l} not a multiple of chunk {cs}"
+    nc = l // cs
+    dt_ = u.dtype
+    if cfg.opt_bf16_grads:
+        u = bf16_grad_boundary(u)
+
+    u = hint(u, "batch", None, None)
+    z = jnp.einsum("bld,di->bli", u, params["wz"],
+                   preferred_element_type=jnp.float32).astype(dt_)
+    x = jnp.einsum("bld,di->bli", u, params["wx"],
+                   preferred_element_type=jnp.float32).astype(dt_)
+    # pin activation shardings: x/z split over TP ("inner"); the small
+    # B/C/dt streams replicated over TP — without these, GSPMD shards the
+    # replicated-weight projections over TP and pays a full-residual
+    # all-reduce per layer to undo it (§Perf mamba2 iteration 2: 276GB/dev
+    # of f32[16,4096,2560] ARs traced to the bld,dn->bln dots).
+    z = hint(z, "batch", None, "inner")
+    x = hint(x, "batch", None, "inner")
+    bmat = jnp.einsum("bld,dn->bln", u, params["wb"],
+                      preferred_element_type=jnp.float32).astype(dt_)
+    cmat = jnp.einsum("bld,dn->bln", u, params["wc"],
+                      preferred_element_type=jnp.float32).astype(dt_)
+    dt_raw = jnp.einsum("bld,dh->blh", u, params["wdt"],
+                        preferred_element_type=jnp.float32)
+    bmat = hint(bmat, "batch", None, None)
+    cmat = hint(cmat, "batch", None, None)
+    dt_raw = hint(dt_raw, "batch", None, None)
+    xbc_raw = jnp.concatenate([x, bmat, cmat], -1)
+    if cfg.opt_conv_split:
+        # §Perf: per-stream convs on weight slices — x stays inner-sharded,
+        # B/C stay replicated; avoids the concat that forces an all-gather
+        # of the sharded x stream every layer. Mathematically identical.
+        di = cfg.d_inner
+        px = {"conv_w": params["conv_w"][:, :di],
+              "conv_b": params["conv_b"][:di]}
+        pb = {"conv_w": params["conv_w"][:, di:di + ds],
+              "conv_b": params["conv_b"][di:di + ds]}
+        pc = {"conv_w": params["conv_w"][:, di + ds:],
+              "conv_b": params["conv_b"][di + ds:]}
+        x = _conv_full(px, x)
+        bmat = _conv_full(pb, bmat)
+        cmat = _conv_full(pc, cmat)
+    else:
+        xbc = _conv_full(params, xbc_raw)
+        x, bmat, cmat = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + ds],
+                                  axis=-1)
+
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])          # (b,l,h) fp32
+    a = -jnp.exp(params["a_log"])                             # (h,)
+    x = x.reshape(b, l, nh, hd)
+    # chunked views
+    xc = x.reshape(b, nc, cs, nh, hd)
+    bc = bmat.reshape(b, nc, cs, ds)
+    cc = cmat.reshape(b, nc, cs, ds)
+    dtc = dt.reshape(b, nc, cs, nh)
+    da = dtc * a[None, None, None, :]                         # (b,nc,cs,h)
+    da_cum = jnp.cumsum(da, axis=2)
+
+    # 1) intra-chunk (diagonal blocks)
+    li = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))           # (b,nc,h,cs,cs)
+    xdt = (xc * dtc[..., None]).astype(dt_)
+    y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp",
+                        cc, bc, li.astype(dt_), xdt,
+                        preferred_element_type=jnp.float32).astype(dt_)
+
+    # 2) per-chunk terminal states
+    decay_st = jnp.exp(da_cum[:, :, -1:, :] - da_cum)         # (b,nc,cs,h)
+    states = jnp.einsum("bcin,bcih,bcihp->bchpn",
+                        bc, decay_st.astype(dt_), xdt,
+                        preferred_element_type=jnp.float32)   # fp32 states
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])                # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    init = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,nc,h,p,n)
+
+    # 4) state → output contribution
+    state_decay = jnp.exp(da_cum)                             # (b,nc,cs,h)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                       cc, prev_states.astype(dt_),
+                       state_decay.astype(dt_),
+                       preferred_element_type=jnp.float32).astype(dt_)
+
+    y = (y_diag + y_off).reshape(b, l, nh, hd)
+    y = y + (params["d_skip"][None, None, :, None] * x).astype(dt_)
+    y = y.reshape(b, l, cfg.d_inner)
+    y = hint(y, "batch", None, "inner")
+    y = gated_rmsnorm(params["out_norm"], y, z, cfg.norm_eps)
+    pet = None if cfg.opt_bf16_grads else jnp.float32
+    out = jnp.einsum("bli,id->bld", y, params["w_out"],
+                     preferred_element_type=pet).astype(dt_)
+    if return_cache:
+        cw = cfg.conv_width
+        cache = SSMCache(conv=xbc_raw[:, l - (cw - 1):, :],
+                         state=final_state)
+        return out, cache
+    return out
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (b, conv_width-1, d_inner + 2*d_state)
+    state: jax.Array  # (b, nh, headdim, d_state) fp32
+
+
+def init_ssm_cache(cfg: ModelConfig, batch, dtype) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1,
+                        cfg.d_inner + 2 * cfg.ssm_state), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                         cfg.ssm_state), jnp.float32))
+
+
+def ssm_cache_axes() -> SSMCache:
+    return SSMCache(conv=("batch", None, "conv_chan"),
+                    state=("batch", "ssm_heads", None, None))
+
+
+def ssd_decode(params, cfg: ModelConfig, u, cache: SSMCache
+               ) -> Tuple[jax.Array, SSMCache]:
+    """u: (b, 1, d) one token; recurrent state update."""
+    b = u.shape[0]
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    dt_ = u.dtype
+    z = jnp.einsum("bld,di->bli", u, params["wz"],
+                   preferred_element_type=jnp.float32).astype(dt_)
+    x = jnp.einsum("bld,di->bli", u, params["wx"],
+                   preferred_element_type=jnp.float32).astype(dt_)
+    bmat = jnp.einsum("bld,dn->bln", u, params["wb"],
+                      preferred_element_type=jnp.float32).astype(dt_)
+    cmat = jnp.einsum("bld,dn->bln", u, params["wc"],
+                      preferred_element_type=jnp.float32).astype(dt_)
+    dt_raw = jnp.einsum("bld,dh->blh", u, params["wdt"],
+                        preferred_element_type=jnp.float32)
+    xbc = jnp.concatenate([x, bmat, cmat], -1)[:, 0, :]       # (b,c)
+    conv = jnp.concatenate([cache.conv, xbc[:, None, :]], 1)  # (b,cw,c)
+    cw = cfg.conv_width
+    out = sum(conv[:, i, :] * params["conv_w"][i][None, :] for i in range(cw))
+    out = jax.nn.silu((out + params["conv_b"][None, :]
+                       ).astype(jnp.float32)).astype(dt_)
+    x, bmat, cmat = jnp.split(out, [cfg.d_inner, cfg.d_inner + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0] + params["dt_bias"])    # (b,h)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt * a[None, :])                             # (b,h)
+    xh = x.reshape(b, nh, hd).astype(jnp.float32)
+    dbx = (dt[..., None, None] * xh[..., :, None]
+           * bmat.astype(jnp.float32)[:, None, None, :])      # (b,h,p,n)
+    state = cache.state * da[..., None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", state,
+                   cmat.astype(jnp.float32))                  # fp32
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, cfg.d_inner).astype(dt_)
+    y = gated_rmsnorm(params["out_norm"], y, z, cfg.norm_eps)
+    out = jnp.einsum("bli,id->bld", y, params["w_out"],
+                     preferred_element_type=jnp.float32).astype(dt_)
+    return out, SSMCache(conv=conv[:, 1:, :], state=state)

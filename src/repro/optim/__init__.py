@@ -1,0 +1,4 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .schedule import cosine_schedule  # noqa: F401
+from .compress import (CompressionState, compress_init,  # noqa: F401
+                       compressed_psum)

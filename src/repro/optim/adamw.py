@@ -1,0 +1,73 @@
+"""AdamW with dtype-configurable moments (memory planning at 340B+ scale:
+bf16 first moment + fp32 second moment = 9 bytes/param instead of 12).
+
+Functional: ``state = adamw_init(cfg, params)``, ``new_params, new_state =
+adamw_update(cfg, grads, state, params, lr)``. Global-norm clipping is done
+in fp32 over the whole tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: str = "float32"   # "bfloat16" to halve first-moment memory
+    v_dtype: str = "float32"
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def adamw_init(cfg: AdamWConfig, params) -> AdamWState:
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.m_dtype)),
+                     params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.v_dtype)),
+                     params)
+    return AdamWState(m=m, v=v, count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.reduce(
+        lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))),
+        tree, jnp.float32(0.0))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params, lr):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = state.count + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1.0 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1.0 - cfg.b2)
+        step = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(m=new_m, v=new_v, count=count), gnorm

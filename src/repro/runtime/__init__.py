@@ -1,0 +1,3 @@
+from .fault_tolerance import (NaNGuard, ResilientTrainer,  # noqa: F401
+                              StepWatchdog)
+from .elastic import plan_mesh_shape, remesh_shardings  # noqa: F401

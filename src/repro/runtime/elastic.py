@@ -1,0 +1,37 @@
+"""Elastic scaling: replan the mesh when the device pool changes.
+
+Losing a node shrinks the pool; ``plan_mesh_shape`` picks the largest
+(data, model) grid that (a) fits the pool, (b) keeps the model axis at the
+arch's required TP width, and (c) keeps the global batch divisible.
+``remesh_shardings`` rebuilds NamedShardings on the new mesh; checkpoint
+restore against them is the actual reshard (checkpoint/).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from ..launch.mesh import MeshPlan, arch_mesh
+
+
+def plan_mesh_shape(available_devices: int, model_width: int,
+                    global_batch: int) -> Tuple[int, int]:
+    """→ (data, model) using as many devices as possible."""
+    if available_devices < model_width:
+        raise ValueError(
+            f"need ≥{model_width} devices for TP, have {available_devices}")
+    data = available_devices // model_width
+    # keep batch divisible (drop to the nearest divisor)
+    while data > 1 and global_batch % data != 0:
+        data -= 1
+    return data, model_width
+
+
+def remesh_shardings(old_shardings, new_mesh: Mesh):
+    """Same PartitionSpecs, new mesh."""
+    return jax.tree.map(
+        lambda s: NamedSharding(new_mesh, s.spec),
+        old_shardings,
+        is_leaf=lambda s: isinstance(s, NamedSharding))

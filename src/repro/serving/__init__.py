@@ -1,0 +1,2 @@
+from .prefix_cache import PrefixKVCache  # noqa: F401
+from .engine import ServeEngine, Request  # noqa: F401

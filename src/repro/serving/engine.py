@@ -1,0 +1,108 @@
+"""Batched serving engine: prefill + greedy decode with prefix-cache reuse.
+
+Continuous-batching-lite: requests are grouped into fixed-size decode
+batches; each request first consults the :class:`PrefixKVCache` (counting
+flash-hash refcounts) and skips prefill for fully-cached prompts. The
+decode loop is one jitted ``decode_step`` per token over the whole batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from .prefix_cache import PrefixKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    output: Optional[List[int]] = None
+    cached_tokens: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params,
+                 prefix_cache: Optional[PrefixKVCache] = None):
+        self.cfg = cfg
+        self.params = params
+        self.cache = prefix_cache
+        self._decode = jax.jit(
+            lambda p, c, t, i: M.decode_step(p, cfg, t, c, i))
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(p, cfg, b))
+
+    def _prefill_one(self, prompt: List[int]):
+        """Prefill a single prompt, reusing a cached prefix if available."""
+        pinned = []
+        if self.cache is not None:
+            n, value, pinned = self.cache.acquire(prompt)
+            if n > 0 and value is not None:
+                # cached block prefix: decode only the remainder from it
+                caches = M.pad_caches(self.cfg, value, len(prompt))
+                consumed = n
+                logits = None
+                for t in prompt[n:]:
+                    logits, caches = self._decode_single(caches,
+                                                         t, consumed)
+                    consumed += 1
+                if logits is None:  # exact full-prompt hit
+                    batch = {"tokens": jnp.asarray([prompt[-1:]], jnp.int32)}
+                    logits, caches = self._decode_single(
+                        caches, prompt[-1], consumed - 1)
+                return logits, caches, consumed, pinned
+        batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+        if self.cfg.frontend != "none":
+            batch["frontend_embeds"] = jnp.zeros(
+                (1, self.cfg.num_patches, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        logits, caches = self._prefill(self.params, batch)
+        if self.cache is not None:
+            pinned += self.cache.insert(prompt, caches,
+                                        slicer=self._slicer())
+        return logits, caches, len(prompt), pinned
+
+    def _slicer(self):
+        """Seq-axis cache trimmer — only for pure-attention stacks (SSM
+        recurrent states are not sliceable; those archs reuse exact
+        prefixes only)."""
+        if any(k == "ssm" for k in self.cfg.layer_pattern):
+            return None
+
+        def slicer(caches, n):
+            return jax.tree.map(
+                lambda x: x[:, :, :n] if x.ndim >= 3 else x, caches)
+        return slicer
+
+    def _decode_single(self, caches, token: int, index: int):
+        logits, caches = self._decode(
+            self.params, caches, jnp.asarray([[token]], jnp.int32),
+            jnp.int32(index))
+        return logits, caches
+
+    def generate(self, req: Request) -> Request:
+        logits, caches, consumed, pinned = self._prefill_one(req.prompt)
+        max_len = consumed + req.max_new_tokens
+        caches = M.pad_caches(self.cfg, caches, max_len)
+        out = []
+        tok = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
+        out.append(tok)
+        for i in range(req.max_new_tokens - 1):
+            logits, caches = self._decode_single(caches, tok, consumed + i)
+            tok = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
+            out.append(tok)
+        if self.cache is not None:
+            self.cache.release(pinned)
+        req.output = out
+        req.cached_tokens = (len(req.prompt) - (len(req.prompt) - consumed)
+                             if consumed <= len(req.prompt) else 0)
+        return req
+
+    def serve(self, requests: Sequence[Request]) -> List[Request]:
+        return [self.generate(r) for r in requests]

@@ -1,0 +1,159 @@
+"""KV prefix-block cache with flash-hash reference counting.
+
+The paper motivates counting hash tables with *reference counting* (§1,
+garbage collection). Here that is exactly the serving-side bookkeeping:
+prefill KV state is cached per prefix *block* (a fixed number of tokens),
+keyed by a rolling hash of the token chain; a **counting** flash-hash
+table holds per-block reference counts — +1 while a request uses a block,
+−1 on release (deletion-by-decrement, §2.6), and blocks whose count drops
+to 0 are evictable.
+
+At cluster scale the value store is paged HBM blocks (vLLM-style) sharded
+like the KV cache; in this reference implementation the store is a host
+dict of cache pytrees, while the *refcount* path runs on-device through
+``core.table_jax`` (MDB-L policy) — the part the paper contributes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import table_jax as tj
+
+
+def _chain_hash(prev: int, tokens: Sequence[int]) -> int:
+    h = np.uint32(prev if prev else 2166136261)
+    for t in tokens:
+        h = np.uint32(h ^ np.uint32(t & 0xFFFFFFFF))
+        h = np.uint32(h * np.uint32(16777619))
+    out = int(h) & 0x3FFFFFFF
+    return out if out else 1
+
+
+@dataclasses.dataclass
+class _Block:
+    key: int
+    tokens: Tuple[int, ...]
+    value: Any  # cache pytree for the prefix ending at this block
+
+
+class PrefixKVCache:
+    def __init__(self, block_tokens: int = 16, capacity_blocks: int = 256,
+                 q_log2: int = 12, r_log2: int = 8):
+        self.block_tokens = block_tokens
+        self.capacity = capacity_blocks
+        self.cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2,
+                                       scheme="MDB-L",
+                                       log_capacity=1 << 10,
+                                       max_updates_per_block=1 << 7,
+                                       overflow_capacity=1 << 9)
+        self.refs = tj.init(self.cfg)
+        self.store: Dict[int, _Block] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- hashing -------------------------------------------------------------
+    def block_keys(self, tokens: Sequence[int]) -> List[int]:
+        """Chain keys for every whole block of the token prefix."""
+        keys = []
+        prev = 0
+        bt = self.block_tokens
+        for i in range(0, len(tokens) - len(tokens) % bt, bt):
+            prev = _chain_hash(prev, tokens[i:i + bt])
+            keys.append(prev)
+        return keys
+
+    def _count(self, keys: List[int]) -> np.ndarray:
+        if not keys:
+            return np.zeros(0, np.int32)
+        pad = 64 - len(keys) % 64 if len(keys) % 64 else 0
+        q = jnp.asarray(np.asarray(keys + [0] * pad), jnp.int32)
+        cnt, _ = tj.lookup(self.cfg, self.refs, q)
+        return np.asarray(cnt)[:len(keys)]
+
+    def _bump(self, keys: List[int], delta: int) -> None:
+        if not keys:
+            return
+        arr = np.asarray(keys, np.int64)
+        deltas = np.full(len(keys), delta, np.int64)
+        pad = 64 - len(keys) % 64 if len(keys) % 64 else 0
+        if pad:
+            arr = np.concatenate([arr, np.full(pad, tj.EMPTY, np.int64)])
+            deltas = np.concatenate([deltas, np.zeros(pad, np.int64)])
+        self.refs = tj.update(self.cfg, self.refs,
+                              jnp.asarray(arr, jnp.int32),
+                              jnp.asarray(deltas, jnp.int32))
+        self.refs = tj.flush(self.cfg, self.refs)
+
+    # -- public API ------------------------------------------------------------
+    def acquire(self, tokens: Sequence[int]) -> Tuple[int, Optional[Any],
+                                                      List[int]]:
+        """Longest reusable prefix: → (n_cached_tokens, cache_value, keys).
+        Bumps refcounts on the blocks the request will pin."""
+        keys = self.block_keys(tokens)
+        n = 0
+        value = None
+        for i, k in enumerate(keys):
+            if k in self.store:
+                n = (i + 1) * self.block_tokens
+                value = self.store[k].value
+            else:
+                break
+        pinned = keys[:n // self.block_tokens]
+        self._bump(pinned, +1)
+        if n:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return n, value, pinned
+
+    def insert(self, tokens: Sequence[int], value: Any,
+               slicer=None) -> List[int]:
+        """Register cache state for every whole-block prefix (so future
+        requests can reuse *partial* prefixes). ``slicer(value, n_tokens)``
+        trims the cache to a block boundary; without one (e.g. SSM states
+        are not seq-sliceable) only the full prefix is registered."""
+        keys = self.block_keys(tokens)
+        if not keys:
+            return []
+        pinned = []
+        items = (list(enumerate(keys)) if slicer is not None
+                 else [(len(keys) - 1, keys[-1])])
+        for i, k in enumerate(keys) if slicer is not None else items:
+            if k in self.store:
+                continue
+            while len(self.store) >= self.capacity:
+                self._evict()
+            n = (i + 1) * self.block_tokens
+            v = slicer(value, n) if slicer is not None else value
+            self.store[k] = _Block(k, tuple(tokens[:n]), v)
+            pinned.append(k)
+        self._bump(pinned, +1)
+        return pinned
+
+    def release(self, pinned: List[int]) -> None:
+        """Decrement refcounts (the paper's deletion-by-decrement)."""
+        self._bump(pinned, -1)
+
+    def _evict(self) -> None:
+        """Drop a zero-refcount block (full removal, §2.6)."""
+        keys = list(self.store.keys())
+        counts = self._count(keys)
+        for k, c in zip(keys, counts):
+            if c <= 0:
+                del self.store[k]
+                self.evictions += 1
+                return
+        # all pinned: drop the oldest anyway (degraded mode)
+        oldest = keys[0]
+        del self.store[oldest]
+        self.evictions += 1
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "resident": len(self.store),
+                "tile_stores": int(self.refs.stats.tile_stores)}

@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: deliberately NO --xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device; only dryrun.py forces 512, and the
+# multi-device tests spawn subprocesses with their own XLA_FLAGS.
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,73 @@
+"""Checkpointing: roundtrip, atomicity, retention, async, emergency."""
+import json
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.standard_normal((4, 4)),
+                                        jnp.float32),
+                       "b": jnp.asarray(rng.standard_normal(4), jnp.float32)},
+            "opt": {"m": jnp.zeros((4, 4)), "count": jnp.int32(17)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 5, t)
+    restored, meta = restore_checkpoint(tmp_path, t)
+    assert meta["step"] == 5
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+    assert int(restored["opt"]["count"]) == 17
+
+
+def test_latest_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, every_steps=2, keep=2)
+    t = _tree()
+    for step in range(8):
+        mgr.maybe_save(step, t, blocking=True)
+    assert latest_step(tmp_path) == 6
+    kept = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(kept) == 2  # retention
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path, every_steps=1, keep=3)
+    t = _tree()
+    mgr.save(3, t, blocking=False)
+    mgr.wait()
+    assert latest_step(tmp_path) == 3
+
+
+def test_atomic_publish(tmp_path):
+    """A .tmp dir never counts as a checkpoint."""
+    (tmp_path / "step_00000009.tmp").mkdir(parents=True)
+    assert latest_step(tmp_path) is None
+    save_checkpoint(tmp_path, 2, _tree())
+    assert latest_step(tmp_path) == 2
+
+
+def test_restore_mismatch_raises(tmp_path):
+    save_checkpoint(tmp_path, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(tmp_path, {"b": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(tmp_path, {"a": jnp.zeros(4)})
+
+
+def test_emergency(tmp_path):
+    mgr = CheckpointManager(tmp_path, every_steps=100)
+    mgr.emergency(42, _tree())
+    restored, meta = restore_checkpoint(tmp_path, _tree())
+    assert meta.get("emergency") is True and meta["step"] == 42
+
+
+def test_data_state_in_meta(tmp_path):
+    save_checkpoint(tmp_path, 11, _tree())
+    meta = json.loads((tmp_path / "step_00000011" / "meta.json").read_text())
+    assert meta["data_state"]["step"] == 11

@@ -1,0 +1,40 @@
+"""Multi-device tests (subprocess with 8 virtual CPU devices, so the main
+pytest process keeps its single-device view)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+HELPERS = Path(__file__).parent / "helpers"
+
+
+def _run(script, *args, timeout=1200):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, str(HELPERS / script), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.mark.slow
+def test_distributed_flash_table():
+    r = _run("dist_table_main.py")
+    assert "DIST_TABLE_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_elastic_reshard():
+    r = _run("dist_train_main.py", "elastic")
+    assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", [
+    "granite_moe_1b", "phi35_moe_42b", "minicpm3_4b", "starcoder2_7b",
+    "llama32_3b", "nemotron4_340b", "llava_next_mistral_7b", "mamba2_2p7b",
+    "musicgen_large", "jamba15_large_398b"])
+def test_sharded_train_and_decode(arch):
+    r = _run("dist_train_main.py", arch)
+    assert f"ARCH_OK {arch}" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]

@@ -1,0 +1,52 @@
+"""Pallas flash-attention kernel vs dense oracle: shape/dtype sweeps."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attn import ops, ref
+
+
+@pytest.mark.parametrize("b,s,h,kvh,d,bq,bk", [
+    (2, 128, 4, 4, 32, 32, 32),     # MHA
+    (1, 256, 8, 2, 64, 64, 64),     # GQA 4:1
+    (2, 128, 6, 2, 16, 64, 32),     # GQA 3:1, odd dims
+    (1, 128, 4, 1, 32, 128, 128),   # MQA, single tile
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_oracle(b, s, h, kvh, d, bq, bk, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kvh, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kvh, d), dtype)
+    got = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.sdpa_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_non_causal():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 16), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    want = ref.sdpa_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_causality_enforced():
+    """Changing future tokens must not change earlier outputs."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 16), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    k2 = k.at[:, 40:].set(123.0)
+    v2 = v.at[:, 40:].set(-7.0)
+    o2 = ops.flash_attention(q, k2, v2, block_q=32, block_k=32)
+    np.testing.assert_array_equal(np.asarray(o1[:, :40]),
+                                  np.asarray(o2[:, :40]))

@@ -1,0 +1,61 @@
+"""Unit + property tests for the two-level hash pair (paper §2, eq. 1-3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import HashPair, Pow2Hash, hash_pair_for
+
+
+def test_basic_ranges():
+    p = hash_pair_for(num_blocks=7, block_entries=64)
+    xs = np.arange(10_000, dtype=np.int64)
+    g = p.g(xs)
+    s = p.s(xs)
+    assert g.min() >= 0 and g.max() < p.q
+    assert s.min() >= 0 and s.max() < p.num_slots
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64), st.integers(1, 512))
+@settings(max_examples=200, deadline=None)
+def test_placement_property(x, nb, r):
+    """Eq. (3): s(x) = g(x) div r — the slot's keys land in one block."""
+    p = HashPair(q=nb * r, r=r)
+    assert p.s(x) == p.g(x) // r
+    assert r * p.s(x) <= p.g(x) < r * (p.s(x) + 1)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(3, 12), st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_pow2_placement_property(x, qlog, rlog):
+    rlog = min(rlog, qlog)
+    p = Pow2Hash(q_log2=qlog, r_log2=rlog)
+    g, s = p.g(x), p.s(x)
+    assert 0 <= g < p.q
+    assert s == g >> rlog
+    assert p.home_within_block(x) == g & (p.r - 1)
+
+
+def test_pow2_matches_numpy_vectorized():
+    p = Pow2Hash(q_log2=14, r_log2=8)
+    xs = np.arange(5000, dtype=np.int32)
+    g_vec = np.asarray(p.g(xs))
+    for x in [0, 1, 17, 4999]:
+        assert g_vec[x] == p.g(int(x))
+
+
+def test_uniformity():
+    """Hash should spread a contiguous key range over blocks evenly-ish."""
+    p = Pow2Hash(q_log2=16, r_log2=10)
+    xs = np.arange(100_000, dtype=np.int32)
+    blocks = np.asarray(p.s(xs))
+    counts = np.bincount(blocks, minlength=p.num_slots)
+    mean = counts.mean()
+    assert counts.max() < 2.0 * mean
+    assert counts.min() > 0.3 * mean
+
+
+def test_invalid_geometry():
+    with pytest.raises(ValueError):
+        HashPair(q=100, r=33)
+    with pytest.raises(ValueError):
+        Pow2Hash(q_log2=4, r_log2=6)

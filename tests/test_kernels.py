@@ -1,0 +1,133 @@
+"""Pallas flash-hash kernels vs the pure-jnp oracle: shape/dtype sweeps in
+interpret mode (per-kernel allclose contract)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from collections import Counter
+
+from repro.core.hashing import Pow2Hash
+from repro.kernels.flash_hash import kernel as K
+from repro.kernels.flash_hash import ops, ref
+
+EMPTY = ref.EMPTY
+
+
+def _mk_updates(pair, n_keys, key_space, seed, max_u):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, key_space, size=n_keys), jnp.int32)
+    keys, cnts = ops.accumulate(toks)
+    uk, uc, ck, cc, nd = ops.bucket_updates(pair, keys, cnts, max_u)
+    return toks, uk, uc, int(nd)
+
+
+@pytest.mark.parametrize("q_log2,r_log2,max_u", [
+    (8, 5, 16), (10, 7, 64), (12, 8, 512), (13, 10, 256), (11, 11, 128),
+])
+def test_merge_matches_ref_shapes(q_log2, r_log2, max_u):
+    pair = Pow2Hash(q_log2=q_log2, r_log2=r_log2)
+    n_b, r = pair.num_slots, pair.r
+    tk = jnp.full((n_b, r), EMPTY, jnp.int32)
+    tc = jnp.zeros((n_b, r), jnp.int32)
+    _, uk, uc, _ = _mk_updates(pair, 4 * pair.q // 8, 1 << 20, q_log2, max_u)
+    r1 = ref.merge_ref(pair, tk, tc, uk, uc)
+    r2 = ops.merge(pair, tk, tc, uk, uc)
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("count_dtype", [jnp.int32])
+def test_merge_repeated_batches_count_exact(count_dtype):
+    pair = Pow2Hash(q_log2=10, r_log2=7)
+    n_b, r = pair.num_slots, pair.r
+    tk = jnp.full((n_b, r), EMPTY, jnp.int32)
+    tc = jnp.zeros((n_b, r), count_dtype)
+    truth = Counter()
+    rng = np.random.default_rng(7)
+    for i in range(5):
+        toks = rng.integers(0, 600, size=512)
+        truth.update(toks.tolist())
+        keys, cnts = ops.accumulate(jnp.asarray(toks, jnp.int32))
+        uk, uc, _, _, nd = ops.bucket_updates(pair, keys, cnts, 128)
+        assert int(nd) == 0
+        tk, tc, sk, sc = ops.merge(pair, tk, tc, uk, uc)
+        assert int((sk != EMPTY).sum()) == 0  # no spills at this load
+    q = jnp.asarray(sorted(truth), jnp.int32)
+    cnt, dist = ops.query_sorted(pair, tk, tc, q)
+    got = dict(zip(map(int, q), map(int, cnt)))
+    assert got == dict(truth)
+
+
+def test_spill_semantics():
+    """A block fed more keys than capacity must spill the excess, exactly."""
+    pair = Pow2Hash(q_log2=6, r_log2=3)  # tiny blocks of 8
+    n_b, r = pair.num_slots, pair.r
+    # craft 12 distinct keys that all land in block 0
+    keys = []
+    x = 0
+    while len(keys) < 12:
+        if int(pair.s(x)) == 0:
+            keys.append(x)
+        x += 1
+    uk = jnp.full((n_b, 16), EMPTY, jnp.int32).at[0, :12].set(
+        jnp.asarray(keys, jnp.int32))
+    uc = jnp.zeros((n_b, 16), jnp.int32).at[0, :12].set(1)
+    tk = jnp.full((n_b, r), EMPTY, jnp.int32)
+    tc = jnp.zeros((n_b, r), jnp.int32)
+    nk, nc, sk, sc = ops.merge(pair, tk, tc, uk, uc)
+    assert int((nk[0] != EMPTY).sum()) == r          # block full
+    assert int((sk[0] != EMPTY).sum()) == 12 - r     # rest spilled
+    rk, rc, rsk, rsc = ref.merge_ref(pair, tk, tc, uk, uc)
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(rsk))
+
+
+def test_negative_deltas_and_zero():
+    pair = Pow2Hash(q_log2=8, r_log2=5)
+    n_b, r = pair.num_slots, pair.r
+    tk = jnp.full((n_b, r), EMPTY, jnp.int32)
+    tc = jnp.zeros((n_b, r), jnp.int32)
+    keys = jnp.asarray([42, 43], jnp.int32)
+    deltas = jnp.asarray([5, -2], jnp.int32)
+    uk, uc, _, _, _ = ops.bucket_updates(pair, keys, deltas, 8)
+    tk, tc, _, _ = ops.merge(pair, tk, tc, uk, uc)
+    q = jnp.asarray([42, 43, 44, 42], jnp.int32)
+    cnt, _ = ops.query_sorted(pair, tk, tc, q)
+    assert list(map(int, cnt)) == [5, -2, 0, 5]
+
+
+def test_query_probe_distance_vs_ref():
+    pair = Pow2Hash(q_log2=9, r_log2=6)
+    n_b, r = pair.num_slots, pair.r
+    tk = jnp.full((n_b, r), EMPTY, jnp.int32)
+    tc = jnp.zeros((n_b, r), jnp.int32)
+    toks, uk, uc, _ = _mk_updates(pair, 300, 1000, 3, 64)
+    tk, tc, _, _ = ops.merge(pair, tk, tc, uk, uc)
+    q = jnp.asarray(np.random.default_rng(4).integers(0, 1500, 64), jnp.int32)
+    c1, d1 = ref.query_ref(pair, tk, tc, q)
+    c2, d2 = ops.query_sorted(pair, tk, tc, q)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_merge_dirty_equals_full_merge():
+    pair = Pow2Hash(q_log2=10, r_log2=7)
+    n_b, r = pair.num_slots, pair.r
+    rng = np.random.default_rng(5)
+    tk = jnp.full((n_b, r), EMPTY, jnp.int32)
+    tc = jnp.zeros((n_b, r), jnp.int32)
+    _, uk, uc, _ = _mk_updates(pair, 500, 4000, 6, 64)
+    full_k, full_c, _, _ = ops.merge(pair, tk, tc, uk, uc)
+    dirty = jnp.asarray([b for b in range(n_b)
+                         if int((uk[b] != EMPTY).sum())], jnp.int32)
+    dk, dc, _, _ = ops.merge_dirty(pair, tk, tc, dirty, uk[dirty], uc[dirty])
+    np.testing.assert_array_equal(np.asarray(full_k), np.asarray(dk))
+    np.testing.assert_array_equal(np.asarray(full_c), np.asarray(dc))
+
+
+def test_accumulate_dedup():
+    toks = jnp.asarray([5, 5, 7, EMPTY, 5, 9, 7, EMPTY], jnp.int32)
+    keys, cnts = ops.accumulate(toks)
+    got = {int(k): int(c) for k, c in zip(keys, cnts) if int(k) != EMPTY}
+    assert got == {5: 3, 7: 2, 9: 1}
+    assert int(cnts.sum()) == 6

@@ -1,0 +1,60 @@
+"""CorpusStats: the flash-hash table as the data layer's stats engine."""
+import numpy as np
+from collections import Counter
+
+from repro.data import CorpusStats, SyntheticCorpus
+
+
+def _stats():
+    return CorpusStats.create(q_log2=14, r_log2=9)
+
+
+def test_counts_after_ingest():
+    st = _stats()
+    rng = np.random.default_rng(0)
+    all_toks = []
+    for _ in range(4):
+        toks = rng.integers(0, 800, size=1024)
+        all_toks.extend(toks.tolist())
+        st.ingest(toks)
+    st.flush()
+    truth = Counter(all_toks)
+    keys = np.array(sorted(truth))
+    got = st.counts(keys)
+    for k, c in zip(keys, got):
+        assert truth[int(k)] == int(c)
+
+
+def test_tfidf_weights_ordering():
+    st = _stats()
+    toks = np.array([1] * 500 + [2] * 5)
+    st.ingest(toks)
+    st.flush()
+    w = st.tfidf_weights(np.array([1, 2]))
+    assert w[0] < w[1]  # frequent token → lower IDF
+
+
+def test_doc_filter():
+    st = _stats()
+    corpus = SyntheticCorpus(num_docs=30, mean_doc_len=128,
+                             vocab_size=2000, seed=1)
+    for d in corpus:
+        st.ingest(d)
+    st.flush()
+    scores = [st.doc_score(corpus.doc_tokens(i)) for i in range(10)]
+    thr = sorted(scores)[5]
+    flt = st.doc_filter(thr)
+    kept = [flt(corpus.doc_tokens(i)) for i in range(10)]
+    assert 3 <= sum(kept) <= 7  # threshold splits the docs
+
+
+def test_expert_counting():
+    st = _stats()
+    st.ingest_expert_counts(layer=3, counts=np.array([5, 0, 2, 1]))
+    st.ingest_expert_counts(layer=3, counts=np.array([1, 1, 0, 0]))
+    st.ingest_expert_counts(layer=7, counts=np.array([9, 9, 9, 9]))
+    st.flush()
+    got3 = st.expert_counts(3, 4)
+    got7 = st.expert_counts(7, 4)
+    np.testing.assert_array_equal(got3, [6, 1, 2, 1])
+    np.testing.assert_array_equal(got7, [9, 9, 9, 9])

@@ -1,0 +1,90 @@
+"""End-to-end behaviour: tiny LM pretrain run through the resilient
+runtime (loss ↓, checkpoints land, resume works) and the paper's TF-IDF
+workload through the full pipeline."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.configs import get_config
+from repro.core import TableGeometry
+from repro.core.tfidf import TfIdfPipeline
+from repro.data import CorpusStats, LoaderConfig, SyntheticCorpus, make_batch
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import ResilientTrainer
+from repro.launch import steps as steps_mod
+
+
+@pytest.mark.slow
+def test_end_to_end_training_with_failure(tmp_path):
+    cfg = get_config("llama32_3b", tiny=True)
+    corpus = SyntheticCorpus(num_docs=64, mean_doc_len=48,
+                             vocab_size=cfg.vocab_size, seed=5)
+    lcfg = LoaderConfig(corpus=corpus, seq_len=32, global_batch=4,
+                        microbatches=2, vocab_size=cfg.vocab_size)
+    opt_cfg = AdamWConfig()
+    train_step = jax.jit(steps_mod.make_train_step(
+        cfg, opt_cfg, steps_mod.TrainHyper(peak_lr=3e-3, warmup_steps=5,
+                                           total_steps=60)))
+    params = M.init_params(jax.random.key(0), cfg)
+    opt = adamw_init(opt_cfg, params)
+
+    losses = []
+
+    def step_fn(state, step):
+        batch = jax.tree.map(jnp.asarray, make_batch(lcfg, step))
+        params, opt = state["params"], state["opt"]
+        params, opt, metrics = train_step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        return {"params": params, "opt": opt}, metrics
+
+    trainer = ResilientTrainer(
+        step_fn, CheckpointManager(tmp_path, every_steps=10),
+        inject_failure_at=23)
+    state, report = trainer.run({"params": params, "opt": opt},
+                                num_steps=50)
+    assert report.restarts == 1
+    assert latest_step(tmp_path) is not None
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first, (first, last)
+
+
+def test_tfidf_end_to_end_all_schemes():
+    """The paper's workload: stream a corpus, interleave queries, compare
+    schemes' answers (identical counts, different I/O profiles)."""
+    geom = TableGeometry(num_blocks=8, pages_per_block=8, entries_per_page=32)
+    corpus = SyntheticCorpus(num_docs=40, mean_doc_len=120, vocab_size=3000,
+                             seed=9)
+    pipes = {s: TfIdfPipeline(geom, scheme=s, ram_buffer_pct=2.0,
+                              change_segment_pct=25.0, track_df=False)
+             for s in ("MB", "MDB", "MDB-L")}
+    for doc in corpus:
+        for p in pipes.values():
+            p.add_document_ids(doc)
+    for p in pipes.values():
+        p.finalize()
+    # identical logical answers
+    probe = corpus.doc_tokens(0)[:20]
+    answers = {s: [p.term_table.query(int(t)) for t in probe]
+               for s, p in pipes.items()}
+    assert answers["MB"] == answers["MDB"] == answers["MDB-L"]
+    # different I/O profiles, same ordering as the paper
+    cleans = {s: p.term_table.ledger.cleans for s, p in pipes.items()}
+    assert cleans["MB"] >= cleans["MDB"] >= cleans["MDB-L"]
+
+
+def test_corpus_stats_filter_plugs_into_loader():
+    st = CorpusStats.create(q_log2=14, r_log2=9)
+    corpus = SyntheticCorpus(num_docs=32, mean_doc_len=64, vocab_size=4000,
+                             seed=2)
+    for d in corpus:
+        st.ingest(d)
+    st.flush()
+    lcfg = LoaderConfig(corpus=corpus, seq_len=64, global_batch=4,
+                        microbatches=1, vocab_size=4000,
+                        doc_filter=st.doc_filter(0.0))
+    batch = make_batch(lcfg, 0)
+    assert batch["tokens"].shape == (1, 4, 64)

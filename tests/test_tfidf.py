@@ -1,0 +1,72 @@
+"""TF-IDF pipeline vs an independent numpy oracle."""
+import math
+import numpy as np
+import pytest
+
+from repro.core import TableGeometry
+from repro.core.tfidf import TfIdfPipeline, tokenize
+
+DOCS = [
+    "the cat sat on the mat",
+    "the dog sat on the log",
+    "macintosh apple computers and the apple fruit",
+    "the the the the stopword heavy document",
+    "quantum flash storage devices on solid state drives",
+]
+
+
+def _oracle():
+    toks = [tokenize(d) for d in DOCS]
+    tf_total = {}
+    df = {}
+    for dt in toks:
+        for t in dt:
+            tf_total[t] = tf_total.get(t, 0) + 1
+        for t in set(dt):
+            df[t] = df.get(t, 0) + 1
+    return toks, tf_total, df
+
+
+@pytest.fixture()
+def pipe():
+    geom = TableGeometry(num_blocks=4, pages_per_block=8, entries_per_page=16)
+    p = TfIdfPipeline(geom, scheme="MDB-L", ram_buffer_pct=10.0,
+                      change_segment_pct=25.0)
+    for d in DOCS:
+        p.add_document(tokenize(d))
+    p.finalize()
+    return p
+
+
+def test_term_frequencies(pipe):
+    _, tf_total, _ = _oracle()
+    for t, c in tf_total.items():
+        assert pipe.term_frequency(t) == c
+    assert pipe.term_frequency("nonexistent") == 0
+
+
+def test_idf(pipe):
+    toks, _, df = _oracle()
+    for t, d in df.items():
+        assert abs(pipe.idf(t) - math.log(len(DOCS) / d)) < 1e-9
+
+
+def test_tfidf_scores_and_keywords(pipe):
+    toks, _, df = _oracle()
+    doc = toks[2]
+    scores = pipe.tfidf(doc)
+    # oracle
+    n = len(doc)
+    for t in set(doc):
+        tf = doc.count(t) / n
+        expect = tf * math.log(len(DOCS) / df[t])
+        assert abs(scores[t] - expect) < 1e-9
+    # 'the' is a near-stop-word (4/5 docs): lowest idf → lowest score of
+    # this doc's words; a moderate threshold keeps content words only
+    assert scores["the"] == min(scores.values())
+    kws = pipe.keywords(doc, threshold=scores["the"] * 1.01)
+    assert "apple" in kws and "the" not in kws
+
+
+def test_stopwords_rank_below_rare_words(pipe):
+    assert pipe.idf("the") < pipe.idf("quantum")
