@@ -51,6 +51,15 @@ def run(rows):
     rows.append(("kernel/merge_pallas_interpret", t_k * 1e6,
                  f"blocks={n_b};vmem_per_tile_B={tile_bytes + upd_bytes};"
                  f"hbm_per_merge_B={n_b * (2 * tile_bytes + upd_bytes)}"))
+    # dirty-block merge: grid over only n_d dirty tiles (the MDB / MDB-L
+    # partial-merge path) — HBM traffic scales with the dirty fraction.
+    for n_d in (1, n_b // 8, n_b):
+        dirty = jnp.arange(n_d, dtype=jnp.int32)
+        duk, duc = uk[:n_d], uc[:n_d]
+        t_d = _bench(lambda: ops.merge_dirty(pair, tk, tc, dirty, duk, duc))
+        rows.append((f"kernel/merge_dirty_{n_d}of{n_b}", t_d * 1e6,
+                     f"dirty={n_d};blocks={n_b};"
+                     f"hbm_per_merge_B={n_d * (2 * tile_bytes + upd_bytes)}"))
     mk, mc, *_ = ops.merge(pair, tk, tc, uk, uc)
     q = jnp.asarray(rng.integers(0, 1 << 20, size=2048), jnp.int32)
     t_q = _bench(lambda: ops.query_sorted(pair, mk, mc, q))

@@ -3,13 +3,31 @@
 and serving layers.
 
 Mapping (DESIGN.md §2): HBM table = data segment; ``sort+segment_sum``
-dedup = RAM buffer; HBM append-log = MDB-L change segment; Pallas tile
-merge = block-level update. Stats counters mirror the paper's ledger:
-``tile_stores`` is the clean/wear analogue (one per block rewrite).
+dedup = RAM buffer; HBM append-log = change segment (monolithic for MDB-L,
+partitioned for MDB); Pallas tile merge = block-level update. Stats
+counters mirror the paper's ledger: ``tile_stores`` is the clean/wear
+analogue (one per block rewrite).
+
+All three of the paper's schemes are implemented (DESIGN.md §3):
+
+* ``MB``    — no change segment; every update batch is bucketed and merged
+  immediately into the dirty blocks it touches.
+* ``MDB``   — partitioned change segment: partition ``p`` buffers updates
+  for the ``k`` consecutive data blocks ``[p*k, (p+1)*k)``; a full
+  partition drains through a ``k``-block dirty merge (exactly ``k`` tile
+  rewrites, not ``num_blocks``).
+* ``MDB-L`` — monolithic log change segment; sequential appends; a full
+  log drains through a dirty merge over only the blocks with staged keys.
+
+Every merge path runs the :func:`..kernels.flash_hash.ops.merge_dirty`
+Pallas kernel, so ``tile_loads``/``tile_stores`` count only blocks that
+actually had staged updates (MDB additionally pays for its whole
+partition, per the paper's CS-block erase) — the per-scheme clean counts
+of the paper's Figure 5, on device.
 
 Everything is functional: ``state -> op -> state`` and jit-friendly; the
-scheme (MB vs MDB-L) is a static config choice, so each policy compiles to
-its own program.
+scheme is a static config choice, so each policy compiles to its own
+program.
 """
 from __future__ import annotations
 
@@ -25,6 +43,8 @@ from .hashing import Pow2Hash
 
 EMPTY = hops.EMPTY
 
+_SCHEMES = ("MB", "MDB", "MDB-L")
+
 
 @dataclasses.dataclass(frozen=True)
 class FlashTableConfig:
@@ -32,11 +52,28 @@ class FlashTableConfig:
 
     q_log2: int = 16              # total entries (power of two)
     r_log2: int = 10              # entries per block (≥128-lane friendly)
-    scheme: str = "MDB-L"         # "MB" | "MDB-L"
-    log_capacity: int = 1 << 14   # change-segment entries (MDB-L)
+    scheme: str = "MDB-L"         # "MB" | "MDB" | "MDB-L"
+    log_capacity: int = 1 << 14   # change-segment entries (MDB / MDB-L)
+    cs_partitions: int = 8        # MDB: change-segment partitions
     max_updates_per_block: int = 1 << 9   # VMEM cap per tile merge
     overflow_capacity: int = 1 << 10
     interpret: bool = True        # Pallas interpret mode (CPU container)
+
+    def __post_init__(self):
+        if self.scheme not in _SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme!r}; "
+                             f"expected one of {_SCHEMES}")
+        if self.scheme == "MDB":
+            if self.cs_partitions <= 0:
+                raise ValueError("cs_partitions must be positive")
+            if self.num_blocks % self.cs_partitions:
+                raise ValueError(
+                    f"cs_partitions={self.cs_partitions} must divide "
+                    f"num_blocks={self.num_blocks}")
+            if self.log_capacity % self.cs_partitions:
+                raise ValueError(
+                    f"cs_partitions={self.cs_partitions} must divide "
+                    f"log_capacity={self.log_capacity}")
 
     @property
     def pair(self) -> Pow2Hash:
@@ -50,6 +87,16 @@ class FlashTableConfig:
     def block_entries(self) -> int:
         return 1 << self.r_log2
 
+    @property
+    def blocks_per_partition(self) -> int:
+        """MDB: data blocks covered by one change-segment partition."""
+        return self.num_blocks // self.cs_partitions
+
+    @property
+    def partition_capacity(self) -> int:
+        """MDB: staged entries one change-segment partition can hold."""
+        return self.log_capacity // self.cs_partitions
+
 
 class TableStats(NamedTuple):
     tile_loads: jax.Array       # blocks read from HBM during merges
@@ -57,34 +104,47 @@ class TableStats(NamedTuple):
     staged_entries: jax.Array   # entries appended to the log (seq writes)
     merges: jax.Array
     stages: jax.Array
-    dropped: jax.Array          # overflow-capacity losses (should be 0)
+    dropped: jax.Array          # capacity losses (should be 0)
+    carried: jax.Array          # updates deferred past a tile's max_u cap
 
 
 class DeviceTableState(NamedTuple):
     keys: jax.Array        # (n_b, r) int32
     counts: jax.Array      # (n_b, r) int32
-    log_keys: jax.Array    # (log_cap,) int32 — MDB-L change segment
-    log_counts: jax.Array  # (log_cap,) int32
-    log_ptr: jax.Array     # () int32
+    log_keys: jax.Array    # change segment: (log_cap,) for MDB-L,
+                           # (cs_partitions, part_cap) for MDB
+    log_counts: jax.Array  # same shape as log_keys
+    log_ptr: jax.Array     # () int32 for MDB-L, (cs_partitions,) for MDB
     ov_keys: jax.Array     # (ov_cap,) int32 — overflow region
     ov_counts: jax.Array   # (ov_cap,) int32
     ov_ptr: jax.Array      # () int32
     stats: TableStats
 
 
+def _zero_stats() -> TableStats:
+    z = lambda: jnp.zeros((), jnp.int32)
+    return TableStats(tile_loads=z(), tile_stores=z(), staged_entries=z(),
+                      merges=z(), stages=z(), dropped=z(), carried=z())
+
+
 def init(cfg: FlashTableConfig) -> DeviceTableState:
     n_b, r = cfg.num_blocks, cfg.block_entries
-    z = lambda: jnp.zeros((), jnp.int32)
+    if cfg.scheme == "MDB":
+        log_shape = (cfg.cs_partitions, cfg.partition_capacity)
+        log_ptr = jnp.zeros((cfg.cs_partitions,), jnp.int32)
+    else:
+        log_shape = (cfg.log_capacity,)
+        log_ptr = jnp.zeros((), jnp.int32)
     return DeviceTableState(
         keys=jnp.full((n_b, r), EMPTY, jnp.int32),
         counts=jnp.zeros((n_b, r), jnp.int32),
-        log_keys=jnp.full((cfg.log_capacity,), EMPTY, jnp.int32),
-        log_counts=jnp.zeros((cfg.log_capacity,), jnp.int32),
-        log_ptr=z(),
+        log_keys=jnp.full(log_shape, EMPTY, jnp.int32),
+        log_counts=jnp.zeros(log_shape, jnp.int32),
+        log_ptr=log_ptr,
         ov_keys=jnp.full((cfg.overflow_capacity,), EMPTY, jnp.int32),
         ov_counts=jnp.zeros((cfg.overflow_capacity,), jnp.int32),
-        ov_ptr=z(),
-        stats=TableStats(z(), z(), z(), z(), z(), z()),
+        ov_ptr=jnp.zeros((), jnp.int32),
+        stats=_zero_stats(),
     )
 
 
@@ -128,43 +188,119 @@ def _append_overflow(state: DeviceTableState, spill_k, spill_c):
             dropped=state.stats.dropped + (n_spill - n_fit)))
 
 
+def _compact(keys, counts):
+    """Compact valid entries to the front, EMPTY-pad the tail."""
+    valid = keys != EMPTY
+    comp = jnp.argsort(~valid, stable=True)
+    return (jnp.where(valid[comp], keys[comp], EMPTY),
+            jnp.where(valid[comp], counts[comp], 0),
+            valid.sum(dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# dirty-block merge machinery (shared by MB and MDB-L)
+# ---------------------------------------------------------------------------
+def _merge_dirty_batch(cfg: FlashTableConfig, state: DeviceTableState,
+                       keys, cnts):
+    """One dirty-block merge pass over a flat batch of staged updates.
+
+    The dirty set is computed from the staged keys' ``s()`` values; the
+    kernel grid walks a *permutation* of all blocks with the dirty ones
+    first (every block id appears exactly once, so revisit hazards cannot
+    arise), but only the dirty prefix carries updates and only it is
+    charged to ``tile_loads``/``tile_stores``. Updates beyond a block's
+    ``max_updates_per_block`` are returned as carry and must stay staged.
+
+    Pallas grids are static, so the permutation still has ``num_blocks``
+    steps — the clean suffix is a no-op visit, and the *counters* (not
+    the kernel walltime) model the paper's per-scheme cleans here. A
+    truly partial grid needs a statically-known dirty count; that is
+    exactly what MDB's partition layout provides
+    (:func:`_mdb_merge_partition`, grid length ``k``).
+    """
+    pair = cfg.pair
+    n_b = cfg.num_blocks
+    valid = keys != EMPTY
+    blk = jnp.where(valid, pair.s(keys), 0).astype(jnp.int32)
+    per_block = jnp.zeros((n_b,), jnp.int32).at[blk].add(
+        valid.astype(jnp.int32))
+    dirty = per_block > 0
+    # grid order: dirty blocks (ascending id — the semi-random write
+    # discipline), then clean blocks with EMPTY update rows (no-op visits).
+    perm = jnp.argsort(jnp.where(dirty, 0, 1), stable=True).astype(jnp.int32)
+    inv = jnp.zeros((n_b,), jnp.int32).at[perm].set(
+        jnp.arange(n_b, dtype=jnp.int32))
+    rows = jnp.where(valid, inv[blk], n_b).astype(jnp.int32)
+    uk, uc, carry_k, carry_c, n_carried = hops.bucket_rows(
+        rows, keys, cnts, n_b, cfg.max_updates_per_block)
+    nk, nc, spill_k, spill_c = hops.merge_dirty(
+        pair, state.keys, state.counts, perm, uk, uc, cfg.interpret)
+    state = state._replace(keys=nk, counts=nc)
+    state = _append_overflow(state, spill_k, spill_c)
+    n_dirty = dirty.sum(dtype=jnp.int32)
+    stats = state.stats._replace(
+        tile_loads=state.stats.tile_loads + n_dirty,
+        tile_stores=state.stats.tile_stores + n_dirty,
+        carried=state.stats.carried + n_carried)
+    return state._replace(stats=stats), carry_k, carry_c
+
+
+def _mb_update(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
+               ) -> DeviceTableState:
+    """MB (§2.3): no change segment — merge the deduped batch immediately.
+
+    Carry (a block receiving more than ``max_updates_per_block`` updates in
+    one batch) is merged again until drained, so no counts are lost."""
+    state, carry_k, carry_c = _merge_dirty_batch(cfg, state, keys, cnts)
+
+    def cond(t):
+        return (t[1] != EMPTY).any()
+
+    def body(t):
+        st, ck, cc = t
+        return _merge_dirty_batch(cfg, st, ck, cc)
+
+    state, _, _ = jax.lax.while_loop(cond, body, (state, carry_k, carry_c))
+    return state._replace(
+        stats=state.stats._replace(merges=state.stats.merges + 1))
+
+
+# ---------------------------------------------------------------------------
+# MDB-L: monolithic log change segment
+# ---------------------------------------------------------------------------
 def _merge_now(cfg: FlashTableConfig, state: DeviceTableState
                ) -> DeviceTableState:
-    """Drain the change segment into the data segment (full-grid merge)."""
-    pair = cfg.pair
-    uk, uc, carry_k, carry_c, _ = hops.bucket_updates(
-        pair, state.log_keys, state.log_counts, cfg.max_updates_per_block)
-    keys, counts, spill_k, spill_c = hops.merge(
-        pair, state.keys, state.counts, uk, uc, cfg.interpret)
-    state = state._replace(keys=keys, counts=counts)
-    state = _append_overflow(state, spill_k, spill_c)
+    """Drain the MDB-L log into the data segment (dirty-block merge)."""
+    state, carry_k, carry_c = _merge_dirty_batch(
+        cfg, state, state.log_keys, state.log_counts)
     # carried updates (exceeded a tile's max_u) stay staged, compacted to
     # the log head; everything else is cleared.
-    carry_valid = carry_k != EMPTY
-    comp = jnp.argsort(~carry_valid, stable=True)
-    log_keys = jnp.where(carry_valid[comp], carry_k[comp], EMPTY)
-    log_counts = jnp.where(carry_valid[comp], carry_c[comp], 0)
-    n_carry = carry_valid.sum(dtype=jnp.int32)
-    n_b = cfg.num_blocks
-    stats = state.stats._replace(
-        tile_loads=state.stats.tile_loads + n_b,
-        tile_stores=state.stats.tile_stores + n_b,
-        merges=state.stats.merges + 1)
+    log_keys, log_counts, n_carry = _compact(carry_k, carry_c)
+    stats = state.stats._replace(merges=state.stats.merges + 1)
     return state._replace(log_keys=log_keys, log_counts=log_counts,
                           log_ptr=n_carry, stats=stats)
 
 
 def _stage(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
            ) -> DeviceTableState:
-    """Append a deduped chunk to the MDB-L log (sequential write)."""
+    """Append a deduped chunk to the MDB-L log (sequential write).
+
+    Merges *repeatedly* until the chunk fits behind the carried log head:
+    a single forced merge may leave ``n_carry`` entries such that
+    ``log_ptr + chunk`` still exceeds the capacity, and
+    ``dynamic_update_slice`` would then clamp the start index and silently
+    overwrite carried entries. Callers guarantee ``chunk <= log_capacity``
+    (see :func:`update`), so the loop terminates: every merge shrinks the
+    per-block carry by ``max_updates_per_block``.
+    """
     chunk = keys.shape[0]
     cap = cfg.log_capacity
+    assert chunk <= cap, "update() must split chunks larger than the log"
 
-    def do_merge(st):
-        return _merge_now(cfg, st)
-
-    state = jax.lax.cond(state.log_ptr + chunk > cap, do_merge,
-                         lambda st: st, state)
+    state = jax.lax.while_loop(
+        lambda st: st.log_ptr + chunk > cap,
+        lambda st: _merge_now(cfg, st),
+        state)
     log_keys = jax.lax.dynamic_update_slice(state.log_keys, keys,
                                             (state.log_ptr,))
     log_counts = jax.lax.dynamic_update_slice(state.log_counts, cnts,
@@ -177,6 +313,134 @@ def _stage(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
                           log_ptr=state.log_ptr + chunk, stats=stats)
 
 
+# ---------------------------------------------------------------------------
+# MDB: partitioned change segment
+# ---------------------------------------------------------------------------
+def _mdb_merge_partition(cfg: FlashTableConfig, state: DeviceTableState, p
+                         ) -> DeviceTableState:
+    """Drain change-segment partition ``p`` into its ``k`` data blocks.
+
+    The dirty set is exactly the partition's block range
+    ``[p*k, (p+1)*k)`` — the paper's §2.4 CS-block merge — so the merge
+    costs ``k`` tile loads + stores, never ``num_blocks``."""
+    pair = cfg.pair
+    k = cfg.blocks_per_partition
+    sk = jax.lax.dynamic_index_in_dim(state.log_keys, p, keepdims=False)
+    sc = jax.lax.dynamic_index_in_dim(state.log_counts, p, keepdims=False)
+    rows = jnp.where(sk != EMPTY, pair.s(sk) - p * k, k).astype(jnp.int32)
+    uk, uc, carry_k, carry_c, n_carried = hops.bucket_rows(
+        rows, sk, sc, k, cfg.max_updates_per_block)
+    dirty = (p * k + jnp.arange(k)).astype(jnp.int32)
+    nk, nc, spill_k, spill_c = hops.merge_dirty(
+        pair, state.keys, state.counts, dirty, uk, uc, cfg.interpret)
+    state = state._replace(keys=nk, counts=nc)
+    state = _append_overflow(state, spill_k, spill_c)
+    # carried updates stay staged at the head of the partition
+    new_k, new_c, n_carry = _compact(carry_k, carry_c)
+    log_keys = jax.lax.dynamic_update_index_in_dim(
+        state.log_keys, new_k, p, 0)
+    log_counts = jax.lax.dynamic_update_index_in_dim(
+        state.log_counts, new_c, p, 0)
+    stats = state.stats._replace(
+        tile_loads=state.stats.tile_loads + k,
+        tile_stores=state.stats.tile_stores + k,
+        merges=state.stats.merges + 1,
+        carried=state.stats.carried + n_carried)
+    return state._replace(log_keys=log_keys, log_counts=log_counts,
+                          log_ptr=state.log_ptr.at[p].set(n_carry),
+                          stats=stats)
+
+
+def _mdb_merge_where(cfg: FlashTableConfig, state: DeviceTableState, mask
+                     ) -> DeviceTableState:
+    """Merge every partition whose ``mask`` entry is set."""
+    def body(p, st):
+        return jax.lax.cond(mask[p],
+                            lambda s: _mdb_merge_partition(cfg, s, p),
+                            lambda s: s, st)
+    return jax.lax.fori_loop(0, cfg.cs_partitions, body, state)
+
+
+def _mdb_partition_of(cfg: FlashTableConfig, keys):
+    """Partition id per key; invalid keys map to the sentinel P."""
+    P = cfg.cs_partitions
+    return jnp.where(keys != EMPTY,
+                     cfg.pair.s(keys) // cfg.blocks_per_partition,
+                     P).astype(jnp.int32)
+
+
+def _mdb_scatter(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts):
+    """Append a deduped chunk into its partitions (semi-random page writes).
+
+    Returns (state, rest_keys, rest_counts): entries whose partition was
+    full are *not* staged and come back EMPTY-compacted for the caller to
+    retry after a merge."""
+    P = cfg.cs_partitions
+    part_cap = cfg.partition_capacity
+    (U,) = keys.shape
+    part = _mdb_partition_of(cfg, keys)
+    order = jnp.argsort(part, stable=True)
+    sk, sc, sp = keys[order], cnts[order], part[order]
+    start = jnp.searchsorted(sp, jnp.arange(P + 1, dtype=sp.dtype))
+    rank = jnp.arange(U, dtype=jnp.int32) - start[jnp.clip(sp, 0, P)]
+    pos = state.log_ptr[jnp.clip(sp, 0, P - 1)] + rank
+    fits = (sp < P) & (pos < part_cap)
+    row = jnp.where(fits, sp, P)
+    col = jnp.where(fits, pos, 0)
+    log_keys = state.log_keys.at[row, col].set(sk, mode="drop")
+    log_counts = state.log_counts.at[row, col].set(sc, mode="drop")
+    n_fit = jnp.zeros((P,), jnp.int32).at[row].add(fits.astype(jnp.int32),
+                                                   mode="drop")
+    rest = (sp < P) & ~fits
+    rest_k = jnp.where(rest, sk, EMPTY)
+    rest_c = jnp.where(rest, sc, 0)
+    stats = state.stats._replace(
+        staged_entries=state.stats.staged_entries
+        + fits.sum(dtype=jnp.int32))
+    state = state._replace(log_keys=log_keys, log_counts=log_counts,
+                           log_ptr=state.log_ptr + n_fit, stats=stats)
+    return state, rest_k, rest_c
+
+
+def _mdb_update(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
+                ) -> DeviceTableState:
+    """MDB (§2.4): stage into per-partition buffers; a partition that
+    cannot fit the incoming entries is drained first through its k-block
+    dirty merge.
+
+    Like the MDB-L stage path, draining loops until everything fits: a
+    merge can leave carry at the partition head, so under hot-block
+    pressure one drain may not make room for the whole chunk. Callers
+    guarantee ``chunk <= partition_capacity`` (see :func:`update`) and
+    every drain strictly shrinks a non-empty partition's staged count, so
+    the loop terminates with no counts dropped."""
+    P = cfg.cs_partitions
+    part = _mdb_partition_of(cfg, keys)
+    n_inc = jnp.zeros((P,), jnp.int32).at[part].add(
+        (keys != EMPTY).astype(jnp.int32), mode="drop")
+    state = _mdb_merge_where(
+        cfg, state, state.log_ptr + n_inc > cfg.partition_capacity)
+    state, rest_k, rest_c = _mdb_scatter(cfg, state, keys, cnts)
+
+    def cond(t):
+        return (t[1] != EMPTY).any()
+
+    def body(t):
+        st, rk, rc = t
+        n_rest = jnp.zeros((P,), jnp.int32).at[_mdb_partition_of(cfg, rk)
+                                               ].add(
+            (rk != EMPTY).astype(jnp.int32), mode="drop")
+        st = _mdb_merge_where(cfg, st, n_rest > 0)
+        return _mdb_scatter(cfg, st, rk, rc)
+
+    state, _, _ = jax.lax.while_loop(cond, body, (state, rest_k, rest_c))
+    return state._replace(
+        stats=state.stats._replace(stages=state.stats.stages + 1))
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnums=0)
 def update(cfg: FlashTableConfig, state: DeviceTableState, tokens,
            deltas: Optional[jax.Array] = None) -> DeviceTableState:
@@ -187,23 +451,20 @@ def update(cfg: FlashTableConfig, state: DeviceTableState, tokens,
     else:
         keys, cnts = accumulate_deltas(tokens, deltas.astype(jnp.int32))
     if cfg.scheme == "MB":
-        # no change segment: bucket + merge on every flush (paper's MB)
-        pair = cfg.pair
-        uk, uc, carry_k, carry_c, _ = hops.bucket_updates(
-            pair, keys, cnts, cfg.max_updates_per_block)
-        nk, nc, spill_k, spill_c = hops.merge(
-            pair, state.keys, state.counts, uk, uc, cfg.interpret)
-        state = state._replace(keys=nk, counts=nc)
-        state = _append_overflow(state, spill_k, spill_c)
-        n_b = cfg.num_blocks
-        stats = state.stats._replace(
-            tile_loads=state.stats.tile_loads + n_b,
-            tile_stores=state.stats.tile_stores + n_b,
-            merges=state.stats.merges + 1)
-        return state._replace(stats=stats)
-    if cfg.scheme == "MDB-L":
-        return _stage(cfg, state, keys, cnts)
-    raise ValueError(f"unknown scheme {cfg.scheme}")
+        return _mb_update(cfg, state, keys, cnts)
+    if cfg.scheme == "MDB":
+        step = cfg.partition_capacity
+        stage_fn = _mdb_update
+    else:  # MDB-L
+        step = cfg.log_capacity
+        stage_fn = _stage
+    # oversized chunks can never fit a (drained) change segment in one
+    # piece — split them statically so staging always makes progress.
+    if keys.shape[0] <= step:
+        return stage_fn(cfg, state, keys, cnts)
+    for i in range(0, keys.shape[0], step):
+        state = stage_fn(cfg, state, keys[i:i + step], cnts[i:i + step])
+    return state
 
 
 @functools.partial(jax.jit, static_argnums=0)
@@ -211,7 +472,11 @@ def flush(cfg: FlashTableConfig, state: DeviceTableState) -> DeviceTableState:
     """Force a merge of any staged state (end-of-stream / checkpoint)."""
     if cfg.scheme == "MB":
         return state
-    return _merge_now(cfg, state)
+    if cfg.scheme == "MDB":
+        return _mdb_merge_where(cfg, state, state.log_ptr > 0)
+    return jax.lax.cond(state.log_ptr > 0,
+                        lambda st: _merge_now(cfg, st),
+                        lambda st: st, state)
 
 
 def _scan_segment(seg_keys, seg_counts, q, chunk: int = 1024):
@@ -238,7 +503,9 @@ def lookup(cfg: FlashTableConfig, state: DeviceTableState, q_keys
     q = q_keys.astype(jnp.int32)
     cnt, dist = hops.query_sorted(cfg.pair, state.keys, state.counts, q,
                                   cfg.interpret)
-    cnt = cnt + _scan_segment(state.log_keys, state.log_counts, q)
+    if cfg.scheme != "MB":  # MB has no change segment to consolidate
+        cnt = cnt + _scan_segment(state.log_keys.reshape(-1),
+                                  state.log_counts.reshape(-1), q)
     cnt = cnt + _scan_segment(state.ov_keys, state.ov_counts, q)
     return cnt, dist
 

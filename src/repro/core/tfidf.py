@@ -9,6 +9,14 @@ Two counting tables are maintained while streaming a corpus:
 
 Any of the paper's schemes (MB / MDB / MDB-L / naive) can back either table;
 the I/O ledgers of the tables are what the paper's Figures 3–5 measure.
+
+Two backends expose the same scheme landscape:
+
+* ``backend="sim"``    — the event-level NumPy simulator (exact SSD cost
+  ledger; the paper's measurement harness).
+* ``backend="device"`` — the JAX/Pallas device table (``core.table_jax``;
+  wear accounted as ``tile_stores``), for sim-vs-device comparisons of
+  MB / MDB / MDB-L on one workload.
 """
 from __future__ import annotations
 
@@ -19,6 +27,75 @@ import numpy as np
 
 from .flash_model import TableGeometry
 from .table_sim import FlashHashTableBase, make_table
+
+
+class DeviceTableAdapter:
+    """``table_sim``-compatible facade over the device table.
+
+    Wraps :mod:`core.table_jax` state behind the small surface the TF-IDF
+    pipeline uses (``insert_batch`` / ``query`` / ``finalize``), so the
+    same workload can be driven through the on-device MB / MDB / MDB-L
+    implementations. ``wear()`` exposes the device stats whose
+    ``tile_stores`` field is the simulator ledger's clean-count analogue.
+    """
+
+    def __init__(self, cfg, chunk: int = 4096):
+        import jax.numpy as jnp  # deferred: the sim backend stays jax-free
+
+        from . import table_jax as tj
+        self._jnp = jnp
+        self._tj = tj
+        self.cfg = cfg
+        self.scheme = cfg.scheme
+        self.state = tj.init(cfg)
+        self.chunk = int(chunk)
+
+    def insert_batch(self, keys: np.ndarray,
+                     deltas: Optional[np.ndarray] = None,
+                     chunk: Optional[int] = None) -> None:
+        jnp, tj = self._jnp, self._tj
+        keys = np.asarray(keys).reshape(-1)
+        step = int(chunk or self.chunk)
+        for i in range(0, len(keys), step):
+            part = keys[i:i + step]
+            pad = step - len(part)
+            if pad:  # fixed shapes → one compiled program per table
+                part = np.concatenate(
+                    [part, np.full(pad, tj.EMPTY, part.dtype)])
+            t = jnp.asarray(part, jnp.int32)
+            if deltas is None:
+                self.state = tj.update(self.cfg, self.state, t)
+            else:
+                d = deltas[i:i + step]
+                if pad:
+                    d = np.concatenate([d, np.zeros(pad, d.dtype)])
+                self.state = tj.update(self.cfg, self.state, t,
+                                       jnp.asarray(d, jnp.int32))
+
+    def query(self, key: int) -> int:
+        jnp, tj = self._jnp, self._tj
+        cnt, _ = tj.lookup(self.cfg, self.state,
+                           jnp.asarray([int(key)], jnp.int32))
+        return int(cnt[0])
+
+    # the device table has no separate uncosted path; counts are exact
+    logical_count = query
+
+    def finalize(self) -> None:
+        self.state = self._tj.flush(self.cfg, self.state)
+
+    def wear(self) -> Dict[str, int]:
+        s = self.state.stats
+        return {f: int(getattr(s, f)) for f in s._fields}
+
+
+def make_device_table(scheme: str, q_log2: int = 14, r_log2: int = 9,
+                      **kw) -> DeviceTableAdapter:
+    """Device-backed twin of :func:`table_sim.make_table`."""
+    from . import table_jax as tj
+    cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2, scheme=scheme,
+                              **kw)
+    return DeviceTableAdapter(cfg)
 
 
 def tokenize(text: str) -> List[str]:
@@ -41,12 +118,20 @@ class TfIdfPipeline:
 
     def __init__(self, geom: TableGeometry, scheme: str = "MDB-L",
                  ram_buffer_pct: float = 5.0, change_segment_pct: float = 12.5,
-                 track_df: bool = True):
-        self.term_table: FlashHashTableBase = make_table(
-            scheme, geom, ram_buffer_pct, change_segment_pct)
-        self.doc_table: Optional[FlashHashTableBase] = (
-            make_table(scheme, geom, ram_buffer_pct, change_segment_pct)
-            if track_df else None)
+                 track_df: bool = True, backend: str = "sim",
+                 q_log2: int = 14, r_log2: int = 9):
+        if backend == "sim":
+            mk = lambda: make_table(scheme, geom, ram_buffer_pct,
+                                    change_segment_pct)
+        elif backend == "device":
+            if scheme == "naive":
+                raise ValueError("the device table has no naive scheme")
+            mk = lambda: make_device_table(scheme, q_log2, r_log2)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self.term_table = mk()
+        self.doc_table = mk() if track_df else None
         self.num_docs = 0
         self.total_tokens = 0
 

@@ -33,10 +33,19 @@ class CorpusStats:
 
     @classmethod
     def create(cls, q_log2: int = 18, r_log2: int = 10,
-               scheme: str = "MDB-L") -> "CorpusStats":
+               scheme: str = "MDB-L", **table_kw) -> "CorpusStats":
+        """Any device scheme (MB / MDB / MDB-L) backs the stats engine;
+        ``table_kw`` forwards change-segment knobs (``log_capacity``,
+        ``cs_partitions``, ...) to :class:`tj.FlashTableConfig`."""
         cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2,
-                                  scheme=scheme)
+                                  scheme=scheme, **table_kw)
         return cls(cfg=cfg, state=tj.init(cfg))
+
+    def wear(self) -> Dict[str, int]:
+        """Device wear/traffic counters (``tile_stores`` = paper cleans);
+        includes ``dropped``/``carried`` so capacity losses are visible."""
+        s = self.state.stats
+        return {f: int(getattr(s, f)) for f in s._fields}
 
     # -- ingestion ----------------------------------------------------------
     def ingest(self, tokens: np.ndarray) -> None:

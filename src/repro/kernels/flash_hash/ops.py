@@ -2,11 +2,15 @@
 
 Adds the outside-the-kernel plumbing the paper's schemes need:
 
-* ``bucket_updates`` — RAM-buffer drain: sort staged updates by destination
-  block (the secondary hash ``s``) and pack them into the dense
-  ``(n_b, max_u)`` per-block layout the merge kernel tiles over. Updates
-  beyond a block's ``max_u`` capacity are *carried over* (returned, stay
-  staged) — the deferred-update discipline that bounds VMEM per tile.
+* ``bucket_rows`` — generic drain: pack staged updates into the dense
+  ``(n_rows, max_u)`` layout the merge kernels tile over, given an
+  arbitrary destination-row assignment (block id for a full merge, grid
+  position for a dirty-permutation merge, partition-local offset for an
+  MDB partition drain). Updates beyond a row's ``max_u`` capacity are
+  *carried over* (returned, stay staged) — the deferred-update discipline
+  that bounds VMEM per tile.
+* ``bucket_updates`` — RAM-buffer drain: ``bucket_rows`` with rows =
+  destination block (the secondary hash ``s``).
 * ``accumulate`` — the TPU-native RAM buffer: sort + segment-sum dedup of a
   token batch into (unique key, count) pairs (open-hash pre-aggregation).
 * ``merge`` / ``merge_dirty`` / ``query`` — kernel entry points.
@@ -25,37 +29,56 @@ from . import kernel as _k
 EMPTY = _k.EMPTY
 
 
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def bucket_rows(rows, keys, counts, n_rows: int, max_u: int):
+    """Pack (keys, counts) updates into (n_rows, max_u) per-row buffers.
+
+    ``rows`` is the destination row per update — for a full-table merge it
+    is the block id ``s(key)``; for a dirty-block merge it is the key's
+    position in the dirty-block list; for an MDB partition drain it is the
+    block offset within the partition. Entries with ``rows`` outside
+    ``[0, n_rows)`` or ``key == EMPTY`` are padding and dropped.
+
+    Returns (upd_keys, upd_counts, carry_keys, carry_counts, n_carried):
+    carry_* hold updates that exceeded a row's ``max_u`` capacity (sparse,
+    same (U,) layout, EMPTY-padded) and must stay staged.
+    """
+    (U,) = keys.shape
+    valid = (keys != EMPTY) & (rows >= 0) & (rows < n_rows)
+    rw = jnp.where(valid, rows, n_rows).astype(jnp.int32)
+    order = jnp.argsort(rw, stable=True)
+    sk = keys[order]
+    sc = counts[order]
+    sr = rw[order]
+    # position within the row's group
+    start = jnp.searchsorted(sr, jnp.arange(n_rows + 1, dtype=sr.dtype))
+    pos_in_r = jnp.arange(U, dtype=jnp.int32) - start[jnp.clip(sr, 0, n_rows)]
+    keep = (sr < n_rows) & (pos_in_r < max_u)
+    row = jnp.where(keep, sr, n_rows)  # out-of-bounds rows get dropped
+    upd_keys = jnp.full((n_rows, max_u), EMPTY, dtype=keys.dtype)
+    upd_counts = jnp.zeros((n_rows, max_u), dtype=counts.dtype)
+    col = jnp.where(keep, pos_in_r, 0)
+    upd_keys = upd_keys.at[row, col].set(sk, mode="drop")
+    upd_counts = upd_counts.at[row, col].set(sc, mode="drop")
+    carried = (sr < n_rows) & ~keep
+    carry_keys = jnp.where(carried, sk, EMPTY)
+    carry_counts = jnp.where(carried, sc, 0)
+    return (upd_keys, upd_counts, carry_keys, carry_counts,
+            carried.sum(dtype=jnp.int32))
+
+
 @functools.partial(jax.jit, static_argnums=(0, 3))
 def bucket_updates(pair: Pow2Hash, keys, counts, max_u: int):
     """Pack (keys, counts) updates into (n_b, max_u) per-block buffers.
 
     keys/counts: (U,) int32; EMPTY-keyed entries are padding and dropped.
-    Returns (upd_keys, upd_counts, carry_keys, carry_counts, n_dropped):
+    Returns (upd_keys, upd_counts, carry_keys, carry_counts, n_carried):
     carry_* hold updates that exceeded a block's capacity (sparse, same
     (U,) layout, EMPTY-padded).
     """
     n_b = pair.num_slots
-    (U,) = keys.shape
-    valid = keys != EMPTY
-    blk = jnp.where(valid, pair.s(keys), n_b).astype(jnp.int32)
-    order = jnp.argsort(blk, stable=True)
-    sk = keys[order]
-    sc = counts[order]
-    sb = blk[order]
-    # position within the block's group
-    start = jnp.searchsorted(sb, jnp.arange(n_b + 1, dtype=sb.dtype))
-    pos_in_b = jnp.arange(U, dtype=jnp.int32) - start[jnp.clip(sb, 0, n_b)]
-    keep = (sb < n_b) & (pos_in_b < max_u)
-    row = jnp.where(keep, sb, n_b)  # out-of-bounds rows get dropped
-    upd_keys = jnp.full((n_b, max_u), EMPTY, dtype=keys.dtype)
-    upd_counts = jnp.zeros((n_b, max_u), dtype=counts.dtype)
-    col = jnp.where(keep, pos_in_b, 0)
-    upd_keys = upd_keys.at[row, col].set(sk, mode="drop")
-    upd_counts = upd_counts.at[row, col].set(sc, mode="drop")
-    dropped = (sb < n_b) & ~keep
-    carry_keys = jnp.where(dropped, sk, EMPTY)
-    carry_counts = jnp.where(dropped, sc, 0)
-    return upd_keys, upd_counts, carry_keys, carry_counts, dropped.sum()
+    rows = jnp.where(keys != EMPTY, pair.s(keys), n_b).astype(jnp.int32)
+    return bucket_rows(rows, keys, counts, n_b, max_u)
 
 
 @jax.jit

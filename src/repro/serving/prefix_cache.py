@@ -11,7 +11,8 @@ to 0 are evictable.
 At cluster scale the value store is paged HBM blocks (vLLM-style) sharded
 like the KV cache; in this reference implementation the store is a host
 dict of cache pytrees, while the *refcount* path runs on-device through
-``core.table_jax`` (MDB-L policy) — the part the paper contributes.
+``core.table_jax`` (any of the paper's schemes; MDB-L by default) — the
+part the paper contributes.
 """
 from __future__ import annotations
 
@@ -42,12 +43,14 @@ class _Block:
 
 class PrefixKVCache:
     def __init__(self, block_tokens: int = 16, capacity_blocks: int = 256,
-                 q_log2: int = 12, r_log2: int = 8):
+                 q_log2: int = 12, r_log2: int = 8, scheme: str = "MDB-L",
+                 cs_partitions: int = 4):
         self.block_tokens = block_tokens
         self.capacity = capacity_blocks
         self.cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2,
-                                       scheme="MDB-L",
+                                       scheme=scheme,
                                        log_capacity=1 << 10,
+                                       cs_partitions=cs_partitions,
                                        max_updates_per_block=1 << 7,
                                        overflow_capacity=1 << 9)
         self.refs = tj.init(self.cfg)
@@ -156,4 +159,7 @@ class PrefixKVCache:
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "resident": len(self.store),
-                "tile_stores": int(self.refs.stats.tile_stores)}
+                "scheme": self.cfg.scheme,
+                "tile_stores": int(self.refs.stats.tile_stores),
+                "dropped": int(self.refs.stats.dropped),
+                "carried": int(self.refs.stats.carried)}

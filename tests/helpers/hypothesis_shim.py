@@ -1,0 +1,98 @@
+"""Hypothesis, or a deterministic stand-in when it is not installed.
+
+The tier-1 environment does not guarantee ``hypothesis``; property tests
+must still collect and run. Import ``given/settings/strategies`` from this
+module instead of ``hypothesis`` — when the real library is present it is
+used verbatim, otherwise a tiny deterministic fallback generates a fixed
+set of examples per strategy (boundary values first, then seeded pseudo-
+random draws). The fallback covers exactly the strategy surface the test
+suite uses: ``integers``, ``tuples``, ``lists``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 50
+
+    class _Strategy:
+        def example(self, rng: random.Random, i: int):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return rng.randint(self.lo, self.hi)
+
+    class _Tuples(_Strategy):
+        def __init__(self, *elems):
+            self.elems = elems
+
+        def example(self, rng, i):
+            return tuple(e.example(rng, i) for e in self.elems)
+
+    class _Lists(_Strategy):
+        def __init__(self, elem, min_size=0, max_size=10):
+            self.elem = elem
+            self.min_size = min_size
+            self.max_size = max_size
+
+        def example(self, rng, i):
+            if i == 0:
+                n = self.min_size
+            elif i == 1:
+                n = self.max_size
+            else:
+                n = rng.randint(self.min_size, self.max_size)
+            return [self.elem.example(rng, i) for _ in range(n)]
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def tuples(*elems: _Strategy) -> _Strategy:
+            return _Tuples(*elems)
+
+        @staticmethod
+        def lists(elem: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            return _Lists(elem, min_size, max_size)
+
+    strategies = _StrategiesModule()
+
+    def given(*strats: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                for i in range(_FALLBACK_EXAMPLES):
+                    fn(*args, *(s.example(rng, i) for s in strats), **kwargs)
+
+            # strategy-bound params must not look like pytest fixtures
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            n_bound = len(strats)
+            wrapper.__signature__ = sig.replace(
+                parameters=params[:len(params) - n_bound])
+            return wrapper
+        return deco
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+        return deco

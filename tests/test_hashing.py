@@ -1,7 +1,8 @@
 """Unit + property tests for the two-level hash pair (paper §2, eq. 1-3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from helpers.hypothesis_shim import given, settings, strategies as st
 
 from repro.core.hashing import HashPair, Pow2Hash, hash_pair_for
 

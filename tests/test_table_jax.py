@@ -5,13 +5,19 @@ import pytest
 from collections import Counter
 
 from repro.core import table_jax as tj
+from repro.core.hashing import Pow2Hash
+from repro.kernels.flash_hash import ops, ref
+
+SCHEMES = ["MB", "MDB", "MDB-L"]
 
 
-def _cfg(scheme):
-    return tj.FlashTableConfig(q_log2=12, r_log2=8, scheme=scheme,
-                               log_capacity=1 << 12,
-                               max_updates_per_block=1 << 8,
-                               overflow_capacity=1 << 10)
+def _cfg(scheme, **overrides):
+    kw = dict(q_log2=12, r_log2=8, scheme=scheme,
+              log_capacity=1 << 12, cs_partitions=4,
+              max_updates_per_block=1 << 8,
+              overflow_capacity=1 << 10)
+    kw.update(overrides)
+    return tj.FlashTableConfig(**kw)
 
 
 def _pad(arr, n, fill):
@@ -20,7 +26,18 @@ def _pad(arr, n, fill):
     return jnp.asarray(out, jnp.int32)
 
 
-@pytest.mark.parametrize("scheme", ["MB", "MDB-L"])
+def _same_block_keys(pair, block, n, lo=0):
+    """n distinct keys whose secondary hash lands in ``block``."""
+    out = []
+    x = lo
+    while len(out) < n:
+        if int(pair.s(x)) == block:
+            out.append(x)
+        x += 1
+    return np.asarray(out, dtype=np.int64)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
 def test_counts_vs_counter(scheme):
     cfg = _cfg(scheme)
     st = tj.init(cfg)
@@ -38,8 +55,9 @@ def test_counts_vs_counter(scheme):
     assert int(st.stats.dropped) == 0
 
 
-def test_deletion_by_decrement():
-    cfg = _cfg("MDB-L")
+@pytest.mark.parametrize("scheme", ["MDB", "MDB-L"])
+def test_deletion_by_decrement(scheme):
+    cfg = _cfg(scheme)
     st = tj.init(cfg)
     toks = jnp.asarray([10, 10, 10, 20], jnp.int32)
     st = tj.update(cfg, st, toks)
@@ -50,31 +68,171 @@ def test_deletion_by_decrement():
     assert list(map(int, cnt)) == [2, 0, 0, 2]
 
 
-def test_query_sees_staged_log():
+@pytest.mark.parametrize("scheme", ["MDB", "MDB-L"])
+def test_query_sees_staged_log(scheme):
     """Paper §2.7: queries consolidate data segment + change segment."""
-    cfg = _cfg("MDB-L")
+    cfg = _cfg(scheme)
     st = tj.init(cfg)
     st = tj.update(cfg, st, jnp.asarray([7, 7, 8], jnp.int32))
-    # no flush: counts still in the log
+    # no flush: counts still in the change segment
     assert int(st.stats.merges) == 0
     cnt, _ = tj.lookup(cfg, st, jnp.asarray([7, 8, 9, 7], jnp.int32))
     assert list(map(int, cnt)) == [2, 1, 0, 2]
 
 
-def test_mdbl_fewer_tile_rewrites_than_mb():
-    """The paper's clean-count result, on-device: MDB-L buffers in the log
-    so the data segment is rewritten ~log_cap/flush_size× less often."""
+def test_buffered_schemes_fewer_tile_rewrites_than_mb():
+    """The paper's headline clean-count claim, on-device: on a skewed
+    (zipf) workload both change-segment schemes rewrite data-segment tiles
+    far less often than MB, which merges on every update."""
     rng = np.random.default_rng(1)
-    toks = rng.integers(0, 1000, size=16384)
+    toks = (rng.zipf(1.3, size=16384) % 1500).astype(np.int64)
     stores = {}
-    for scheme in ["MB", "MDB-L"]:
+    for scheme in SCHEMES:
         cfg = _cfg(scheme)
         st = tj.init(cfg)
         for i in range(0, len(toks), 1024):
             st = tj.update(cfg, st, jnp.asarray(toks[i:i + 1024], jnp.int32))
         st = tj.flush(cfg, st)
         stores[scheme] = int(st.stats.tile_stores)
+        assert int(st.stats.dropped) == 0
+    assert stores["MDB"] < stores["MB"]
+    assert stores["MDB-L"] < stores["MB"]
     assert stores["MB"] > 2 * stores["MDB-L"]
+
+
+def test_merge_records_only_dirty_tiles():
+    """A merge whose staged keys hit one block must not charge
+    ``num_blocks`` tile stores (the dirty-block path, not full-grid)."""
+    cfg = _cfg("MDB-L")
+    pair = cfg.pair
+    keys = _same_block_keys(pair, 3, 20)
+    st = tj.init(cfg)
+    st = tj.update(cfg, st, jnp.asarray(keys, jnp.int32))
+    st = tj.flush(cfg, st)
+    assert int(st.stats.merges) == 1
+    assert int(st.stats.tile_stores) == 1          # one dirty block
+    assert int(st.stats.tile_loads) == 1
+    cnt, _ = tj.lookup(cfg, st, jnp.asarray(keys[:16], jnp.int32))
+    assert all(int(c) == 1 for c in cnt)
+
+
+def test_mdb_partition_merge_stores_exactly_k():
+    """Acceptance: filling one CS partition drains only its k blocks."""
+    cfg = _cfg("MDB", q_log2=10, r_log2=6, log_capacity=256,
+               cs_partitions=4, max_updates_per_block=64,
+               overflow_capacity=256)
+    k = cfg.blocks_per_partition
+    part_cap = cfg.partition_capacity
+    keys = _same_block_keys(cfg.pair, 1, part_cap + 8)  # block 1 → partition 0
+    st = tj.init(cfg)
+    st = tj.update(cfg, st, jnp.asarray(keys[:part_cap - 4], jnp.int32))
+    assert int(st.stats.merges) == 0
+    before = int(st.stats.tile_stores)
+    st = tj.update(cfg, st, jnp.asarray(keys[part_cap - 4:], jnp.int32))
+    assert int(st.stats.merges) == 1
+    assert int(st.stats.tile_stores) - before == k
+    cnt, _ = tj.lookup(cfg, st, jnp.asarray(keys, jnp.int32))
+    assert all(int(c) == 1 for c in cnt)
+    assert int(st.stats.dropped) == 0
+
+
+def test_merge_dirty_matches_ref():
+    """ops.merge_dirty over a dirty-first block permutation must agree
+    with the pure-jnp oracle's full-grid merge."""
+    pair = Pow2Hash(q_log2=10, r_log2=7)
+    n_b, r = pair.num_slots, pair.r
+    rng = np.random.default_rng(2)
+    tk = jnp.full((n_b, r), ref.EMPTY, jnp.int32)
+    tc = jnp.zeros((n_b, r), jnp.int32)
+    toks = jnp.asarray(rng.integers(0, 500, size=512), jnp.int32)
+    keys, cnts = ops.accumulate(toks)
+    # oracle path: bucket by block, full-grid reference merge
+    uk, uc, _, _, _ = ops.bucket_updates(pair, keys, cnts, 64)
+    want_k, want_c, _, _ = ref.merge_ref(pair, tk, tc, uk, uc)
+    # dirty path: dirty-first permutation grid, rows in grid order
+    valid = keys != ref.EMPTY
+    blk = jnp.where(valid, pair.s(keys), 0).astype(jnp.int32)
+    dirty = jnp.zeros((n_b,), jnp.int32).at[blk].add(
+        valid.astype(jnp.int32)) > 0
+    perm = jnp.argsort(jnp.where(dirty, 0, 1), stable=True).astype(jnp.int32)
+    inv = jnp.zeros((n_b,), jnp.int32).at[perm].set(
+        jnp.arange(n_b, dtype=jnp.int32))
+    rows = jnp.where(valid, inv[blk], n_b).astype(jnp.int32)
+    duk, duc, _, _, _ = ops.bucket_rows(rows, keys, cnts, n_b, 64)
+    got_k, got_c, _, _ = ops.merge_dirty(pair, tk, tc, perm, duk, duc)
+    np.testing.assert_array_equal(np.asarray(want_k), np.asarray(got_k))
+    np.testing.assert_array_equal(np.asarray(want_c), np.asarray(got_c))
+
+
+def test_stage_oversized_chunk_keeps_carry():
+    """Regression (log corruption): after a forced merge leaves n_carry
+    entries at the log head, a chunk with ``chunk > log_capacity -
+    n_carry`` used to be written through a clamped dynamic_update_slice,
+    silently overwriting the carried entries. The stage path must instead
+    merge repeatedly until the chunk fits."""
+    cfg = _cfg("MDB-L", q_log2=8, r_log2=4, log_capacity=32,
+               max_updates_per_block=4, overflow_capacity=64)
+    pair = cfg.pair
+    keys = _same_block_keys(pair, 0, 44)  # all hash to block 0 → heavy carry
+    st = tj.init(cfg)
+    st = tj.update(cfg, st, jnp.asarray(keys[:28], jnp.int32))
+    assert int(st.stats.merges) == 0 and int(st.log_ptr) == 28
+    # 16 more: forces a merge; max_u=4 leaves n_carry=24 > 32-16, so the
+    # old single-merge path would clamp and clobber 8 carried entries.
+    st = tj.update(cfg, st, jnp.asarray(keys[28:44], jnp.int32))
+    assert int(st.stats.merges) >= 2  # merged repeatedly until it fit
+    st = tj.flush(cfg, st)
+    cnt, _ = tj.lookup(cfg, st, jnp.asarray(keys, jnp.int32))
+    assert list(map(int, cnt)) == [1] * 44
+    assert int(st.stats.dropped) == 0
+
+
+def test_mdb_hot_block_pressure_drains_without_loss():
+    """Regression: under hot-block pressure a partition drain can leave
+    carry such that a chunk still does not fit; the stage path must keep
+    draining (like MDB-L's loop-until-fits), not drop counts after one
+    bounded retry."""
+    cfg = _cfg("MDB", q_log2=8, r_log2=4, log_capacity=32,
+               cs_partitions=4, max_updates_per_block=2,
+               overflow_capacity=512)
+    keys = _same_block_keys(cfg.pair, 0, 40)  # all → partition 0
+    st = tj.init(cfg)
+    for i in range(0, 40, 8):
+        st = tj.update(cfg, st, jnp.asarray(keys[i:i + 8], jnp.int32))
+    st = tj.flush(cfg, st)
+    cnt, _ = tj.lookup(cfg, st, jnp.asarray(keys, jnp.int32))
+    assert list(map(int, cnt)) == [1] * 40
+    assert int(st.stats.dropped) == 0
+
+
+def test_empty_flush_is_free():
+    """flush() with nothing staged must not run (or count) a merge."""
+    for scheme in SCHEMES:
+        cfg = _cfg(scheme)
+        st = tj.flush(cfg, tj.init(cfg))
+        assert int(st.stats.merges) == 0, scheme
+        assert int(st.stats.tile_stores) == 0, scheme
+
+
+def test_mb_carry_is_merged_not_dropped():
+    """Updates beyond a tile's max_u used to be silently discarded on the
+    MB path; they must be merged (and surfaced in stats.carried)."""
+    cfg = _cfg("MB", q_log2=8, r_log2=4, max_updates_per_block=4,
+               overflow_capacity=64)
+    keys = _same_block_keys(cfg.pair, 2, 12)
+    st = tj.init(cfg)
+    st = tj.update(cfg, st, jnp.asarray(keys, jnp.int32))
+    assert int(st.stats.carried) > 0      # capacity pressure is observable
+    cnt, _ = tj.lookup(cfg, st, jnp.asarray(keys, jnp.int32))
+    assert list(map(int, cnt)) == [1] * 12
+    assert int(st.stats.dropped) == 0
+
+
+def test_invalid_scheme_rejected():
+    with pytest.raises(ValueError):
+        tj.FlashTableConfig(scheme="MDB-X")
+    with pytest.raises(ValueError):
+        tj.FlashTableConfig(scheme="MDB", cs_partitions=7)  # 7 ∤ 64
 
 
 def test_load_factor():

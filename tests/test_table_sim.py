@@ -3,7 +3,8 @@
 import numpy as np
 import pytest
 from collections import Counter
-from hypothesis import given, settings, strategies as st
+
+from helpers.hypothesis_shim import given, settings, strategies as st
 
 from repro.core import MLC1, TableGeometry, make_table
 

@@ -70,3 +70,27 @@ def test_tfidf_scores_and_keywords(pipe):
 
 def test_stopwords_rank_below_rare_words(pipe):
     assert pipe.idf("the") < pipe.idf("quantum")
+
+
+@pytest.mark.parametrize("scheme", ["MB", "MDB", "MDB-L"])
+def test_device_backend_matches_sim(scheme):
+    """Sim-vs-device: the same workload through table_sim and table_jax
+    must produce identical logical answers under every scheme."""
+    geom = TableGeometry(num_blocks=4, pages_per_block=8, entries_per_page=16)
+    sim = TfIdfPipeline(geom, scheme=scheme, ram_buffer_pct=10.0,
+                        change_segment_pct=25.0)
+    dev = TfIdfPipeline(geom, scheme=scheme, backend="device",
+                        q_log2=12, r_log2=8)
+    for d in DOCS:
+        sim.add_document(tokenize(d))
+        dev.add_document(tokenize(d))
+    sim.finalize()
+    dev.finalize()
+    _, tf_total, df = _oracle()
+    for t, c in tf_total.items():
+        assert dev.term_frequency(t) == c == sim.term_frequency(t)
+    for t, d in df.items():
+        assert abs(dev.idf(t) - math.log(len(DOCS) / d)) < 1e-9
+    wear = dev.term_table.wear()
+    assert wear["dropped"] == 0
+    assert wear["tile_stores"] > 0
