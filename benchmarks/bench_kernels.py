@@ -41,7 +41,7 @@ def run(rows):
 
     t_acc = _bench(ops.accumulate, toks)
     rows.append(("kernel/accumulate_16k", t_acc * 1e6,
-                 f"tokens=16384;dedup=sort+segsum"))
+                 "tokens=16384;dedup=sort+segsum"))
     t_ref = _bench(lambda: ref.merge_ref(pair, tk, tc, uk, uc))
     t_k = _bench(lambda: ops.merge(pair, tk, tc, uk, uc))
     tile_bytes = r * 8  # keys+counts int32
@@ -64,7 +64,7 @@ def run(rows):
     q = jnp.asarray(rng.integers(0, 1 << 20, size=2048), jnp.int32)
     t_q = _bench(lambda: ops.query_sorted(pair, mk, mc, q))
     rows.append(("kernel/query_2048_pallas_interpret", t_q * 1e6,
-                 f"queries=2048;tile_reuse=sorted"))
+                 "queries=2048;tile_reuse=sorted"))
     t_qr = _bench(lambda: ref.query_ref(pair, mk, mc, q))
     rows.append(("kernel/query_2048_ref_jnp", t_qr * 1e6, "oracle"))
     return rows

@@ -1,14 +1,31 @@
-"""Paper Figure 3: average query time.
+"""Paper Figure 3: average query time — plus the batched-regime rows.
 
 (a) vs change-segment size (RAM fixed 5%), (b) vs RAM buffer size (CS fixed
 12.5%), (c) across SSD configurations (RAM 5%, CS 12.5%) — update-intensive
 interleaved workload per §3.4.
+
+fig3dev (beyond paper): the same query axis on the *device* table, in
+both serving regimes — one jitted lookup per key (the pre-engine path)
+vs the batched query engine (dedup + fixed-shape chunks + one
+change-segment scan per chunk) — so Figure 3 reflects per-key and
+batched serving side by side.
 """
 from __future__ import annotations
 
-from .common import DEVICES, build_table, corpus, emit, run_interleaved_queries
+import time
+
+import numpy as np
+
+from .common import (DEVICES, build_table, corpus, emit,
+                     run_interleaved_queries, smoke)
 
 N_QUERIES = 4000
+
+
+def _n_queries() -> int:
+    """Sim-figure query count; reduced under --smoke (fig3dev keeps the
+    full 4000-key acceptance workload regardless)."""
+    return max(N_QUERIES // 16, 250) if smoke() else N_QUERIES
 
 
 def _avg_query_ms(table, dev) -> float:
@@ -20,7 +37,7 @@ def fig3a(tokens, rows, dataset):
     for cs in (50.0, 25.0, 12.5):
         for scheme in ("MB", "MDB", "MDB-L"):
             t = build_table(scheme, 5.0, cs)
-            run_interleaved_queries(t, tokens, N_QUERIES)
+            run_interleaved_queries(t, tokens, _n_queries())
             ms = _avg_query_ms(t, dev)
             rows.append((f"fig3a/{dataset}/{scheme}/cs={cs}", ms * 1000,
                          f"avg_query_ms={ms:.4f}"))
@@ -31,7 +48,7 @@ def fig3b(tokens, rows, dataset):
     for ram in (1.0, 2.0, 5.0, 10.0):
         for scheme in ("MB", "MDB", "MDB-L"):
             t = build_table(scheme, ram, 12.5)
-            run_interleaved_queries(t, tokens, N_QUERIES)
+            run_interleaved_queries(t, tokens, _n_queries())
             ms = _avg_query_ms(t, dev)
             rows.append((f"fig3b/{dataset}/{scheme}/ram={ram}", ms * 1000,
                          f"avg_query_ms={ms:.4f}"))
@@ -41,10 +58,61 @@ def fig3c(tokens, rows, dataset):
     for dev_name, dev in DEVICES.items():
         for scheme in ("MB", "MDB", "MDB-L"):
             t = build_table(scheme, 5.0, 12.5)
-            run_interleaved_queries(t, tokens, N_QUERIES)
+            run_interleaved_queries(t, tokens, _n_queries())
             ms = _avg_query_ms(t, dev)
             rows.append((f"fig3c/{dataset}/{scheme}/{dev_name}", ms * 1000,
                          f"avg_query_ms={ms:.4f}"))
+
+
+def fig3dev(rows):
+    """Per-key vs batched device queries — the PR-2 acceptance rows.
+
+    A 4000-key query workload against the on-device table (all three
+    schemes), answered (a) with one jitted ``lookup`` per key — exactly
+    the old ``DeviceTableAdapter.query`` loop — and (b) through the
+    batched query engine in a single ``query_batch`` call. The derived
+    column on the batched row records the throughput ratio.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import table_jax as tj
+    from repro.core.tfidf import make_device_table
+
+    n_q = 4000  # fixed: the acceptance workload, even under --smoke
+    rng = np.random.default_rng(7)
+    toks = corpus("wiki", 320_000)  # /smoke_scale inside corpus()
+    schemes = ("MDB-L",) if smoke() else ("MB", "MDB", "MDB-L")
+    for scheme in schemes:
+        t = make_device_table(scheme, q_log2=15, r_log2=9)
+        t.insert_batch(toks)
+        t.finalize()
+        uniq = np.unique(toks)
+        q_keys = rng.choice(uniq, size=n_q, replace=uniq.size < n_q)
+        # (a) per-key: one jitted lookup per key, batch shape (1,)
+        warm = jnp.asarray([int(q_keys[0])], jnp.int32)
+        int(tj.lookup(t.cfg, t.state, warm)[0][0])     # compile Q=1
+        t0 = time.time()
+        hits = 0
+        for k in q_keys:
+            cnt, _ = tj.lookup(t.cfg, t.state,
+                               jnp.asarray([int(k)], jnp.int32))
+            hits += int(cnt[0]) != 0
+        per_key = time.time() - t0
+        # (b) batched: one engine call, cold hot-key cache
+        t.query_batch(q_keys[:8])                      # compile chunk shape
+        t.engine.invalidate()
+        t0 = time.time()
+        out = t.query_batch(q_keys)
+        batched = time.time() - t0
+        assert int((out != 0).sum()) == hits           # identical answers
+        speedup = per_key / max(batched, 1e-9)
+        rows.append((f"fig3dev/{scheme}/per_key_{n_q}",
+                     per_key / n_q * 1e6,
+                     f"queries={n_q};path=lookup_per_key;found={hits}"))
+        rows.append((f"fig3dev/{scheme}/batched_{n_q}",
+                     batched / n_q * 1e6,
+                     f"queries={n_q};path=query_batch;"
+                     f"speedup_vs_per_key={speedup:.1f}"))
 
 
 def run(rows):
@@ -54,6 +122,7 @@ def run(rows):
         fig3b(tokens, rows, dataset)
         if dataset == "wiki":
             fig3c(tokens, rows, dataset)
+    fig3dev(rows)
     return rows
 
 

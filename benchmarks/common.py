@@ -16,7 +16,8 @@ import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core import DEVICES, TableGeometry, make_table  # noqa: E402
+from repro.core import TableGeometry, make_table  # noqa: E402
+from repro.core import DEVICES as DEVICES  # noqa: E402  (re-export)
 
 # 64 blocks × 32 pages × 64 entries = 131,072 entries ≈ 1MB of 8B pairs
 GEOM = TableGeometry(num_blocks=16, pages_per_block=128, entries_per_page=64)
@@ -24,12 +25,27 @@ GEOM = TableGeometry(num_blocks=16, pages_per_block=128, entries_per_page=64)
 WIKI_TOKENS = 1_000_000     # unique/total ≈ 7% (paper Wiki: 7.1%)
 MEME_TOKENS = 2_000_000     # unique/total ≈ 4% (paper Meme: 4.2%)
 
+# --smoke (CI bench-smoke job): shrink workloads by this factor so the
+# reduced suite finishes in a couple of minutes on one CPU core. Trends
+# stay within-suite comparable; absolute numbers are not the target.
+SMOKE_SCALE = 1
+
+
+def set_smoke(scale: int = 16) -> None:
+    global SMOKE_SCALE
+    SMOKE_SCALE = max(int(scale), 1)
+
+
+def smoke() -> bool:
+    return SMOKE_SCALE > 1
+
 
 def corpus(name: str, n_tokens: int | None = None) -> np.ndarray:
     rng = np.random.default_rng(42 if name == "wiki" else 1337)
-    n = n_tokens or (WIKI_TOKENS if name == "wiki" else MEME_TOKENS)
+    n = (n_tokens or (WIKI_TOKENS if name == "wiki" else MEME_TOKENS)
+         ) // SMOKE_SCALE
     a = 1.35 if name == "wiki" else 1.45
-    return (rng.zipf(a, size=n) % (1 << 22)).astype(np.int64)
+    return (rng.zipf(a, size=max(n, 1)) % (1 << 22)).astype(np.int64)
 
 
 def build_table(scheme: str, ram_pct: float, cs_pct: float):
@@ -74,3 +90,35 @@ def emit(rows, file=None):
     out = file or sys.stdout
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}", file=out, flush=True)
+
+
+def _parse_derived(derived: str) -> dict:
+    """Split a ``k=v;k=v;flag`` derived column into a JSON-able dict."""
+    out: dict = {}
+    for part in str(derived).split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+        else:
+            out[part] = True
+    return out
+
+
+def rows_to_json(rows, meta: dict | None = None) -> dict:
+    """Machine-readable twin of the CSV rows (``run.py --json``)."""
+    return {
+        "meta": meta or {},
+        "rows": [{"name": name, "us_per_call": round(float(us), 3),
+                  "derived": _parse_derived(derived),
+                  "derived_raw": str(derived)}
+                 for name, us, derived in rows],
+    }

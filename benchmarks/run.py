@@ -2,23 +2,33 @@
 
 Prints ``name,us_per_call,derived`` CSV rows:
   fig3*   — paper Figure 3 (query times)           bench_query_times
+  fig3dev — per-key vs batched device query engine bench_query_times
   fig4*   — paper Figure 4 + §3.5 naive (I/O cost) bench_io_costs
   fig5*   — paper Figure 5 (cleans)                bench_cleans
   table2* — paper Table 2 (op mix)                 bench_block_page_ops
   kernel* — Pallas flash-hash microbench           bench_kernels
   roofline* — dry-run-derived roofline terms       bench_roofline
 
-Run: ``PYTHONPATH=src python -m benchmarks.run [--only fig3,...]``
+Run: ``PYTHONPATH=src python -m benchmarks.run [--only fig3,...]
+[--smoke] [--json PATH]``
+
+``--json PATH`` additionally writes the rows as machine-readable JSON
+(name, us_per_call, parsed derived fields) — the artifact CI's
+bench-smoke job uploads, and the format of the committed
+``BENCH_PR2.json`` trajectory file. ``--smoke`` shrinks the workloads
+for a minutes-long CI run.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
 from . import (bench_block_page_ops, bench_cleans, bench_io_costs,
                bench_kernels, bench_query_times, bench_roofline)
-from .common import emit
+from .common import emit, rows_to_json, set_smoke
 
 SUITES = {
     "fig3": bench_query_times,
@@ -34,9 +44,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (default: all)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as machine-readable JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workloads (CI bench-smoke job)")
     args = ap.parse_args()
+    if args.smoke:
+        set_smoke()
     names = list(SUITES) if not args.only else args.only.split(",")
     rows = []
+    suite_secs = {}
     print("name,us_per_call,derived")
     for name in names:
         t0 = time.time()
@@ -44,8 +61,23 @@ def main() -> None:
         SUITES[name].run(suite_rows)
         emit(suite_rows)
         rows.extend(suite_rows)
+        suite_secs[name] = round(time.time() - t0, 1)
         print(f"# suite {name}: {len(suite_rows)} rows in "
-              f"{time.time() - t0:.1f}s", file=sys.stderr, flush=True)
+              f"{suite_secs[name]}s", file=sys.stderr, flush=True)
+    if args.json:
+        from .common import SMOKE_SCALE as scale  # set_smoke may have run
+        payload = rows_to_json(rows, meta={
+            "suites": names,
+            "suite_seconds": suite_secs,
+            "smoke_scale": scale,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+        })
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {len(rows)} rows to {args.json}",
+              file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ import shutil
 import threading
 import time
 from pathlib import Path
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np

@@ -19,8 +19,6 @@ the next flush (same deferred-update discipline as the tile merge).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

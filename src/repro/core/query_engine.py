@@ -1,0 +1,145 @@
+"""Host-side batched query engine for the device flash-hash table.
+
+The paper's query axis (§2.7, Figure 3) measures consolidation cost:
+every point query must combine the data segment, the change segment and
+the overflow region. Serving that one key at a time pays a full jitted
+dispatch — data-segment probe plus whole change-segment scan — per key.
+This engine is the batched front door every consumer (TF-IDF, corpus
+stats, the serving prefix cache) goes through instead:
+
+* **dedup before dispatch** — duplicate keys in a batch resolve to one
+  device probe (``np.unique``), then fan back out to their positions;
+* **fixed-shape padded chunks** — misses are EMPTY-padded up to
+  ``chunk`` so every table sees exactly one compiled lookup program,
+  regardless of batch size;
+* **hot-key cache** — a small host dict in front of the device table.
+  Counts are global aggregates, so *any* update/merge/flush may move any
+  key's count: writers call :meth:`invalidate` (wholesale clear) after
+  every mutation rather than tracking per-key dirtiness (DESIGN.md §6);
+* **probe-distance aggregation** — per-key probe distances from the
+  device are folded into batch-level wear/latency stats (sum + max +
+  served-query count); cache hits do not re-probe and add nothing.
+
+The engine is deliberately state-free with respect to the table: callers
+pass the current ``DeviceTableState`` to :meth:`query_batch`, so
+functional state updates (``state -> op -> state``) stay outside.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QueryEngineStats:
+    """Batch-aggregated query-path counters (DESIGN.md §6)."""
+
+    batches: int = 0            # query_batch calls
+    keys: int = 0               # keys requested (incl. duplicates)
+    unique_keys: int = 0        # after dedup
+    cache_hits: int = 0         # unique keys served from the hot cache
+    device_queries: int = 0     # unique keys sent to the device
+    device_dispatches: int = 0  # compiled lookup launches (chunks)
+    invalidations: int = 0      # hot-cache clears by writers
+    probe_total: int = 0        # sum of device probe distances
+    probe_max: int = 0          # worst single probe in any batch
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class BatchedQueryEngine:
+    """Dedup + chunk + hot-cache front end over ``table_jax.lookup``."""
+
+    def __init__(self, cfg, chunk: int = 1024, hot_capacity: int = 4096):
+        import jax.numpy as jnp  # deferred: sim-only users stay jax-free
+
+        from . import table_jax as tj
+        self._jnp = jnp
+        self._tj = tj
+        self.cfg = cfg
+        self.chunk = int(chunk)
+        self.hot_capacity = int(hot_capacity)
+        self._hot: Dict[int, int] = {}
+        self.stats = QueryEngineStats()
+
+    # -- cache maintenance --------------------------------------------------
+    def invalidate(self) -> None:
+        """Writers call this after any update/merge/flush: counts are
+        global aggregates, so the whole hot cache goes at once."""
+        if self._hot:
+            self._hot.clear()
+            self.stats.invalidations += 1
+
+    def _remember(self, key: int, count: int) -> None:
+        if self.hot_capacity <= 0:
+            return  # cache disabled
+        if len(self._hot) >= self.hot_capacity and key not in self._hot:
+            # FIFO eviction via dict insertion order — cheap, and good
+            # enough for a cache that is cleared on every table write.
+            self._hot.pop(next(iter(self._hot)))
+        self._hot[key] = count
+
+    # -- the batched read path ---------------------------------------------
+    def query_batch(self, state, keys) -> np.ndarray:
+        """Counts for ``keys`` (any shape, flattened) against ``state``.
+
+        Returns an int64 array aligned with the flattened input;
+        duplicate keys share one probe, ``EMPTY`` keys return 0.
+        """
+        jnp, tj = self._jnp, self._tj
+        flat = np.asarray(keys).reshape(-1).astype(np.int64)
+        self.stats.batches += 1
+        self.stats.keys += flat.size
+        if flat.size == 0:
+            return np.zeros(0, np.int64)
+        uniq, inv = np.unique(flat, return_inverse=True)
+        self.stats.unique_keys += uniq.size
+        ucnt = np.zeros(uniq.size, np.int64)
+        if not self._hot:
+            # cold cache (the steady state under interleaved writes):
+            # skip the per-key probe loop entirely
+            miss_idx = np.flatnonzero(uniq != tj.EMPTY).tolist()
+        else:
+            miss_idx = []
+            for i, k in enumerate(uniq):
+                if k == tj.EMPTY:
+                    continue  # padding key: count 0, never probed or cached
+                c = self._hot.get(int(k))
+                if c is None:
+                    miss_idx.append(i)
+                else:
+                    ucnt[i] = c
+                    self.stats.cache_hits += 1
+        if miss_idx:
+            miss = uniq[miss_idx]
+            self.stats.device_queries += miss.size
+            got = np.empty(miss.size, np.int64)
+            step = self.chunk
+            for lo in range(0, miss.size, step):
+                part = miss[lo:lo + step]
+                pad = step - part.size
+                if pad:  # fixed shapes → one compiled program per table
+                    part = np.concatenate(
+                        [part, np.full(pad, tj.EMPTY, np.int64)])
+                cnt, dist = tj.lookup(self.cfg, state,
+                                      jnp.asarray(part, jnp.int32))
+                n_real = step - pad
+                cnt = np.asarray(cnt)[:n_real]
+                dist = np.asarray(dist)[:n_real]
+                got[lo:lo + n_real] = cnt
+                self.stats.device_dispatches += 1
+                self.stats.probe_total += int(dist.sum())
+                if dist.size:
+                    self.stats.probe_max = max(self.stats.probe_max,
+                                               int(dist.max()))
+            ucnt[miss_idx] = got
+            for k, c in zip(miss, got):
+                self._remember(int(k), int(c))
+        return ucnt[inv]
+
+    def query(self, state, key: int) -> int:
+        """Single-key convenience wrapper (one-element batch)."""
+        return int(self.query_batch(state, np.asarray([key]))[0])

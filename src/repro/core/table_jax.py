@@ -480,10 +480,24 @@ def flush(cfg: FlashTableConfig, state: DeviceTableState) -> DeviceTableState:
 
 
 def _scan_segment(seg_keys, seg_counts, q, chunk: int = 1024):
-    """Masked linear scan of a log/overflow segment for a query batch."""
+    """Masked linear scan of a log/overflow segment for a query batch.
+
+    One scan serves the whole batch (the ``(Q, chunk)`` compare is shared
+    across every query), so batched lookups pay the change-segment read
+    once rather than per key. The segment is EMPTY-padded up to a chunk
+    multiple: ``dynamic_slice`` clamps out-of-range starts, so an
+    unpadded non-multiple tail would re-read (and double-count) the
+    overlap with the previous chunk.
+    """
     cap = seg_keys.shape[0]
     chunk = min(chunk, cap)
-    n_chunks = -(-cap // chunk)
+    pad = -cap % chunk
+    if pad:
+        seg_keys = jnp.concatenate(
+            [seg_keys, jnp.full((pad,), EMPTY, seg_keys.dtype)])
+        seg_counts = jnp.concatenate(
+            [seg_counts, jnp.zeros((pad,), seg_counts.dtype)])
+    n_chunks = (cap + pad) // chunk
 
     def body(i, acc):
         lk = jax.lax.dynamic_slice(seg_keys, (i * chunk,), (chunk,))
@@ -498,11 +512,14 @@ def _scan_segment(seg_keys, seg_counts, q, chunk: int = 1024):
 @functools.partial(jax.jit, static_argnums=0)
 def lookup(cfg: FlashTableConfig, state: DeviceTableState, q_keys
            ) -> Tuple[jax.Array, jax.Array]:
-    """Point queries (paper §2.7): data segment (Pallas probe) + change
-    segment scan + overflow scan. Returns (counts, probe_distances)."""
+    """Batched point queries (paper §2.7): data segment (blocked Pallas
+    probe — one tile fetch per queried block per wave) + change segment
+    scan + overflow scan, each shared across the whole batch. Returns
+    (counts, probe_distances); ``EMPTY`` entries are padding → ``(0, 0)``.
+    """
     q = q_keys.astype(jnp.int32)
-    cnt, dist = hops.query_sorted(cfg.pair, state.keys, state.counts, q,
-                                  cfg.interpret)
+    cnt, dist = hops.query_blocked(cfg.pair, state.keys, state.counts, q,
+                                   128, cfg.interpret)
     if cfg.scheme != "MB":  # MB has no change segment to consolidate
         cnt = cnt + _scan_segment(state.log_keys.reshape(-1),
                                   state.log_counts.reshape(-1), q)

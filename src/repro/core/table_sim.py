@@ -27,7 +27,7 @@ page-chained *overflow region* (§2.5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -351,6 +351,17 @@ class FlashHashTableBase:
 
     def _query_change_segment(self, key: int) -> int:
         return 0
+
+    def query_batch(self, keys) -> np.ndarray:
+        """Batched counts — API twin of the device adapter's batched
+        path. The event-level simulation still accounts each key's SSD
+        cost individually (the paper's per-query ledger); batching here
+        is an interface property, not a cost model change. EMPTY
+        padding keys return 0 at no cost, matching the device engine."""
+        flat = np.asarray(keys).reshape(-1)
+        return np.fromiter(
+            (self.query(int(k)) if k != EMPTY else 0 for k in flat),
+            dtype=np.int64, count=flat.size)
 
     # convenience for tests: exact logical count, no cost accounting
     def logical_count(self, key: int) -> int:

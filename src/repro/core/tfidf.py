@@ -20,35 +20,39 @@ Two backends expose the same scheme landscape:
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from .flash_model import TableGeometry
-from .table_sim import FlashHashTableBase, make_table
+from .table_sim import make_table
 
 
 class DeviceTableAdapter:
     """``table_sim``-compatible facade over the device table.
 
     Wraps :mod:`core.table_jax` state behind the small surface the TF-IDF
-    pipeline uses (``insert_batch`` / ``query`` / ``finalize``), so the
-    same workload can be driven through the on-device MB / MDB / MDB-L
-    implementations. ``wear()`` exposes the device stats whose
-    ``tile_stores`` field is the simulator ledger's clean-count analogue.
+    pipeline uses (``insert_batch`` / ``query`` / ``query_batch`` /
+    ``finalize``), so the same workload can be driven through the
+    on-device MB / MDB / MDB-L implementations. Reads go through a
+    :class:`..core.query_engine.BatchedQueryEngine` (dedup, fixed-shape
+    chunks, hot-key cache invalidated on every write). ``wear()`` exposes
+    the device stats whose ``tile_stores`` field is the simulator
+    ledger's clean-count analogue.
     """
 
-    def __init__(self, cfg, chunk: int = 4096):
+    def __init__(self, cfg, chunk: int = 4096, query_chunk: int = 1024):
         import jax.numpy as jnp  # deferred: the sim backend stays jax-free
 
         from . import table_jax as tj
+        from .query_engine import BatchedQueryEngine
         self._jnp = jnp
         self._tj = tj
         self.cfg = cfg
         self.scheme = cfg.scheme
         self.state = tj.init(cfg)
         self.chunk = int(chunk)
+        self.engine = BatchedQueryEngine(cfg, chunk=query_chunk)
 
     def insert_batch(self, keys: np.ndarray,
                      deltas: Optional[np.ndarray] = None,
@@ -71,18 +75,23 @@ class DeviceTableAdapter:
                     d = np.concatenate([d, np.zeros(pad, d.dtype)])
                 self.state = tj.update(self.cfg, self.state, t,
                                        jnp.asarray(d, jnp.int32))
+        self.engine.invalidate()  # any write can move any count
 
     def query(self, key: int) -> int:
-        jnp, tj = self._jnp, self._tj
-        cnt, _ = tj.lookup(self.cfg, self.state,
-                           jnp.asarray([int(key)], jnp.int32))
-        return int(cnt[0])
+        return self.engine.query(self.state, int(key))
+
+    def query_batch(self, keys) -> np.ndarray:
+        """Batched counts (paper §2.7, batched regime): one deduped,
+        chunked dispatch for the whole key set instead of a per-key
+        lookup loop — the change-segment scan is paid once per chunk."""
+        return self.engine.query_batch(self.state, keys)
 
     # the device table has no separate uncosted path; counts are exact
     logical_count = query
 
     def finalize(self) -> None:
         self.state = self._tj.flush(self.cfg, self.state)
+        self.engine.invalidate()
 
     def wear(self) -> Dict[str, int]:
         s = self.state.stats
@@ -156,24 +165,44 @@ class TfIdfPipeline:
         """A paper-workload query: 'how frequent is this keyword' (§3.3)."""
         return self.term_table.query(token_id(token))
 
-    def idf(self, token: str) -> float:
+    def _df_many(self, tokens: Sequence[str]) -> np.ndarray:
+        """Document frequencies for a token list, one batched lookup."""
         if self.doc_table is None:
             raise ValueError("df tracking disabled")
-        df = self.doc_table.query(token_id(token))
-        if df <= 0:
-            return 0.0
-        return math.log(self.num_docs / df)
+        ids = np.fromiter((token_id(t) for t in tokens), dtype=np.int64,
+                          count=len(tokens))
+        return np.asarray(self.doc_table.query_batch(ids), dtype=np.int64)
+
+    def idf(self, token: str) -> float:
+        return float(self.idf_many([token])[0])
+
+    def idf_many(self, tokens: Sequence[str]) -> np.ndarray:
+        """Vectorized IDF: all tokens resolved in one batched df lookup
+        (duplicates deduped before dispatch by the query engine)."""
+        df = self._df_many(tokens)
+        out = np.zeros(len(tokens), np.float64)
+        pos = df > 0
+        out[pos] = np.log(self.num_docs / df[pos])
+        return out
 
     def tfidf(self, doc_tokens: Sequence[str]) -> Dict[str, float]:
-        """Score one document against the accumulated corpus statistics."""
+        """Score one document against the accumulated corpus statistics.
+
+        The document's unique terms are resolved in a single batched df
+        lookup (paper §2.7 batched regime) instead of one device
+        round-trip per term."""
+        if not doc_tokens:
+            return {}
         tf: Dict[str, int] = {}
         for t in doc_tokens:
             tf[t] = tf.get(t, 0) + 1
-        return {t: (c / max(len(doc_tokens), 1)) * self.idf(t)
-                for t, c in tf.items()}
+        idf = self.idf_many(list(tf))   # insertion order = unique terms
+        n = len(doc_tokens)
+        return {t: (c / n) * idf[i] for i, (t, c) in enumerate(tf.items())}
 
     def keywords(self, doc_tokens: Sequence[str], threshold: float) -> List[str]:
-        """Paper §1: keywords = words with TF-IDF above a threshold."""
+        """Paper §1: keywords = words with TF-IDF above a threshold (all
+        terms scored through one batched lookup via :meth:`tfidf`)."""
         scores = self.tfidf(doc_tokens)
         return sorted((t for t, v in scores.items() if v >= threshold),
                       key=lambda t: -scores[t])

@@ -14,14 +14,13 @@ frequency queries. On top of it:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import table_jax as tj
+from ..core.query_engine import BatchedQueryEngine
 
 
 @dataclasses.dataclass
@@ -30,6 +29,7 @@ class CorpusStats:
     state: tj.DeviceTableState
     docs_seen: int = 0
     tokens_seen: int = 0
+    engine: Optional[BatchedQueryEngine] = None
 
     @classmethod
     def create(cls, q_log2: int = 18, r_log2: int = 10,
@@ -39,13 +39,23 @@ class CorpusStats:
         ``cs_partitions``, ...) to :class:`tj.FlashTableConfig`."""
         cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2,
                                   scheme=scheme, **table_kw)
-        return cls(cfg=cfg, state=tj.init(cfg))
+        return cls(cfg=cfg, state=tj.init(cfg),
+                   engine=BatchedQueryEngine(cfg, chunk=1024))
 
     def wear(self) -> Dict[str, int]:
         """Device wear/traffic counters (``tile_stores`` = paper cleans);
         includes ``dropped``/``carried`` so capacity losses are visible."""
         s = self.state.stats
         return {f: int(getattr(s, f)) for f in s._fields}
+
+    def query_stats(self) -> Dict[str, int]:
+        """Batch-aggregated read-path counters (dedup ratio, cache hits,
+        probe-distance totals) from the query engine."""
+        return self.engine.stats.as_dict() if self.engine else {}
+
+    def _invalidate(self) -> None:
+        if self.engine is not None:
+            self.engine.invalidate()
 
     # -- ingestion ----------------------------------------------------------
     def ingest(self, tokens: np.ndarray) -> None:
@@ -54,15 +64,20 @@ class CorpusStats:
         self.state = tj.update(self.cfg, self.state, t)
         self.docs_seen += 1
         self.tokens_seen += int(t.shape[0])
+        self._invalidate()
 
     def flush(self) -> None:
         self.state = tj.flush(self.cfg, self.state)
+        self._invalidate()
 
     # -- queries ------------------------------------------------------------
     def counts(self, tokens: np.ndarray) -> np.ndarray:
-        q = jnp.asarray(np.asarray(tokens).reshape(-1), jnp.int32)
-        cnt, _ = tj.lookup(self.cfg, self.state, q)
-        return np.asarray(cnt)
+        """Batched frequency lookup: deduped, fixed-shape chunks, served
+        through the hot-key cache between ingests (DESIGN.md §6)."""
+        q = np.asarray(tokens).reshape(-1)
+        if self.engine is None:  # states built by hand (tests/restores)
+            self.engine = BatchedQueryEngine(self.cfg, chunk=1024)
+        return self.engine.query_batch(self.state, q)
 
     def tfidf_weights(self, tokens: np.ndarray) -> np.ndarray:
         """IDF-style weights: log(total / freq) per queried token."""
@@ -91,6 +106,7 @@ class CorpusStats:
         reps = jnp.asarray(keys, jnp.int32)
         deltas = jnp.asarray(counts, jnp.int32)
         self.state = tj.update(self.cfg, self.state, reps, deltas)
+        self._invalidate()
 
     def expert_counts(self, layer: int, num_experts: int) -> np.ndarray:
         keys = (np.arange(num_experts, dtype=np.int64)

@@ -211,6 +211,45 @@ def _query_kernel(pair: Pow2Hash, blocks_ref, qk_ref, tk_ref, tc_ref,
     dist_ref[...] = dists
 
 
+@functools.partial(jax.jit, static_argnums=(0, 5))
+def query_grid(pair: Pow2Hash, table_keys, table_counts, blocks, q2,
+               interpret: bool = True):
+    """Point queries over an explicit chunk layout (the batched entry).
+
+    q2: (n_rows, qcap) int32 — grid step ``i`` reads the tile of block
+    ``blocks[i]`` once and answers all of row ``i``'s queries against it,
+    so a row **must** only hold keys whose ``s()`` is ``blocks[i]``
+    (callers bucket; :func:`ops.query_blocked` builds this layout).
+    Padding lanes (``EMPTY`` or foreign-block keys) produce junk values
+    that callers never gather. Sized for large batches: HBM tile traffic
+    is one read per *queried block*, not one per query/chunk."""
+    n_b, r = table_keys.shape
+    n_rows, qcap = q2.shape
+    kern = functools.partial(_query_kernel, pair)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_rows,),
+        in_specs=[
+            pl.BlockSpec((1, qcap), lambda i, blocks: (i, 0)),
+            pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
+            pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qcap), lambda i, blocks: (i, 0)),
+            pl.BlockSpec((1, qcap), lambda i, blocks: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, qcap), table_counts.dtype),
+            jax.ShapeDtypeStruct((n_rows, qcap), jnp.int32),
+        ],
+        interpret=interpret,
+    )(blocks.astype(jnp.int32), q2, table_keys, table_counts)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 4, 5))
 def query(pair: Pow2Hash, table_keys, table_counts, q_keys,
           qchunk: int = 128, interpret: bool = True):
@@ -219,33 +258,11 @@ def query(pair: Pow2Hash, table_keys, table_counts, q_keys,
     ``ops.query``, which sorts/buckets); here each chunk's block id is the
     block of its first key — keys in a chunk from other blocks return junk,
     so ops-level bucketing pads chunks with the chunk's own block keys."""
-    n_b, r = table_keys.shape
     (Q,) = q_keys.shape
     assert Q % qchunk == 0
     n_chunks = Q // qchunk
     q2 = q_keys.reshape(n_chunks, qchunk)
     blocks = pair.s(q2[:, 0]).astype(jnp.int32)    # (n_chunks,)
-    kern = functools.partial(_query_kernel, pair)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(n_chunks,),
-        in_specs=[
-            pl.BlockSpec((1, qchunk), lambda i, blocks: (i, 0)),
-            pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
-            pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, qchunk), lambda i, blocks: (i, 0)),
-            pl.BlockSpec((1, qchunk), lambda i, blocks: (i, 0)),
-        ],
-    )
-    cnts, dists = pl.pallas_call(
-        kern,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((n_chunks, qchunk), table_counts.dtype),
-            jax.ShapeDtypeStruct((n_chunks, qchunk), jnp.int32),
-        ],
-        interpret=interpret,
-    )(blocks, q2, table_keys, table_counts)
+    cnts, dists = query_grid(pair, table_keys, table_counts, blocks, q2,
+                             interpret)
     return cnts.reshape(Q), dists.reshape(Q)

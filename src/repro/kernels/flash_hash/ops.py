@@ -13,7 +13,10 @@ Adds the outside-the-kernel plumbing the paper's schemes need:
   destination block (the secondary hash ``s``).
 * ``accumulate`` — the TPU-native RAM buffer: sort + segment-sum dedup of a
   token batch into (unique key, count) pairs (open-hash pre-aggregation).
-* ``merge`` / ``merge_dirty`` / ``query`` — kernel entry points.
+* ``merge`` / ``merge_dirty`` — merge kernel entry points.
+* ``query_sorted`` / ``query_blocked`` — per-key vs batched query entry
+  points (the latter buckets the batch by block so each queried tile is
+  fetched once per wave).
 """
 from __future__ import annotations
 
@@ -119,10 +122,79 @@ def merge_dirty(pair: Pow2Hash, table_keys, table_counts, dirty_blocks,
 def query_sorted(pair: Pow2Hash, table_keys, table_counts, q_keys,
                  interpret: bool = True):
     """Point queries; sorts by block first so consecutive grid steps reuse
-    the same VMEM tile (Pallas elides the re-fetch), then unsorts."""
+    the same VMEM tile (Pallas elides the re-fetch), then unsorts.
+
+    One grid step per query — the per-key reference path. Batches should
+    use :func:`query_blocked`, which fetches each queried tile once."""
     blk = pair.s(q_keys)
     order = jnp.argsort(blk, stable=True)
     cnts, dists = _k.query(pair, table_keys, table_counts, q_keys[order],
                            1, interpret)
     inv = jnp.argsort(order, stable=True)
     return cnts[inv], dists[inv]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def query_blocked(pair: Pow2Hash, table_keys, table_counts, q_keys,
+                  qcap: int = 128, interpret: bool = True):
+    """Batched point queries, sized for large batches (paper §2.7).
+
+    Buckets the batch by destination block into the dense
+    ``(n_rows, qcap)`` layout :func:`kernel.query_grid` tiles over, with
+    one row per *queried* block (``n_rows = min(n_b, Q)`` rows
+    statically; unqueried blocks get no row, surplus rows all point at
+    block 0, which consecutive-step Pallas tile reuse makes near-free).
+    One *wave* answers up to ``qcap`` queries per block with a
+    single tile fetch per queried block, instead of one grid step per
+    query. Blocks holding more than ``qcap`` queries drain over
+    additional waves (``fori_loop``; with deduped batches one wave is
+    the common case).
+
+    q_keys: (Q,) int32, ``EMPTY`` entries are padding and return
+    ``(0, 0)``. Returns (counts, probe_distances) aligned with ``q_keys``,
+    bit-identical to :func:`query_sorted` for valid keys.
+    """
+    n_b, _ = table_keys.shape
+    (Q,) = q_keys.shape
+    if Q == 0:
+        return (jnp.zeros((0,), table_counts.dtype),
+                jnp.zeros((0,), jnp.int32))
+    qcap = max(min(qcap, Q), 1)
+    n_rows = min(n_b, Q)       # ≤ Q distinct blocks can be queried
+    q = q_keys.astype(jnp.int32)
+    valid = q != EMPTY
+    blk = jnp.where(valid, pair.s(q), n_b).astype(jnp.int32)
+    order = jnp.argsort(blk, stable=True)
+    sq, sb = q[order], blk[order]
+    start = jnp.searchsorted(sb, jnp.arange(n_b + 1, dtype=sb.dtype))
+    pos = jnp.arange(Q, dtype=jnp.int32) - start[jnp.clip(sb, 0, n_b)]
+    max_load = jnp.max(start[1:] - start[:-1])     # queries in fullest block
+    # dense rank of each query's block within the queried-block set
+    is_first = (sb < n_b) & jnp.concatenate(
+        [jnp.ones((1,), bool), sb[1:] != sb[:-1]])
+    rank = jnp.cumsum(is_first) - 1
+    grid_blocks = jnp.zeros((n_rows,), jnp.int32).at[
+        jnp.where(is_first, rank, n_rows)].set(sb, mode="drop")
+
+    def wave(p, acc):
+        cnt_s, dist_s = acc
+        win = (sb < n_b) & (pos >= p * qcap) & (pos < (p + 1) * qcap)
+        row = jnp.where(win, rank, n_rows)
+        col = jnp.where(win, pos - p * qcap, 0)
+        dense = jnp.full((n_rows, qcap), EMPTY, jnp.int32
+                         ).at[row, col].set(sq, mode="drop")
+        c, d = _k.query_grid(pair, table_keys, table_counts, grid_blocks,
+                             dense, interpret)
+        g = (jnp.clip(rank, 0, n_rows - 1),
+             jnp.clip(pos - p * qcap, 0, qcap - 1))
+        cnt_s = jnp.where(win, c[g], cnt_s)
+        dist_s = jnp.where(win, d[g], dist_s)
+        return cnt_s, dist_s
+
+    n_waves = (max_load + qcap - 1) // qcap
+    cnt_s, dist_s = jax.lax.fori_loop(
+        0, n_waves, wave,
+        (jnp.zeros((Q,), table_counts.dtype), jnp.zeros((Q,), jnp.int32)))
+    cnts = jnp.zeros((Q,), table_counts.dtype).at[order].set(cnt_s)
+    dists = jnp.zeros((Q,), jnp.int32).at[order].set(dist_s)
+    return cnts, dists

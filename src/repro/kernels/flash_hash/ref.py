@@ -91,6 +91,8 @@ def query_ref(pair: Pow2Hash, table_keys, table_counts, q_keys):
     Returns (counts, probe_distance) per query; probe_distance is the
     paper's page-read span proxy (slots walked from home, inclusive);
     absent keys probe to the first empty slot (closed-table termination).
+    ``EMPTY`` queries are padding and return ``(0, 0)`` — the batched
+    entry's (:func:`ops.query_blocked`) padding contract.
     """
     r = table_keys.shape[1]
     inf = jnp.int32(r + 1)
@@ -108,6 +110,8 @@ def query_ref(pair: Pow2Hash, table_keys, table_counts, q_keys):
         hit = (d == d_match) & found
         cnt = jnp.sum(jnp.where(hit, counts, 0)).astype(counts.dtype)
         dist = jnp.where(found, d_match, jnp.minimum(d_empty, r - 1)) + 1
-        return cnt, dist.astype(jnp.int32)
+        pad = k == EMPTY
+        return (jnp.where(pad, 0, cnt).astype(counts.dtype),
+                jnp.where(pad, 0, dist).astype(jnp.int32))
 
     return jax.vmap(one)(q_keys)

@@ -16,7 +16,7 @@ Every model module declares logical axis names per param dim
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -12,13 +12,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
 from ..models import model as M
-from ..models.config import ModelConfig, ShapeConfig
+from ..models.config import ModelConfig
 from ..optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
 from .sharding import ParallelPlan
 

@@ -9,13 +9,13 @@ Modes:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import (_dense_init, apply_rope, axes_rmsnorm, bf16_grad_boundary, init_rmsnorm, rmsnorm)
+from .layers import (_dense_init, apply_rope, bf16_grad_boundary, init_rmsnorm, rmsnorm)
 
 
 # ---------------------------------------------------------------------------

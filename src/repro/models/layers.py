@@ -6,7 +6,6 @@ consumed by the sharding rules engine (launch/sharding.py).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -8,12 +8,11 @@ restore against them is the actual reshard (checkpoint/).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding
 
-from ..launch.mesh import MeshPlan, arch_mesh
 
 
 def plan_mesh_shape(available_devices: int, model_width: int,

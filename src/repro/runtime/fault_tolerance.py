@@ -17,9 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 from ..checkpoint import CheckpointManager, latest_step, restore_checkpoint
 

@@ -12,7 +12,6 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..models import model as M
 from ..models.config import ModelConfig

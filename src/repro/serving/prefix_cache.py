@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import table_jax as tj
+from ..core.query_engine import BatchedQueryEngine
 
 
 def _chain_hash(prev: int, tokens: Sequence[int]) -> int:
@@ -54,6 +55,11 @@ class PrefixKVCache:
                                        max_updates_per_block=1 << 7,
                                        overflow_capacity=1 << 9)
         self.refs = tj.init(self.cfg)
+        # batched refcount reads: evictions scan every resident block key
+        # in one deduped dispatch, and repeat scans between bumps are
+        # served from the engine's hot cache (invalidated on every bump).
+        self.engine = BatchedQueryEngine(self.cfg, chunk=256,
+                                         hot_capacity=4 * capacity_blocks)
         self.store: Dict[int, _Block] = {}
         self.hits = 0
         self.misses = 0
@@ -73,10 +79,7 @@ class PrefixKVCache:
     def _count(self, keys: List[int]) -> np.ndarray:
         if not keys:
             return np.zeros(0, np.int32)
-        pad = 64 - len(keys) % 64 if len(keys) % 64 else 0
-        q = jnp.asarray(np.asarray(keys + [0] * pad), jnp.int32)
-        cnt, _ = tj.lookup(self.cfg, self.refs, q)
-        return np.asarray(cnt)[:len(keys)]
+        return self.engine.query_batch(self.refs, np.asarray(keys, np.int64))
 
     def _bump(self, keys: List[int], delta: int) -> None:
         if not keys:
@@ -91,6 +94,7 @@ class PrefixKVCache:
                               jnp.asarray(arr, jnp.int32),
                               jnp.asarray(deltas, jnp.int32))
         self.refs = tj.flush(self.cfg, self.refs)
+        self.engine.invalidate()  # refcounts moved: hot entries are stale
 
     # -- public API ------------------------------------------------------------
     def acquire(self, tokens: Sequence[int]) -> Tuple[int, Optional[Any],
@@ -157,9 +161,13 @@ class PrefixKVCache:
         self.evictions += 1
 
     def stats(self) -> dict:
+        q = self.engine.stats
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "resident": len(self.store),
                 "scheme": self.cfg.scheme,
                 "tile_stores": int(self.refs.stats.tile_stores),
                 "dropped": int(self.refs.stats.dropped),
-                "carried": int(self.refs.stats.carried)}
+                "carried": int(self.refs.stats.carried),
+                "query_batches": q.batches,
+                "query_cache_hits": q.cache_hits,
+                "query_device_keys": q.device_queries}

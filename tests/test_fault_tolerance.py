@@ -1,7 +1,6 @@
 """Fault tolerance: restart-from-checkpoint, NaN rollback, stragglers,
 elastic replanning."""
 import math
-import numpy as np
 import jax.numpy as jnp
 import pytest
 

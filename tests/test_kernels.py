@@ -1,13 +1,11 @@
 """Pallas flash-hash kernels vs the pure-jnp oracle: shape/dtype sweeps in
 interpret mode (per-kernel allclose contract)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from collections import Counter
 
 from repro.core.hashing import Pow2Hash
-from repro.kernels.flash_hash import kernel as K
 from repro.kernels.flash_hash import ops, ref
 
 EMPTY = ref.EMPTY
@@ -123,6 +121,44 @@ def test_merge_dirty_equals_full_merge():
     dk, dc, _, _ = ops.merge_dirty(pair, tk, tc, dirty, uk[dirty], uc[dirty])
     np.testing.assert_array_equal(np.asarray(full_k), np.asarray(dk))
     np.testing.assert_array_equal(np.asarray(full_c), np.asarray(dc))
+
+
+@pytest.mark.parametrize("qcap", [1, 3, 16, 128])
+def test_query_blocked_matches_ref(qcap):
+    """Batched query entry vs the oracle, including the multi-wave path
+    (qcap below the fullest block's query count), duplicate keys, absent
+    keys and EMPTY padding."""
+    pair = Pow2Hash(q_log2=9, r_log2=6)
+    n_b, r = pair.num_slots, pair.r
+    tk = jnp.full((n_b, r), EMPTY, jnp.int32)
+    tc = jnp.zeros((n_b, r), jnp.int32)
+    _, uk, uc, _ = _mk_updates(pair, 300, 1000, 11, 64)
+    tk, tc, _, _ = ops.merge(pair, tk, tc, uk, uc)
+    rng = np.random.default_rng(12)
+    q = np.concatenate([rng.integers(0, 1500, 90),     # present + absent
+                        np.full(6, EMPTY),             # padding lanes
+                        rng.integers(0, 40, 32)])      # heavy duplicates
+    q = jnp.asarray(q, jnp.int32)
+    want_c, want_d = ref.query_ref(pair, tk, tc, q)
+    got_c, got_d = ops.query_blocked(pair, tk, tc, q, qcap)
+    np.testing.assert_array_equal(np.asarray(want_c), np.asarray(got_c))
+    np.testing.assert_array_equal(np.asarray(want_d), np.asarray(got_d))
+
+
+def test_query_blocked_matches_query_sorted():
+    """The two query entry points must agree bit-for-bit on valid keys."""
+    pair = Pow2Hash(q_log2=10, r_log2=7)
+    n_b, r = pair.num_slots, pair.r
+    tk = jnp.full((n_b, r), EMPTY, jnp.int32)
+    tc = jnp.zeros((n_b, r), jnp.int32)
+    _, uk, uc, _ = _mk_updates(pair, 500, 4000, 13, 64)
+    tk, tc, _, _ = ops.merge(pair, tk, tc, uk, uc)
+    q = jnp.asarray(np.random.default_rng(14).integers(0, 5000, 256),
+                    jnp.int32)
+    c1, d1 = ops.query_sorted(pair, tk, tc, q)
+    c2, d2 = ops.query_blocked(pair, tk, tc, q)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
 
 
 def test_accumulate_dedup():

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          cosine_schedule)
-from repro.optim.compress import compress_init, _quantize, _dequantize
+from repro.optim.compress import _quantize, _dequantize
 
 
 def _np_adamw(cfg, g, m, v, p, lr, t):

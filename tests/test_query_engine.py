@@ -1,0 +1,205 @@
+"""Batched query engine: query_batch ≡ per-key query ≡ table_sim oracle.
+
+The PR-2 acceptance property (ISSUE 2): batched queries must be
+bit-identical to the per-key path under every scheme, for keys
+deliberately resident in each of the paper's three regions — data
+segment, change segment/log (staged, unflushed), and overflow — plus
+absent keys, duplicates and EMPTY padding. The event-level ``table_sim``
+tables answer the same workload as the independent oracle (logical
+counts are placement-independent, so the differing sim hash pair does
+not matter).
+"""
+import numpy as np
+import pytest
+
+from repro.core.flash_model import TableGeometry
+from repro.core.query_engine import BatchedQueryEngine
+from repro.core.table_sim import make_table
+from repro.core.tfidf import make_device_table
+
+SCHEMES = ["MB", "MDB", "MDB-L"]
+GEOM = TableGeometry(num_blocks=16, pages_per_block=2, entries_per_page=8)
+
+
+def _same_block_keys(pair, block, n, lo=0):
+    out = []
+    x = lo
+    while len(out) < n:
+        if int(pair.s(x)) == block:
+            out.append(x)
+        x += 1
+    return np.asarray(out, dtype=np.int64)
+
+
+def _dev(scheme, **kw):
+    cfg = dict(q_log2=8, r_log2=4, log_capacity=64, cs_partitions=4,
+               max_updates_per_block=32, overflow_capacity=128)
+    cfg.update(kw)
+    t = make_device_table(scheme, **cfg)
+    # small fixed shapes: keep insert chunks within the tiny test logs
+    # (oversized chunks unroll statically) and compiles fast
+    t.chunk = 32
+    t.engine.chunk = 64
+    return t
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_query_batch_equals_per_key_equals_sim(scheme):
+    dev = _dev(scheme)
+    sim = make_table(scheme, GEOM, ram_buffer_pct=10.0,
+                     change_segment_pct=25.0)
+    rng = np.random.default_rng(0)
+    # data segment + overflow: overfill one device block (r=16) so the
+    # excess spills to the overflow region after the merge
+    hot = _same_block_keys(dev.cfg.pair, 3, 24)
+    bulk = rng.integers(0, 400, size=256)
+    merged = np.concatenate([hot, hot[:8], bulk])        # some counts of 2
+    dev.insert_batch(merged)
+    dev.finalize()
+    assert dev.wear()["dropped"] == 0
+    ov_resident = int(np.asarray(dev.state.ov_keys != -1).sum())
+    assert ov_resident >= 8                               # spill really hit
+    sim.insert_batch(merged)
+    sim.finalize()
+    # change segment / log: staged only, never flushed (MB merges at once,
+    # which is that scheme's contract — no change segment to stage into)
+    staged = np.arange(1000, 1020)
+    dev.insert_batch(staged)
+    sim.insert_batch(staged)
+    if scheme != "MB":
+        assert int(np.ravel(dev.state.log_ptr).sum()) > 0
+    # the query set crosses every region + absent keys + duplicates
+    absent = np.asarray([777777, 888888])
+    q = np.concatenate([hot, staged, bulk[:64], absent, hot[:5]])
+    per_key = np.asarray([dev.query(int(k)) for k in q])
+    batched = dev.query_batch(q)
+    oracle = np.asarray([sim.query(int(k)) for k in q])
+    np.testing.assert_array_equal(batched, per_key)
+    np.testing.assert_array_equal(batched, oracle)
+    # dedup happened: the duplicated hot[:5] keys cost no extra probes
+    st = dev.engine.stats
+    assert st.unique_keys < st.keys
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_empty_padding_keys_return_zero(scheme):
+    dev = _dev(scheme)
+    dev.insert_batch(np.asarray([5, 5, 9]))
+    got = dev.query_batch(np.asarray([5, -1, 9, -1]))
+    assert list(got) == [2, 0, 1, 0]
+
+
+def test_hot_cache_serves_repeats_and_invalidates_on_update():
+    dev = _dev("MDB-L")
+    keys = np.arange(50, 80)
+    dev.insert_batch(keys)
+    dev.finalize()
+    st = dev.engine.stats
+    first = dev.query_batch(keys)
+    assert st.cache_hits == 0 and st.device_queries == len(keys)
+    dispatches = st.device_dispatches
+    second = dev.query_batch(keys)                 # all from the hot cache
+    np.testing.assert_array_equal(first, second)
+    assert st.cache_hits == len(keys)
+    assert st.device_dispatches == dispatches      # no device traffic
+    # any write invalidates: the repeat key must show its new count
+    dev.insert_batch(np.asarray([50]))
+    assert st.invalidations >= 1
+    assert dev.query(50) == 2
+    # and the engine really went back to the device for it
+    assert st.device_queries > len(keys)
+
+
+def test_probe_distance_batch_aggregation():
+    dev = _dev("MDB-L")
+    keys = np.arange(200, 232)
+    dev.insert_batch(keys)
+    dev.finalize()
+    dev.query_batch(keys)
+    st = dev.engine.stats
+    # every resident key probes at least 1 slot (home, inclusive)
+    assert st.probe_total >= st.device_queries >= len(keys)
+    assert 1 <= st.probe_max <= dev.cfg.block_entries
+    # cache hits add nothing to the probe ledger
+    before = st.probe_total
+    dev.query_batch(keys)
+    assert st.probe_total == before
+
+
+def test_engine_chunking_single_compiled_shape():
+    dev = _dev("MDB-L")
+    dev.engine.chunk = 16                 # force multi-chunk dispatch
+    keys = np.arange(3000, 3100)          # 100 unique keys -> 7 chunks
+    dev.insert_batch(keys)
+    dev.finalize()
+    got = dev.query_batch(keys)
+    np.testing.assert_array_equal(got, np.ones(len(keys), np.int64))
+    assert dev.engine.stats.device_dispatches == -(-len(keys) // 16)
+
+
+def test_engine_hot_capacity_zero_disables_cache():
+    """hot_capacity=0 must mean 'no caching', not a crash on first miss."""
+    dev = _dev("MDB-L")
+    dev.engine.hot_capacity = 0
+    dev.insert_batch(np.arange(8))
+    for _ in range(2):
+        np.testing.assert_array_equal(dev.query_batch(np.arange(8)),
+                                      np.ones(8, np.int64))
+    assert dev.engine.stats.cache_hits == 0
+
+
+def test_engine_state_free_reads():
+    """query_batch must not mutate table state (reads are functional)."""
+    dev = _dev("MDB")
+    dev.insert_batch(np.arange(10))
+    stats_before = dev.wear()
+    eng = BatchedQueryEngine(dev.cfg, chunk=8)
+    out = eng.query_batch(dev.state, np.arange(10))
+    np.testing.assert_array_equal(out, np.ones(10, np.int64))
+    assert dev.wear() == stats_before
+
+
+def test_sim_query_batch_matches_engine_empty_semantics():
+    """The sim's API twin must agree on EMPTY padding: count 0, no cost."""
+    sim = make_table("MDB-L", GEOM, ram_buffer_pct=10.0,
+                     change_segment_pct=25.0)
+    sim.insert_batch(np.asarray([5, 5, 9]))
+    before = sim.qstats.queries
+    got = sim.query_batch(np.asarray([5, -1, 9, -1]))
+    assert list(got) == [2, 0, 1, 0]
+    assert sim.qstats.queries == before + 2   # EMPTY keys never costed
+
+
+def test_prefix_cache_refcounts_through_engine():
+    """Serving path: acquire/insert/release refcounts stay exact through
+    the engine's hot cache (every _bump invalidates), and eviction only
+    frees zero-refcount blocks while pinned blocks survive."""
+    from repro.serving.prefix_cache import PrefixKVCache
+
+    cache = PrefixKVCache(block_tokens=2, capacity_blocks=4, q_log2=10,
+                          r_log2=6, scheme="MDB-L")
+    toks_a = [1, 2, 3, 4]                      # two whole blocks
+    n, _, pinned_a = cache.acquire(toks_a)
+    assert n == 0 and pinned_a == []           # cold cache: nothing to pin
+    ins_a = cache.insert(toks_a, value="A", slicer=lambda v, n: v)
+    assert len(ins_a) == 2
+    keys_a = cache.block_keys(toks_a)
+    assert list(cache._count(keys_a)) == [1, 1]
+    # a second request over the same prefix bumps the refcounts
+    n, val, pinned_a2 = cache.acquire(toks_a)
+    assert n == 4 and val == "A"
+    assert list(cache._count(keys_a)) == [2, 2]   # stale cache would say 1
+    # fill the store with one released (zero-ref) block and one pinned
+    # one; eviction must take the zero-ref block and spare the pinned
+    cache.release(ins_a)                       # A held only by the acquire
+    p10 = cache.insert([10, 11], value="v10", slicer=lambda v, n: v)
+    cache.release(p10)                         # v10 refcount -> 0
+    cache.insert([12, 13], value="v12", slicer=lambda v, n: v)  # store: 4
+    cache.insert([14, 15], value="v14", slicer=lambda v, n: v)  # evicts
+    assert cache.evictions >= 1
+    assert cache.block_keys([10, 11])[0] not in cache.store  # zero-ref gone
+    assert set(keys_a) <= set(cache.store)     # pinned blocks survived
+    cache.release(pinned_a2)
+    assert list(cache._count(keys_a)) == [0, 0]
+    s = cache.stats()
+    assert s["dropped"] == 0 and s["query_batches"] > 0

@@ -228,6 +228,58 @@ def test_mb_carry_is_merged_not_dropped():
     assert int(st.stats.dropped) == 0
 
 
+def test_scan_segment_tail_not_double_counted():
+    """Regression: with a segment capacity that is not a multiple of the
+    scan chunk, ``dynamic_slice`` clamps the last chunk's start, so the
+    tail scan used to re-read (and double-count) the overlap with the
+    previous chunk. The segment must be padded/masked instead."""
+    seg_k = jnp.arange(10, dtype=jnp.int32)
+    seg_c = jnp.ones(10, jnp.int32)
+    got = tj._scan_segment(seg_k, seg_c, jnp.arange(10, dtype=jnp.int32),
+                           chunk=4)
+    assert list(map(int, got)) == [1] * 10
+
+
+def test_lookup_non_power_of_two_overflow_capacity():
+    """End-to-end regression: overflow entries past the clamped-chunk
+    boundary (capacity 1100, chunk 1024 → overlap [76, 1024)) must count
+    once. 156 same-block keys → 140 overflow residents on a 16-entry
+    block, positions 0..139 spanning the old double-count window."""
+    cfg = _cfg("MB", q_log2=8, r_log2=4, max_updates_per_block=512,
+               overflow_capacity=1100)
+    keys = _same_block_keys(cfg.pair, 0, 156)
+    st = tj.init(cfg)
+    st = tj.update(cfg, st, jnp.asarray(keys, jnp.int32))
+    assert int(st.ov_ptr) == 156 - cfg.block_entries  # 140 in overflow
+    cnt, _ = tj.lookup(cfg, st, jnp.asarray(keys, jnp.int32))
+    assert list(map(int, cnt)) == [1] * 156
+    assert int(st.stats.dropped) == 0
+
+
+def test_lookup_non_multiple_log_capacity():
+    """Same regression on the change segment: a staged (unflushed) MDB-L
+    log with capacity 1500 puts entries in the clamped overlap window
+    [476, 1024); every staged key must count exactly once."""
+    cfg = _cfg("MDB-L", log_capacity=1500)
+    st = tj.init(cfg)
+    keys = jnp.arange(1, 601, dtype=jnp.int32)
+    st = tj.update(cfg, st, keys)
+    assert int(st.stats.merges) == 0 and int(st.log_ptr) == 600
+    cnt, _ = tj.lookup(cfg, st, keys)
+    assert list(map(int, cnt)) == [1] * 600
+
+
+def test_lookup_empty_padding_returns_zero():
+    """EMPTY query lanes are padding: (0, 0), under every scheme."""
+    for scheme in SCHEMES:
+        cfg = _cfg(scheme)
+        st = tj.update(cfg, tj.init(cfg), jnp.asarray([3, 3, 4], jnp.int32))
+        cnt, dist = tj.lookup(cfg, st,
+                              jnp.asarray([3, tj.EMPTY, 4], jnp.int32))
+        assert list(map(int, cnt)) == [2, 0, 1], scheme
+        assert int(dist[1]) == 0, scheme
+
+
 def test_invalid_scheme_rejected():
     with pytest.raises(ValueError):
         tj.FlashTableConfig(scheme="MDB-X")

@@ -72,6 +72,14 @@ def test_stopwords_rank_below_rare_words(pipe):
     assert pipe.idf("the") < pipe.idf("quantum")
 
 
+def test_idf_many_matches_scalar(pipe):
+    toks = ["the", "apple", "quantum", "nonexistent", "the"]
+    many = pipe.idf_many(toks)
+    want = np.asarray([pipe.idf(t) for t in toks])
+    np.testing.assert_allclose(many, want, atol=1e-12)
+    assert many[3] == 0.0  # absent tokens score 0, not -inf
+
+
 @pytest.mark.parametrize("scheme", ["MB", "MDB", "MDB-L"])
 def test_device_backend_matches_sim(scheme):
     """Sim-vs-device: the same workload through table_sim and table_jax
