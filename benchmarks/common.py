@@ -122,3 +122,55 @@ def rows_to_json(rows, meta: dict | None = None) -> dict:
                   "derived_raw": str(derived)}
                  for name, us, derived in rows],
     }
+
+
+# acceptance floors per device-suite prefix: (derived field, floor). The
+# floors are the PR acceptance ratios (ISSUE 2: fig3dev batched ≥10× per
+# -key; ISSUE 3: fig4dev engine-buffered ≥5× per-call) — ``run.py
+# --baseline`` fails the run if any current row drops below its floor.
+ACCEPTANCE_FLOORS = {
+    "fig3dev": ("speedup_vs_per_key", 10.0),
+    "fig4dev": ("speedup_vs_per_call", 5.0),
+}
+
+
+def compare_to_baseline(rows, baseline_path: str) -> bool:
+    """Regression gate for the trajectory benchmarks (CI bench-smoke).
+
+    Checks every current row covered by :data:`ACCEPTANCE_FLOORS`
+    against its floor, printing the committed baseline's value (e.g.
+    ``BENCH_PR3.json``) for reference. Returns False — and the caller
+    exits nonzero — if any speedup regressed below its floor, or if
+    *no* covered rows ran at all (a renamed suite/field must not let
+    the gate pass vacuously).
+    """
+    import json
+
+    with open(baseline_path) as f:
+        base = {r["name"]: r for r in json.load(f)["rows"]}
+    checked, failures = 0, []
+    for name, _us, derived in rows:
+        suite = name.split("/")[0]
+        if suite not in ACCEPTANCE_FLOORS:
+            continue
+        field, floor = ACCEPTANCE_FLOORS[suite]
+        d = _parse_derived(derived)
+        if field not in d:
+            continue
+        checked += 1
+        cur = float(d[field])
+        ref = base.get(name, {}).get("derived", {}).get(field)
+        note = f"baseline={ref}" if ref is not None else "baseline=n/a"
+        line = f"{name}: {field}={cur:.1f} floor={floor} {note}"
+        if cur < floor:
+            failures.append(line)
+        else:
+            print(f"# baseline-ok {line}", file=sys.stderr, flush=True)
+    for line in failures:
+        print(f"# REGRESSION {line}", file=sys.stderr, flush=True)
+    if checked == 0:
+        print("# REGRESSION baseline gate matched no rows: acceptance "
+              "suites/fields missing from this run (gate fails closed)",
+              file=sys.stderr, flush=True)
+        return False
+    return not failures

@@ -15,8 +15,12 @@ Run: ``PYTHONPATH=src python -m benchmarks.run [--only fig3,...]
 ``--json PATH`` additionally writes the rows as machine-readable JSON
 (name, us_per_call, parsed derived fields) — the artifact CI's
 bench-smoke job uploads, and the format of the committed
-``BENCH_PR2.json`` trajectory file. ``--smoke`` shrinks the workloads
-for a minutes-long CI run.
+``BENCH_PR*.json`` trajectory files. ``--smoke`` shrinks the workloads
+for a minutes-long CI run. ``--baseline PATH`` compares the device
+acceptance rows (fig3dev batched speedup, fig4dev engine-buffered
+speedup) against their floors, printing the committed trajectory file's
+values for reference, and exits nonzero on a regression — the CI
+bench-smoke gate.
 """
 from __future__ import annotations
 
@@ -28,7 +32,7 @@ import time
 
 from . import (bench_block_page_ops, bench_cleans, bench_io_costs,
                bench_kernels, bench_query_times, bench_roofline)
-from .common import emit, rows_to_json, set_smoke
+from .common import compare_to_baseline, emit, rows_to_json, set_smoke
 
 SUITES = {
     "fig3": bench_query_times,
@@ -48,6 +52,10 @@ def main() -> None:
                     help="also write rows as machine-readable JSON")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced workloads (CI bench-smoke job)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="compare acceptance rows against this committed "
+                         "BENCH_PR*.json; exit 1 if any speedup falls "
+                         "below its floor")
     args = ap.parse_args()
     if args.smoke:
         set_smoke()
@@ -55,29 +63,36 @@ def main() -> None:
     rows = []
     suite_secs = {}
     print("name,us_per_call,derived")
-    for name in names:
-        t0 = time.time()
-        suite_rows = []
-        SUITES[name].run(suite_rows)
-        emit(suite_rows)
-        rows.extend(suite_rows)
-        suite_secs[name] = round(time.time() - t0, 1)
-        print(f"# suite {name}: {len(suite_rows)} rows in "
-              f"{suite_secs[name]}s", file=sys.stderr, flush=True)
-    if args.json:
-        from .common import SMOKE_SCALE as scale  # set_smoke may have run
-        payload = rows_to_json(rows, meta={
-            "suites": names,
-            "suite_seconds": suite_secs,
-            "smoke_scale": scale,
-            "python": platform.python_version(),
-            "platform": platform.platform(),
-        })
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1)
-            f.write("\n")
-        print(f"# wrote {len(rows)} rows to {args.json}",
-              file=sys.stderr, flush=True)
+    try:
+        for name in names:
+            t0 = time.time()
+            suite_rows = []
+            SUITES[name].run(suite_rows)
+            emit(suite_rows)
+            rows.extend(suite_rows)
+            suite_secs[name] = round(time.time() - t0, 1)
+            print(f"# suite {name}: {len(suite_rows)} rows in "
+                  f"{suite_secs[name]}s", file=sys.stderr, flush=True)
+    finally:
+        # write whatever completed even if a suite raised, so the CI
+        # artifact always carries the rows gathered up to the failure
+        if args.json:
+            from .common import SMOKE_SCALE as scale  # set_smoke may run
+            payload = rows_to_json(rows, meta={
+                "suites": names,
+                "suite_seconds": suite_secs,
+                "smoke_scale": scale,
+                "python": platform.python_version(),
+                "platform": platform.platform(),
+            })
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=1)
+                f.write("\n")
+            print(f"# wrote {len(rows)} rows to {args.json}",
+                  file=sys.stderr, flush=True)
+    if args.baseline:
+        if not compare_to_baseline(rows, args.baseline):
+            sys.exit(1)
 
 
 if __name__ == "__main__":

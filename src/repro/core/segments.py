@@ -1,0 +1,340 @@
+"""Segment layer of the device flash-hash table (DESIGN.md §3, §7).
+
+The paper's table is a composition of four regions — the *data segment*
+(closed hash table in blocks), the *change segment* (either a monolithic
+log or ``cs_partitions`` partitioned buffers), the *overflow region*, and
+the RAM buffer H_R.  This module owns the on-device state record for the
+first three and every op that is shared between the MB / MDB / MDB-L
+policies; :mod:`table_jax` is reduced to scheme policy (when to stage,
+when to drain) over these primitives, and :mod:`write_engine` is the
+host-side H_R in front of them.
+
+Shared primitives
+-----------------
+* :func:`scatter_rows`   — pointer-bumped append into per-row buffers.
+  One code path serves both the overflow region (one row) and the MDB
+  partitioned change segment (``cs_partitions`` rows); the old
+  ``_append_overflow`` / ``_mdb_scatter`` twins collapsed into it.
+* :func:`append_overflow` / :func:`append_log` /
+  :func:`scatter_partitions` — the three staging surfaces.
+* :func:`merge_dirty_batch` / :func:`drain_log` /
+  :func:`merge_partition` — the merge paths (all through the
+  ``merge_dirty`` Pallas kernel; wear accounted per dirty block).
+* :func:`scan_segment`    — batched masked scan used by the query path.
+* :func:`accumulate_deltas` — sort+segment-sum dedup of a (token, Δ)
+  batch (the in-kernel RAM-buffer analogue).
+
+Functions take the table config duck-typed (anything with ``pair``,
+``num_blocks``, ``max_updates_per_block``, ``interpret`` and — for the
+partitioned ops — ``cs_partitions`` / ``blocks_per_partition`` /
+``partition_capacity``), so this module has no import cycle with
+:mod:`table_jax`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_hash import ops as hops
+
+EMPTY = hops.EMPTY
+
+
+class TableStats(NamedTuple):
+    tile_loads: jax.Array       # blocks read from HBM during merges
+    tile_stores: jax.Array      # blocks rewritten (the paper's "cleans")
+    staged_entries: jax.Array   # entries appended to the log (seq writes)
+    merges: jax.Array
+    stages: jax.Array
+    dropped: jax.Array          # capacity losses (should be 0)
+    carried: jax.Array          # updates deferred past a tile's max_u cap
+
+
+class DeviceTableState(NamedTuple):
+    keys: jax.Array        # (n_b, r) int32 — data segment
+    counts: jax.Array      # (n_b, r) int32
+    log_keys: jax.Array    # change segment: (log_cap,) for MDB-L,
+                           # (cs_partitions, part_cap) for MDB
+    log_counts: jax.Array  # same shape as log_keys
+    log_ptr: jax.Array     # () int32 for MDB-L, (cs_partitions,) for MDB
+    ov_keys: jax.Array     # (ov_cap,) int32 — overflow region
+    ov_counts: jax.Array   # (ov_cap,) int32
+    ov_ptr: jax.Array      # () int32
+    stats: TableStats
+
+
+def zero_stats() -> TableStats:
+    z = lambda: jnp.zeros((), jnp.int32)
+    return TableStats(tile_loads=z(), tile_stores=z(), staged_entries=z(),
+                      merges=z(), stages=z(), dropped=z(), carried=z())
+
+
+def init_state(num_blocks: int, block_entries: int, log_shape,
+               log_ptr_shape, overflow_capacity: int) -> DeviceTableState:
+    """Fresh segment state: EMPTY data/change/overflow regions."""
+    return DeviceTableState(
+        keys=jnp.full((num_blocks, block_entries), EMPTY, jnp.int32),
+        counts=jnp.zeros((num_blocks, block_entries), jnp.int32),
+        log_keys=jnp.full(log_shape, EMPTY, jnp.int32),
+        log_counts=jnp.zeros(log_shape, jnp.int32),
+        log_ptr=jnp.zeros(log_ptr_shape, jnp.int32),
+        ov_keys=jnp.full((overflow_capacity,), EMPTY, jnp.int32),
+        ov_counts=jnp.zeros((overflow_capacity,), jnp.int32),
+        ov_ptr=jnp.zeros((), jnp.int32),
+        stats=zero_stats(),
+    )
+
+
+@jax.jit
+def accumulate_deltas(tokens, deltas):
+    """RAM-buffer dedup with explicit deltas (supports deletion-by-−1)."""
+    order = jnp.argsort(tokens, stable=True)
+    t = tokens[order]
+    d = deltas[order]
+    is_head = jnp.concatenate([jnp.ones((1,), bool), t[1:] != t[:-1]])
+    is_head &= t != EMPTY
+    seg = jnp.cumsum(is_head) - 1
+    sums = jax.ops.segment_sum(jnp.where(t != EMPTY, d, 0), seg,
+                               num_segments=t.shape[0])
+    comp = jnp.argsort(jnp.where(is_head, 0, 1), stable=True)
+    keys = jnp.where(is_head[comp], t[comp], EMPTY)
+    cnts = jnp.where(is_head[comp],
+                     sums[jnp.clip(seg[comp], 0, t.shape[0] - 1)], 0)
+    return keys, cnts.astype(jnp.int32)
+
+
+def compact(keys, counts):
+    """Compact valid entries to the front, EMPTY-pad the tail."""
+    valid = keys != EMPTY
+    comp = jnp.argsort(~valid, stable=True)
+    return (jnp.where(valid[comp], keys[comp], EMPTY),
+            jnp.where(valid[comp], counts[comp], 0),
+            valid.sum(dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# pointer-bumped staging (overflow region + partitioned change segment)
+# ---------------------------------------------------------------------------
+def scatter_rows(buf_keys, buf_counts, ptrs, rows, keys, cnts):
+    """Pointer-bumped append of (keys, cnts) into per-row buffers.
+
+    ``buf_keys``/``buf_counts`` are ``(R, cap)``; ``ptrs`` is the ``(R,)``
+    per-row fill pointer; ``rows`` assigns each entry a destination row
+    (``EMPTY`` keys or rows outside ``[0, R)`` are padding and ignored).
+    Entries are packed at their row's pointer in stable input order — the
+    paper's semi-random page-write discipline. Entries past a row's
+    capacity do *not* fit and are returned for the caller to handle
+    (retry after a drain, or count as dropped).
+
+    Returns ``(buf_keys, buf_counts, new_ptrs, rest_keys, rest_cnts,
+    n_fit)``: rest_* hold the non-fitting entries (EMPTY-masked, same
+    ``(U,)`` layout), ``n_fit`` the per-row appended count.
+    """
+    R, cap = buf_keys.shape
+    (U,) = keys.shape
+    valid = (keys != EMPTY) & (rows >= 0) & (rows < R)
+    rw = jnp.where(valid, rows, R).astype(jnp.int32)
+    order = jnp.argsort(rw, stable=True)
+    sk, sc, sr = keys[order], cnts[order], rw[order]
+    start = jnp.searchsorted(sr, jnp.arange(R + 1, dtype=sr.dtype))
+    rank = jnp.arange(U, dtype=jnp.int32) - start[jnp.clip(sr, 0, R)]
+    pos = ptrs[jnp.clip(sr, 0, R - 1)] + rank
+    fits = (sr < R) & (pos < cap)
+    row = jnp.where(fits, sr, R)
+    col = jnp.where(fits, pos, 0)
+    buf_keys = buf_keys.at[row, col].set(sk, mode="drop")
+    buf_counts = buf_counts.at[row, col].set(sc, mode="drop")
+    n_fit = jnp.zeros((R,), jnp.int32).at[row].add(fits.astype(jnp.int32),
+                                                   mode="drop")
+    rest = (sr < R) & ~fits
+    rest_k = jnp.where(rest, sk, EMPTY)
+    rest_c = jnp.where(rest, sc, 0)
+    return buf_keys, buf_counts, ptrs + n_fit, rest_k, rest_c, n_fit
+
+
+def append_overflow(state: DeviceTableState, spill_k, spill_c
+                    ) -> DeviceTableState:
+    """Compact spilled entries into the overflow region (page-chained in
+    the paper; a pointer-bumped array here). Entries past the capacity
+    are genuine losses, surfaced in ``stats.dropped``."""
+    flat_k = spill_k.reshape(-1)
+    flat_c = spill_c.reshape(-1)
+    ov_k, ov_c, ptrs, rest_k, _, _ = scatter_rows(
+        state.ov_keys[None, :], state.ov_counts[None, :],
+        state.ov_ptr[None], jnp.zeros(flat_k.shape, jnp.int32),
+        flat_k, flat_c)
+    n_dropped = (rest_k != EMPTY).sum(dtype=jnp.int32)
+    return state._replace(
+        ov_keys=ov_k[0], ov_counts=ov_c[0], ov_ptr=ptrs[0],
+        stats=state.stats._replace(dropped=state.stats.dropped + n_dropped))
+
+
+def append_log(cfg, state: DeviceTableState, keys, cnts) -> DeviceTableState:
+    """Append a deduped chunk to the monolithic log (sequential write).
+
+    Pure staging primitive: the caller (:func:`table_jax._stage`)
+    guarantees the chunk fits behind ``log_ptr`` (merging first if not).
+    """
+    log_keys = jax.lax.dynamic_update_slice(state.log_keys, keys,
+                                            (state.log_ptr,))
+    log_counts = jax.lax.dynamic_update_slice(state.log_counts, cnts,
+                                              (state.log_ptr,))
+    n_new = (keys != EMPTY).sum(dtype=jnp.int32)
+    stats = state.stats._replace(
+        staged_entries=state.stats.staged_entries + n_new,
+        stages=state.stats.stages + 1)
+    return state._replace(log_keys=log_keys, log_counts=log_counts,
+                          log_ptr=state.log_ptr + keys.shape[0], stats=stats)
+
+
+def partition_of(cfg, keys):
+    """MDB: partition id per key; invalid keys map to the sentinel P."""
+    P = cfg.cs_partitions
+    return jnp.where(keys != EMPTY,
+                     cfg.pair.s(keys) // cfg.blocks_per_partition,
+                     P).astype(jnp.int32)
+
+
+def scatter_partitions(cfg, state: DeviceTableState, keys, cnts):
+    """Append a deduped chunk into its partitions (semi-random page
+    writes). Returns (state, rest_keys, rest_counts): entries whose
+    partition was full are *not* staged and come back EMPTY-masked for
+    the caller to retry after a merge."""
+    log_keys, log_counts, log_ptr, rest_k, rest_c, n_fit = scatter_rows(
+        state.log_keys, state.log_counts, state.log_ptr,
+        partition_of(cfg, keys), keys, cnts)
+    stats = state.stats._replace(
+        staged_entries=state.stats.staged_entries
+        + n_fit.sum(dtype=jnp.int32))
+    state = state._replace(log_keys=log_keys, log_counts=log_counts,
+                           log_ptr=log_ptr, stats=stats)
+    return state, rest_k, rest_c
+
+
+# ---------------------------------------------------------------------------
+# merge paths (all through the merge_dirty Pallas kernel)
+# ---------------------------------------------------------------------------
+def merge_dirty_batch(cfg, state: DeviceTableState, keys, cnts):
+    """One dirty-block merge pass over a flat batch of staged updates.
+
+    The dirty set is computed from the staged keys' ``s()`` values; the
+    kernel grid walks a *permutation* of all blocks with the dirty ones
+    first (every block id appears exactly once, so revisit hazards cannot
+    arise), but only the dirty prefix carries updates and only it is
+    charged to ``tile_loads``/``tile_stores``. Updates beyond a block's
+    ``max_updates_per_block`` are returned as carry and must stay staged.
+
+    Pallas grids are static, so the permutation still has ``num_blocks``
+    steps — the clean suffix is a no-op visit, and the *counters* (not
+    the kernel walltime) model the paper's per-scheme cleans here. A
+    truly partial grid needs a statically-known dirty count; that is
+    exactly what MDB's partition layout provides
+    (:func:`merge_partition`, grid length ``k``).
+    """
+    pair = cfg.pair
+    n_b = cfg.num_blocks
+    valid = keys != EMPTY
+    blk = jnp.where(valid, pair.s(keys), 0).astype(jnp.int32)
+    per_block = jnp.zeros((n_b,), jnp.int32).at[blk].add(
+        valid.astype(jnp.int32))
+    dirty = per_block > 0
+    # grid order: dirty blocks (ascending id — the semi-random write
+    # discipline), then clean blocks with EMPTY update rows (no-op visits).
+    perm = jnp.argsort(jnp.where(dirty, 0, 1), stable=True).astype(jnp.int32)
+    inv = jnp.zeros((n_b,), jnp.int32).at[perm].set(
+        jnp.arange(n_b, dtype=jnp.int32))
+    rows = jnp.where(valid, inv[blk], n_b).astype(jnp.int32)
+    uk, uc, carry_k, carry_c, n_carried = hops.bucket_rows(
+        rows, keys, cnts, n_b, cfg.max_updates_per_block)
+    nk, nc, spill_k, spill_c = hops.merge_dirty(
+        pair, state.keys, state.counts, perm, uk, uc, cfg.interpret)
+    state = state._replace(keys=nk, counts=nc)
+    state = append_overflow(state, spill_k, spill_c)
+    n_dirty = dirty.sum(dtype=jnp.int32)
+    stats = state.stats._replace(
+        tile_loads=state.stats.tile_loads + n_dirty,
+        tile_stores=state.stats.tile_stores + n_dirty,
+        carried=state.stats.carried + n_carried)
+    return state._replace(stats=stats), carry_k, carry_c
+
+
+def drain_log(cfg, state: DeviceTableState) -> DeviceTableState:
+    """Drain the monolithic log into the data segment (dirty-block merge).
+
+    Carried updates (exceeded a tile's max_u) stay staged, compacted to
+    the log head; everything else is cleared."""
+    state, carry_k, carry_c = merge_dirty_batch(
+        cfg, state, state.log_keys, state.log_counts)
+    log_keys, log_counts, n_carry = compact(carry_k, carry_c)
+    stats = state.stats._replace(merges=state.stats.merges + 1)
+    return state._replace(log_keys=log_keys, log_counts=log_counts,
+                          log_ptr=n_carry, stats=stats)
+
+
+def merge_partition(cfg, state: DeviceTableState, p) -> DeviceTableState:
+    """Drain change-segment partition ``p`` into its ``k`` data blocks.
+
+    The dirty set is exactly the partition's block range
+    ``[p*k, (p+1)*k)`` — the paper's §2.4 CS-block merge — so the merge
+    costs ``k`` tile loads + stores, never ``num_blocks``."""
+    pair = cfg.pair
+    k = cfg.blocks_per_partition
+    sk = jax.lax.dynamic_index_in_dim(state.log_keys, p, keepdims=False)
+    sc = jax.lax.dynamic_index_in_dim(state.log_counts, p, keepdims=False)
+    rows = jnp.where(sk != EMPTY, pair.s(sk) - p * k, k).astype(jnp.int32)
+    uk, uc, carry_k, carry_c, n_carried = hops.bucket_rows(
+        rows, sk, sc, k, cfg.max_updates_per_block)
+    dirty = (p * k + jnp.arange(k)).astype(jnp.int32)
+    nk, nc, spill_k, spill_c = hops.merge_dirty(
+        pair, state.keys, state.counts, dirty, uk, uc, cfg.interpret)
+    state = state._replace(keys=nk, counts=nc)
+    state = append_overflow(state, spill_k, spill_c)
+    # carried updates stay staged at the head of the partition
+    new_k, new_c, n_carry = compact(carry_k, carry_c)
+    log_keys = jax.lax.dynamic_update_index_in_dim(
+        state.log_keys, new_k, p, 0)
+    log_counts = jax.lax.dynamic_update_index_in_dim(
+        state.log_counts, new_c, p, 0)
+    stats = state.stats._replace(
+        tile_loads=state.stats.tile_loads + k,
+        tile_stores=state.stats.tile_stores + k,
+        merges=state.stats.merges + 1,
+        carried=state.stats.carried + n_carried)
+    return state._replace(log_keys=log_keys, log_counts=log_counts,
+                          log_ptr=state.log_ptr.at[p].set(n_carry),
+                          stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# query-side scan (change segment + overflow, shared across a batch)
+# ---------------------------------------------------------------------------
+def scan_segment(seg_keys, seg_counts, q, chunk: int = 1024):
+    """Masked linear scan of a log/overflow segment for a query batch.
+
+    One scan serves the whole batch (the ``(Q, chunk)`` compare is shared
+    across every query), so batched lookups pay the change-segment read
+    once rather than per key. The segment is EMPTY-padded up to a chunk
+    multiple: ``dynamic_slice`` clamps out-of-range starts, so an
+    unpadded non-multiple tail would re-read (and double-count) the
+    overlap with the previous chunk.
+    """
+    cap = seg_keys.shape[0]
+    chunk = min(chunk, cap)
+    pad = -cap % chunk
+    if pad:
+        seg_keys = jnp.concatenate(
+            [seg_keys, jnp.full((pad,), EMPTY, seg_keys.dtype)])
+        seg_counts = jnp.concatenate(
+            [seg_counts, jnp.zeros((pad,), seg_counts.dtype)])
+    n_chunks = (cap + pad) // chunk
+
+    def body(i, acc):
+        lk = jax.lax.dynamic_slice(seg_keys, (i * chunk,), (chunk,))
+        lc = jax.lax.dynamic_slice(seg_counts, (i * chunk,), (chunk,))
+        m = (q[:, None] == lk[None, :]) & (lk[None, :] != EMPTY)
+        return acc + jnp.sum(m * lc[None, :], axis=1, dtype=jnp.int32)
+
+    return jax.lax.fori_loop(0, n_chunks,
+                             body, jnp.zeros(q.shape, jnp.int32))

@@ -8,7 +8,11 @@ partitioned for MDB); Pallas tile merge = block-level update. Stats
 counters mirror the paper's ledger: ``tile_stores`` is the clean/wear
 analogue (one per block rewrite).
 
-All three of the paper's schemes are implemented (DESIGN.md §3):
+This module is *scheme policy only* (DESIGN.md §3): when each of the
+paper's three schemes stages, drains and merges. The segment state record
+and every shared op (pointer-bumped staging, dirty-block merges, query
+scans) live in :mod:`segments`; the host-side RAM buffer H_R in front of
+this module is :mod:`write_engine`.
 
 * ``MB``    — no change segment; every update batch is bucketed and merged
   immediately into the dirty blocks it touches.
@@ -19,29 +23,34 @@ All three of the paper's schemes are implemented (DESIGN.md §3):
 * ``MDB-L`` — monolithic log change segment; sequential appends; a full
   log drains through a dirty merge over only the blocks with staged keys.
 
-Every merge path runs the :func:`..kernels.flash_hash.ops.merge_dirty`
-Pallas kernel, so ``tile_loads``/``tile_stores`` count only blocks that
-actually had staged updates (MDB additionally pays for its whole
-partition, per the paper's CS-block erase) — the per-scheme clean counts
-of the paper's Figure 5, on device.
-
 Everything is functional: ``state -> op -> state`` and jit-friendly; the
 scheme is a static config choice, so each policy compiles to its own
-program.
+program. The ``update``/``flush`` entry points **donate** the incoming
+state (DESIGN.md §7): the old state's buffers are reused in place rather
+than copied — callers must rebind (``state = update(cfg, state, ...)``)
+and never touch the donated value again.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels.flash_hash import ops as hops
+from . import segments as seg
 from .hashing import Pow2Hash
 
-EMPTY = hops.EMPTY
+EMPTY = seg.EMPTY
+
+# re-exported state records: the segment layer owns them, the public API
+# (and every existing consumer) reaches them through this module
+TableStats = seg.TableStats
+DeviceTableState = seg.DeviceTableState
+accumulate_deltas = seg.accumulate_deltas
+_scan_segment = seg.scan_segment          # back-compat alias (tests)
 
 _SCHEMES = ("MB", "MDB", "MDB-L")
 
@@ -98,167 +107,34 @@ class FlashTableConfig:
         return self.log_capacity // self.cs_partitions
 
 
-class TableStats(NamedTuple):
-    tile_loads: jax.Array       # blocks read from HBM during merges
-    tile_stores: jax.Array      # blocks rewritten (the paper's "cleans")
-    staged_entries: jax.Array   # entries appended to the log (seq writes)
-    merges: jax.Array
-    stages: jax.Array
-    dropped: jax.Array          # capacity losses (should be 0)
-    carried: jax.Array          # updates deferred past a tile's max_u cap
-
-
-class DeviceTableState(NamedTuple):
-    keys: jax.Array        # (n_b, r) int32
-    counts: jax.Array      # (n_b, r) int32
-    log_keys: jax.Array    # change segment: (log_cap,) for MDB-L,
-                           # (cs_partitions, part_cap) for MDB
-    log_counts: jax.Array  # same shape as log_keys
-    log_ptr: jax.Array     # () int32 for MDB-L, (cs_partitions,) for MDB
-    ov_keys: jax.Array     # (ov_cap,) int32 — overflow region
-    ov_counts: jax.Array   # (ov_cap,) int32
-    ov_ptr: jax.Array      # () int32
-    stats: TableStats
-
-
-def _zero_stats() -> TableStats:
-    z = lambda: jnp.zeros((), jnp.int32)
-    return TableStats(tile_loads=z(), tile_stores=z(), staged_entries=z(),
-                      merges=z(), stages=z(), dropped=z(), carried=z())
-
-
 def init(cfg: FlashTableConfig) -> DeviceTableState:
-    n_b, r = cfg.num_blocks, cfg.block_entries
     if cfg.scheme == "MDB":
         log_shape = (cfg.cs_partitions, cfg.partition_capacity)
-        log_ptr = jnp.zeros((cfg.cs_partitions,), jnp.int32)
+        log_ptr_shape = (cfg.cs_partitions,)
     else:
         log_shape = (cfg.log_capacity,)
-        log_ptr = jnp.zeros((), jnp.int32)
-    return DeviceTableState(
-        keys=jnp.full((n_b, r), EMPTY, jnp.int32),
-        counts=jnp.zeros((n_b, r), jnp.int32),
-        log_keys=jnp.full(log_shape, EMPTY, jnp.int32),
-        log_counts=jnp.zeros(log_shape, jnp.int32),
-        log_ptr=log_ptr,
-        ov_keys=jnp.full((cfg.overflow_capacity,), EMPTY, jnp.int32),
-        ov_counts=jnp.zeros((cfg.overflow_capacity,), jnp.int32),
-        ov_ptr=jnp.zeros((), jnp.int32),
-        stats=_zero_stats(),
-    )
-
-
-@jax.jit
-def accumulate_deltas(tokens, deltas):
-    """RAM-buffer dedup with explicit deltas (supports deletion-by-−1)."""
-    order = jnp.argsort(tokens, stable=True)
-    t = tokens[order]
-    d = deltas[order]
-    is_head = jnp.concatenate([jnp.ones((1,), bool), t[1:] != t[:-1]])
-    is_head &= t != EMPTY
-    seg = jnp.cumsum(is_head) - 1
-    sums = jax.ops.segment_sum(jnp.where(t != EMPTY, d, 0), seg,
-                               num_segments=t.shape[0])
-    comp = jnp.argsort(jnp.where(is_head, 0, 1), stable=True)
-    keys = jnp.where(is_head[comp], t[comp], EMPTY)
-    cnts = jnp.where(is_head[comp],
-                     sums[jnp.clip(seg[comp], 0, t.shape[0] - 1)], 0)
-    return keys, cnts.astype(jnp.int32)
-
-
-def _append_overflow(state: DeviceTableState, spill_k, spill_c):
-    """Compact spilled entries into the overflow region (page-chained in the
-    paper; a pointer-bumped array here)."""
-    flat_k = spill_k.reshape(-1)
-    flat_c = spill_c.reshape(-1)
-    valid = flat_k != EMPTY
-    ov_cap = state.ov_keys.shape[0]
-    pos = state.ov_ptr + jnp.cumsum(valid.astype(jnp.int32)) - 1
-    in_range = valid & (pos < ov_cap)
-    idx = jnp.where(in_range, pos, ov_cap)  # OOB drops
-    ov_keys = state.ov_keys.at[idx].set(jnp.where(in_range, flat_k, EMPTY),
-                                        mode="drop")
-    ov_counts = state.ov_counts.at[idx].add(flat_c * in_range, mode="drop")
-    n_spill = valid.sum(dtype=jnp.int32)
-    n_fit = in_range.sum(dtype=jnp.int32)
-    return state._replace(
-        ov_keys=ov_keys, ov_counts=ov_counts,
-        ov_ptr=jnp.minimum(state.ov_ptr + n_spill, ov_cap),
-        stats=state.stats._replace(
-            dropped=state.stats.dropped + (n_spill - n_fit)))
-
-
-def _compact(keys, counts):
-    """Compact valid entries to the front, EMPTY-pad the tail."""
-    valid = keys != EMPTY
-    comp = jnp.argsort(~valid, stable=True)
-    return (jnp.where(valid[comp], keys[comp], EMPTY),
-            jnp.where(valid[comp], counts[comp], 0),
-            valid.sum(dtype=jnp.int32))
+        log_ptr_shape = ()
+    return seg.init_state(cfg.num_blocks, cfg.block_entries,
+                          log_shape, log_ptr_shape, cfg.overflow_capacity)
 
 
 # ---------------------------------------------------------------------------
-# dirty-block merge machinery (shared by MB and MDB-L)
+# MB policy (§2.3): no change segment
 # ---------------------------------------------------------------------------
-def _merge_dirty_batch(cfg: FlashTableConfig, state: DeviceTableState,
-                       keys, cnts):
-    """One dirty-block merge pass over a flat batch of staged updates.
-
-    The dirty set is computed from the staged keys' ``s()`` values; the
-    kernel grid walks a *permutation* of all blocks with the dirty ones
-    first (every block id appears exactly once, so revisit hazards cannot
-    arise), but only the dirty prefix carries updates and only it is
-    charged to ``tile_loads``/``tile_stores``. Updates beyond a block's
-    ``max_updates_per_block`` are returned as carry and must stay staged.
-
-    Pallas grids are static, so the permutation still has ``num_blocks``
-    steps — the clean suffix is a no-op visit, and the *counters* (not
-    the kernel walltime) model the paper's per-scheme cleans here. A
-    truly partial grid needs a statically-known dirty count; that is
-    exactly what MDB's partition layout provides
-    (:func:`_mdb_merge_partition`, grid length ``k``).
-    """
-    pair = cfg.pair
-    n_b = cfg.num_blocks
-    valid = keys != EMPTY
-    blk = jnp.where(valid, pair.s(keys), 0).astype(jnp.int32)
-    per_block = jnp.zeros((n_b,), jnp.int32).at[blk].add(
-        valid.astype(jnp.int32))
-    dirty = per_block > 0
-    # grid order: dirty blocks (ascending id — the semi-random write
-    # discipline), then clean blocks with EMPTY update rows (no-op visits).
-    perm = jnp.argsort(jnp.where(dirty, 0, 1), stable=True).astype(jnp.int32)
-    inv = jnp.zeros((n_b,), jnp.int32).at[perm].set(
-        jnp.arange(n_b, dtype=jnp.int32))
-    rows = jnp.where(valid, inv[blk], n_b).astype(jnp.int32)
-    uk, uc, carry_k, carry_c, n_carried = hops.bucket_rows(
-        rows, keys, cnts, n_b, cfg.max_updates_per_block)
-    nk, nc, spill_k, spill_c = hops.merge_dirty(
-        pair, state.keys, state.counts, perm, uk, uc, cfg.interpret)
-    state = state._replace(keys=nk, counts=nc)
-    state = _append_overflow(state, spill_k, spill_c)
-    n_dirty = dirty.sum(dtype=jnp.int32)
-    stats = state.stats._replace(
-        tile_loads=state.stats.tile_loads + n_dirty,
-        tile_stores=state.stats.tile_stores + n_dirty,
-        carried=state.stats.carried + n_carried)
-    return state._replace(stats=stats), carry_k, carry_c
-
-
 def _mb_update(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
                ) -> DeviceTableState:
-    """MB (§2.3): no change segment — merge the deduped batch immediately.
+    """MB: merge the deduped batch immediately.
 
     Carry (a block receiving more than ``max_updates_per_block`` updates in
     one batch) is merged again until drained, so no counts are lost."""
-    state, carry_k, carry_c = _merge_dirty_batch(cfg, state, keys, cnts)
+    state, carry_k, carry_c = seg.merge_dirty_batch(cfg, state, keys, cnts)
 
     def cond(t):
         return (t[1] != EMPTY).any()
 
     def body(t):
         st, ck, cc = t
-        return _merge_dirty_batch(cfg, st, ck, cc)
+        return seg.merge_dirty_batch(cfg, st, ck, cc)
 
     state, _, _ = jax.lax.while_loop(cond, body, (state, carry_k, carry_c))
     return state._replace(
@@ -266,21 +142,8 @@ def _mb_update(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
 
 
 # ---------------------------------------------------------------------------
-# MDB-L: monolithic log change segment
+# MDB-L policy (§2.4): monolithic log change segment
 # ---------------------------------------------------------------------------
-def _merge_now(cfg: FlashTableConfig, state: DeviceTableState
-               ) -> DeviceTableState:
-    """Drain the MDB-L log into the data segment (dirty-block merge)."""
-    state, carry_k, carry_c = _merge_dirty_batch(
-        cfg, state, state.log_keys, state.log_counts)
-    # carried updates (exceeded a tile's max_u) stay staged, compacted to
-    # the log head; everything else is cleared.
-    log_keys, log_counts, n_carry = _compact(carry_k, carry_c)
-    stats = state.stats._replace(merges=state.stats.merges + 1)
-    return state._replace(log_keys=log_keys, log_counts=log_counts,
-                          log_ptr=n_carry, stats=stats)
-
-
 def _stage(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
            ) -> DeviceTableState:
     """Append a deduped chunk to the MDB-L log (sequential write).
@@ -299,114 +162,28 @@ def _stage(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
 
     state = jax.lax.while_loop(
         lambda st: st.log_ptr + chunk > cap,
-        lambda st: _merge_now(cfg, st),
+        lambda st: seg.drain_log(cfg, st),
         state)
-    log_keys = jax.lax.dynamic_update_slice(state.log_keys, keys,
-                                            (state.log_ptr,))
-    log_counts = jax.lax.dynamic_update_slice(state.log_counts, cnts,
-                                              (state.log_ptr,))
-    n_new = (keys != EMPTY).sum(dtype=jnp.int32)
-    stats = state.stats._replace(
-        staged_entries=state.stats.staged_entries + n_new,
-        stages=state.stats.stages + 1)
-    return state._replace(log_keys=log_keys, log_counts=log_counts,
-                          log_ptr=state.log_ptr + chunk, stats=stats)
+    return seg.append_log(cfg, state, keys, cnts)
 
 
 # ---------------------------------------------------------------------------
-# MDB: partitioned change segment
+# MDB policy (§2.4): partitioned change segment
 # ---------------------------------------------------------------------------
-def _mdb_merge_partition(cfg: FlashTableConfig, state: DeviceTableState, p
-                         ) -> DeviceTableState:
-    """Drain change-segment partition ``p`` into its ``k`` data blocks.
-
-    The dirty set is exactly the partition's block range
-    ``[p*k, (p+1)*k)`` — the paper's §2.4 CS-block merge — so the merge
-    costs ``k`` tile loads + stores, never ``num_blocks``."""
-    pair = cfg.pair
-    k = cfg.blocks_per_partition
-    sk = jax.lax.dynamic_index_in_dim(state.log_keys, p, keepdims=False)
-    sc = jax.lax.dynamic_index_in_dim(state.log_counts, p, keepdims=False)
-    rows = jnp.where(sk != EMPTY, pair.s(sk) - p * k, k).astype(jnp.int32)
-    uk, uc, carry_k, carry_c, n_carried = hops.bucket_rows(
-        rows, sk, sc, k, cfg.max_updates_per_block)
-    dirty = (p * k + jnp.arange(k)).astype(jnp.int32)
-    nk, nc, spill_k, spill_c = hops.merge_dirty(
-        pair, state.keys, state.counts, dirty, uk, uc, cfg.interpret)
-    state = state._replace(keys=nk, counts=nc)
-    state = _append_overflow(state, spill_k, spill_c)
-    # carried updates stay staged at the head of the partition
-    new_k, new_c, n_carry = _compact(carry_k, carry_c)
-    log_keys = jax.lax.dynamic_update_index_in_dim(
-        state.log_keys, new_k, p, 0)
-    log_counts = jax.lax.dynamic_update_index_in_dim(
-        state.log_counts, new_c, p, 0)
-    stats = state.stats._replace(
-        tile_loads=state.stats.tile_loads + k,
-        tile_stores=state.stats.tile_stores + k,
-        merges=state.stats.merges + 1,
-        carried=state.stats.carried + n_carried)
-    return state._replace(log_keys=log_keys, log_counts=log_counts,
-                          log_ptr=state.log_ptr.at[p].set(n_carry),
-                          stats=stats)
-
-
 def _mdb_merge_where(cfg: FlashTableConfig, state: DeviceTableState, mask
                      ) -> DeviceTableState:
     """Merge every partition whose ``mask`` entry is set."""
     def body(p, st):
         return jax.lax.cond(mask[p],
-                            lambda s: _mdb_merge_partition(cfg, s, p),
+                            lambda s: seg.merge_partition(cfg, s, p),
                             lambda s: s, st)
     return jax.lax.fori_loop(0, cfg.cs_partitions, body, state)
 
 
-def _mdb_partition_of(cfg: FlashTableConfig, keys):
-    """Partition id per key; invalid keys map to the sentinel P."""
-    P = cfg.cs_partitions
-    return jnp.where(keys != EMPTY,
-                     cfg.pair.s(keys) // cfg.blocks_per_partition,
-                     P).astype(jnp.int32)
-
-
-def _mdb_scatter(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts):
-    """Append a deduped chunk into its partitions (semi-random page writes).
-
-    Returns (state, rest_keys, rest_counts): entries whose partition was
-    full are *not* staged and come back EMPTY-compacted for the caller to
-    retry after a merge."""
-    P = cfg.cs_partitions
-    part_cap = cfg.partition_capacity
-    (U,) = keys.shape
-    part = _mdb_partition_of(cfg, keys)
-    order = jnp.argsort(part, stable=True)
-    sk, sc, sp = keys[order], cnts[order], part[order]
-    start = jnp.searchsorted(sp, jnp.arange(P + 1, dtype=sp.dtype))
-    rank = jnp.arange(U, dtype=jnp.int32) - start[jnp.clip(sp, 0, P)]
-    pos = state.log_ptr[jnp.clip(sp, 0, P - 1)] + rank
-    fits = (sp < P) & (pos < part_cap)
-    row = jnp.where(fits, sp, P)
-    col = jnp.where(fits, pos, 0)
-    log_keys = state.log_keys.at[row, col].set(sk, mode="drop")
-    log_counts = state.log_counts.at[row, col].set(sc, mode="drop")
-    n_fit = jnp.zeros((P,), jnp.int32).at[row].add(fits.astype(jnp.int32),
-                                                   mode="drop")
-    rest = (sp < P) & ~fits
-    rest_k = jnp.where(rest, sk, EMPTY)
-    rest_c = jnp.where(rest, sc, 0)
-    stats = state.stats._replace(
-        staged_entries=state.stats.staged_entries
-        + fits.sum(dtype=jnp.int32))
-    state = state._replace(log_keys=log_keys, log_counts=log_counts,
-                           log_ptr=state.log_ptr + n_fit, stats=stats)
-    return state, rest_k, rest_c
-
-
 def _mdb_update(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
                 ) -> DeviceTableState:
-    """MDB (§2.4): stage into per-partition buffers; a partition that
-    cannot fit the incoming entries is drained first through its k-block
-    dirty merge.
+    """MDB: stage into per-partition buffers; a partition that cannot fit
+    the incoming entries is drained first through its k-block dirty merge.
 
     Like the MDB-L stage path, draining loops until everything fits: a
     merge can leave carry at the partition head, so under hot-block
@@ -415,23 +192,23 @@ def _mdb_update(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
     every drain strictly shrinks a non-empty partition's staged count, so
     the loop terminates with no counts dropped."""
     P = cfg.cs_partitions
-    part = _mdb_partition_of(cfg, keys)
+    part = seg.partition_of(cfg, keys)
     n_inc = jnp.zeros((P,), jnp.int32).at[part].add(
         (keys != EMPTY).astype(jnp.int32), mode="drop")
     state = _mdb_merge_where(
         cfg, state, state.log_ptr + n_inc > cfg.partition_capacity)
-    state, rest_k, rest_c = _mdb_scatter(cfg, state, keys, cnts)
+    state, rest_k, rest_c = seg.scatter_partitions(cfg, state, keys, cnts)
 
     def cond(t):
         return (t[1] != EMPTY).any()
 
     def body(t):
         st, rk, rc = t
-        n_rest = jnp.zeros((P,), jnp.int32).at[_mdb_partition_of(cfg, rk)
+        n_rest = jnp.zeros((P,), jnp.int32).at[seg.partition_of(cfg, rk)
                                                ].add(
             (rk != EMPTY).astype(jnp.int32), mode="drop")
         st = _mdb_merge_where(cfg, st, n_rest > 0)
-        return _mdb_scatter(cfg, st, rk, rc)
+        return seg.scatter_partitions(cfg, st, rk, rc)
 
     state, _, _ = jax.lax.while_loop(cond, body, (state, rest_k, rest_c))
     return state._replace(
@@ -441,10 +218,8 @@ def _mdb_update(cfg: FlashTableConfig, state: DeviceTableState, keys, cnts
 # ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnums=0)
-def update(cfg: FlashTableConfig, state: DeviceTableState, tokens,
-           deltas: Optional[jax.Array] = None) -> DeviceTableState:
-    """Insert a batch of tokens (or (token, Δ) pairs) into the table."""
+def _update_impl(cfg: FlashTableConfig, state: DeviceTableState, tokens,
+                 deltas: Optional[jax.Array] = None) -> DeviceTableState:
     tokens = tokens.astype(jnp.int32)
     if deltas is None:
         keys, cnts = hops.accumulate(tokens)
@@ -467,46 +242,30 @@ def update(cfg: FlashTableConfig, state: DeviceTableState, tokens,
     return state
 
 
-@functools.partial(jax.jit, static_argnums=0)
+#: Insert a batch of tokens (or (token, Δ) pairs) into the table.
+#: ``state`` is **donated**: its buffers are updated in place (no HBM copy
+#: of the table per call). Rebind the result and never reuse the argument.
+update = functools.partial(jax.jit, static_argnums=0,
+                           donate_argnums=1)(_update_impl)
+
+#: Un-donated twin of :func:`update` — the pre-engine per-call discipline
+#: (every call copies the table state). Kept for benchmarks that measure
+#: what donation buys (``fig4dev``); new code should use :func:`update`.
+update_copying = functools.partial(jax.jit, static_argnums=0)(_update_impl)
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
 def flush(cfg: FlashTableConfig, state: DeviceTableState) -> DeviceTableState:
-    """Force a merge of any staged state (end-of-stream / checkpoint)."""
+    """Force a merge of any staged state (end-of-stream / checkpoint).
+
+    Like :func:`update`, donates ``state``."""
     if cfg.scheme == "MB":
         return state
     if cfg.scheme == "MDB":
         return _mdb_merge_where(cfg, state, state.log_ptr > 0)
     return jax.lax.cond(state.log_ptr > 0,
-                        lambda st: _merge_now(cfg, st),
+                        lambda st: seg.drain_log(cfg, st),
                         lambda st: st, state)
-
-
-def _scan_segment(seg_keys, seg_counts, q, chunk: int = 1024):
-    """Masked linear scan of a log/overflow segment for a query batch.
-
-    One scan serves the whole batch (the ``(Q, chunk)`` compare is shared
-    across every query), so batched lookups pay the change-segment read
-    once rather than per key. The segment is EMPTY-padded up to a chunk
-    multiple: ``dynamic_slice`` clamps out-of-range starts, so an
-    unpadded non-multiple tail would re-read (and double-count) the
-    overlap with the previous chunk.
-    """
-    cap = seg_keys.shape[0]
-    chunk = min(chunk, cap)
-    pad = -cap % chunk
-    if pad:
-        seg_keys = jnp.concatenate(
-            [seg_keys, jnp.full((pad,), EMPTY, seg_keys.dtype)])
-        seg_counts = jnp.concatenate(
-            [seg_counts, jnp.zeros((pad,), seg_counts.dtype)])
-    n_chunks = (cap + pad) // chunk
-
-    def body(i, acc):
-        lk = jax.lax.dynamic_slice(seg_keys, (i * chunk,), (chunk,))
-        lc = jax.lax.dynamic_slice(seg_counts, (i * chunk,), (chunk,))
-        m = (q[:, None] == lk[None, :]) & (lk[None, :] != EMPTY)
-        return acc + jnp.sum(m * lc[None, :], axis=1, dtype=jnp.int32)
-
-    return jax.lax.fori_loop(0, n_chunks,
-                             body, jnp.zeros(q.shape, jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnums=0)
@@ -516,14 +275,16 @@ def lookup(cfg: FlashTableConfig, state: DeviceTableState, q_keys
     probe — one tile fetch per queried block per wave) + change segment
     scan + overflow scan, each shared across the whole batch. Returns
     (counts, probe_distances); ``EMPTY`` entries are padding → ``(0, 0)``.
+
+    Read path: ``state`` is *not* donated.
     """
     q = q_keys.astype(jnp.int32)
     cnt, dist = hops.query_blocked(cfg.pair, state.keys, state.counts, q,
                                    128, cfg.interpret)
     if cfg.scheme != "MB":  # MB has no change segment to consolidate
-        cnt = cnt + _scan_segment(state.log_keys.reshape(-1),
-                                  state.log_counts.reshape(-1), q)
-    cnt = cnt + _scan_segment(state.ov_keys, state.ov_counts, q)
+        cnt = cnt + seg.scan_segment(state.log_keys.reshape(-1),
+                                     state.log_counts.reshape(-1), q)
+    cnt = cnt + seg.scan_segment(state.ov_keys, state.ov_counts, q)
     return cnt, dist
 
 

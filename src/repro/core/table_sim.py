@@ -363,6 +363,24 @@ class FlashHashTableBase:
             (self.query(int(k)) if k != EMPTY else 0 for k in flat),
             dtype=np.int64, count=flat.size)
 
+    def update_batch(self, keys, deltas: Optional[np.ndarray] = None) -> None:
+        """Batched (token, Δ) writes — API twin of the device write
+        engine's dispatch chunks. Accepts the engine's EMPTY-padded
+        fixed-shape layout: EMPTY keys are padding and are ignored at no
+        cost, and explicit deltas carry counting semantics (±Δ,
+        deletion-by-decrement). This keeps the event-level sim a drop-in
+        oracle for workloads driven through ``BatchedWriteEngine``."""
+        flat = np.asarray(keys).reshape(-1).astype(np.int64)
+        if deltas is None:
+            d = np.ones(flat.size, dtype=np.int64)
+        else:
+            d = np.asarray(deltas).reshape(-1).astype(np.int64)
+            if d.size != flat.size:
+                raise ValueError(f"deltas size {d.size} != keys {flat.size}")
+        m = flat != EMPTY
+        if m.any():
+            self.insert_batch(flat[m], d[m])
+
     # convenience for tests: exact logical count, no cost accounting
     def logical_count(self, key: int) -> int:
         return (self.ram.get(int(key)) + self._staged_count(int(key))

@@ -31,71 +31,85 @@ from .table_sim import make_table
 class DeviceTableAdapter:
     """``table_sim``-compatible facade over the device table.
 
-    Wraps :mod:`core.table_jax` state behind the small surface the TF-IDF
+    Wraps :mod:`core.table_jax` behind the small surface the TF-IDF
     pipeline uses (``insert_batch`` / ``query`` / ``query_batch`` /
     ``finalize``), so the same workload can be driven through the
-    on-device MB / MDB / MDB-L implementations. Reads go through a
-    :class:`..core.query_engine.BatchedQueryEngine` (dedup, fixed-shape
-    chunks, hot-key cache invalidated on every write). ``wear()`` exposes
+    on-device MB / MDB / MDB-L implementations. Writes go through a
+    :class:`..core.write_engine.BatchedWriteEngine` (host H_R dedup,
+    threshold flushes, EMPTY-padded fixed-shape chunks, donated
+    dispatches — DESIGN.md §7), which owns the table state and
+    invalidates the paired :class:`..core.query_engine.BatchedQueryEngine`
+    on every flush. Reads consolidate the device count with the buffered
+    H_R overlay, so unflushed writes are never stale. ``wear()`` exposes
     the device stats whose ``tile_stores`` field is the simulator
     ledger's clean-count analogue.
     """
 
-    def __init__(self, cfg, chunk: int = 4096, query_chunk: int = 1024):
-        import jax.numpy as jnp  # deferred: the sim backend stays jax-free
-
-        from . import table_jax as tj
+    def __init__(self, cfg, chunk: int = 4096, query_chunk: int = 1024,
+                 flush_threshold: Optional[int] = None):
         from .query_engine import BatchedQueryEngine
-        self._jnp = jnp
-        self._tj = tj
+        from .write_engine import BatchedWriteEngine
         self.cfg = cfg
         self.scheme = cfg.scheme
-        self.state = tj.init(cfg)
-        self.chunk = int(chunk)
         self.engine = BatchedQueryEngine(cfg, chunk=query_chunk)
+        self.writer = BatchedWriteEngine(cfg, chunk=chunk,
+                                         flush_threshold=flush_threshold,
+                                         query_engine=self.engine)
+
+    @property
+    def state(self):
+        """Current device table state (owned by the write engine)."""
+        return self.writer.state
+
+    @property
+    def chunk(self) -> int:
+        return self.writer.chunk
+
+    @chunk.setter
+    def chunk(self, value: int) -> None:
+        self.writer.chunk = int(value)
 
     def insert_batch(self, keys: np.ndarray,
                      deltas: Optional[np.ndarray] = None,
                      chunk: Optional[int] = None) -> None:
-        jnp, tj = self._jnp, self._tj
-        keys = np.asarray(keys).reshape(-1)
-        step = int(chunk or self.chunk)
-        for i in range(0, len(keys), step):
-            part = keys[i:i + step]
-            pad = step - len(part)
-            if pad:  # fixed shapes → one compiled program per table
-                part = np.concatenate(
-                    [part, np.full(pad, tj.EMPTY, part.dtype)])
-            t = jnp.asarray(part, jnp.int32)
-            if deltas is None:
-                self.state = tj.update(self.cfg, self.state, t)
-            else:
-                d = deltas[i:i + step]
-                if pad:
-                    d = np.concatenate([d, np.zeros(pad, d.dtype)])
-                self.state = tj.update(self.cfg, self.state, t,
-                                       jnp.asarray(d, jnp.int32))
-        self.engine.invalidate()  # any write can move any count
+        # ``chunk`` (sim-API compatibility) keeps its pre-engine,
+        # call-scoped meaning: this call dispatches at that width, now
+        # (write-through, draining anything already buffered with it).
+        # Without it, writes buffer in H_R at the engine's own width.
+        if chunk is None:
+            self.writer.update(keys, deltas)
+            return
+        prev = self.writer.chunk
+        self.writer.chunk = int(chunk)
+        try:
+            self.writer.update(keys, deltas)
+            self.writer.flush()
+        finally:
+            self.writer.chunk = prev
 
     def query(self, key: int) -> int:
-        return self.engine.query(self.state, int(key))
+        return self.writer.query(int(key))
 
     def query_batch(self, keys) -> np.ndarray:
         """Batched counts (paper §2.7, batched regime): one deduped,
         chunked dispatch for the whole key set instead of a per-key
-        lookup loop — the change-segment scan is paid once per chunk."""
-        return self.engine.query_batch(self.state, keys)
+        lookup loop — the change-segment scan is paid once per chunk,
+        plus the H_R overlay for buffered (unflushed) writes."""
+        return self.writer.query_batch(keys)
 
     # the device table has no separate uncosted path; counts are exact
     logical_count = query
 
     def finalize(self) -> None:
-        self.state = self._tj.flush(self.cfg, self.state)
-        self.engine.invalidate()
+        self.writer.finalize()
 
     def wear(self) -> Dict[str, int]:
-        s = self.state.stats
+        s = self.writer.state.stats
         return {f: int(getattr(s, f)) for f in s._fields}
+
+    def write_stats(self) -> Dict[str, int]:
+        """H_R-side write-path counters (dedup ratio, flushes, dispatches)."""
+        return self.writer.stats.as_dict()
 
 
 def make_device_table(scheme: str, q_log2: int = 14, r_log2: int = 9,

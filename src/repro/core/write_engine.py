@@ -1,0 +1,222 @@
+"""Host-side batched write engine for the device flash-hash table.
+
+The paper's insert/update axis (§2.2, Figure 4) is won by buffering and
+batching writes *before* they reach the device: the RAM buffer H_R
+absorbs and dedups the raw token stream, and only threshold-triggered
+flushes touch flash. PR 2 industrialized the read path
+(:class:`.query_engine.BatchedQueryEngine`); this engine is its write
+twin, the front door every writer (TF-IDF ingest, corpus stats, the
+serving prefix cache's refcount bumps) goes through instead of calling
+``table_jax.update`` per raw batch:
+
+* **host-side H_R** — a token→Δ dict accumulates (and dedups) incoming
+  batches; duplicate tokens fold into one entry, Δs that cancel to zero
+  drop out entirely (paper §2.6: zero-frequency entries are not
+  retained in memory);
+* **threshold-triggered flushes** — the device sees traffic only when
+  the buffer reaches ``flush_threshold`` unique entries (or on an
+  explicit :meth:`flush`/:meth:`merge`), in sorted, deterministic order;
+* **fixed-shape padded chunks** — flushed entries are EMPTY-padded up
+  to ``chunk``, so each table compiles exactly one update program
+  regardless of stream batch sizes (no recompile per new shape);
+* **donation** — dispatches go through the donated
+  ``table_jax.update``/``flush`` entry points, so the table state is
+  updated in place instead of copied per call;
+* **automatic invalidation** — a paired
+  :class:`~.query_engine.BatchedQueryEngine` is invalidated on every
+  flush *by the engine*, not by each caller remembering to. Reads
+  routed through :meth:`query_batch` additionally overlay the buffered
+  (unflushed) Δs, so writers get read-your-writes semantics without
+  forcing a premature device dispatch;
+* **ledger** — :class:`WriteEngineStats` counts buffered / deduped /
+  dispatched entries and flush events alongside the device-side
+  ``TableStats`` wear counters.
+
+Unlike the (state-free) query engine, this engine *owns* the device
+state: buffering means an ``update`` may not touch the device at all,
+so the current ``DeviceTableState`` lives in ``engine.state`` and every
+consumer reaches it through the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class WriteEngineStats:
+    """Write-path counters (DESIGN.md §7), the H_R-side ledger that
+    complements the device ``TableStats`` wear counters."""
+
+    updates: int = 0             # update() calls (writer-side batches)
+    entries: int = 0             # valid (token, Δ) entries received
+    buffered: int = 0            # entries that opened a new H_R slot
+    deduped: int = 0             # entries absorbed without opening a
+                                 # slot (duplicates + cancellations);
+                                 # entries == buffered + deduped
+    cancelled: int = 0           # Δ sums that hit zero in H_R (§2.6)
+    dispatched_entries: int = 0  # unique (token, Δ) pairs sent to device
+    dispatches: int = 0          # compiled update launches (chunks)
+    flushes: int = 0             # H_R drain events (explicit + auto)
+    auto_flushes: int = 0        # threshold-triggered drains
+    merges: int = 0              # device-merge (table flush) requests
+    invalidations: int = 0       # query-engine invalidations driven
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class BatchedWriteEngine:
+    """H_R dedup + threshold flush + donated fixed-shape dispatch over
+    ``table_jax.update``."""
+
+    def __init__(self, cfg, state=None, chunk: int = 4096,
+                 flush_threshold: Optional[int] = None,
+                 query_engine=None,
+                 record: Optional[List[Tuple[np.ndarray, np.ndarray]]] = None):
+        import jax.numpy as jnp  # deferred: sim-only users stay jax-free
+
+        from . import table_jax as tj
+        self._jnp = jnp
+        self._tj = tj
+        self.cfg = cfg
+        self.state = tj.init(cfg) if state is None else state
+        self.chunk = int(chunk)
+        self.flush_threshold = int(2 * self.chunk if flush_threshold is None
+                                   else flush_threshold)
+        self.query_engine = query_engine
+        # optional dispatch recorder: every flushed (keys, deltas) chunk is
+        # appended, letting tests/benchmarks replay the exact device
+        # traffic through direct per-call updates (bit-identity oracle)
+        self.record = record
+        self._buf: Dict[int, int] = {}
+        self.stats = WriteEngineStats()
+
+    # -- the buffered write path --------------------------------------------
+    def update(self, tokens, deltas=None) -> None:
+        """Accumulate a (token, Δ) batch into H_R; auto-flush at the
+        threshold. ``EMPTY`` tokens are padding and ignored."""
+        tj = self._tj
+        flat = np.asarray(tokens).reshape(-1).astype(np.int64)
+        if deltas is None:
+            d = np.ones(flat.size, np.int64)
+        else:
+            d = np.asarray(deltas).reshape(-1).astype(np.int64)
+            if d.size != flat.size:
+                raise ValueError(f"deltas size {d.size} != tokens {flat.size}")
+        self.stats.updates += 1
+        valid = flat != tj.EMPTY
+        n_valid = int(valid.sum())
+        if n_valid == 0:
+            return
+        self.stats.entries += n_valid
+        uniq, inv = np.unique(flat[valid], return_inverse=True)
+        sums = np.zeros(uniq.size, np.int64)
+        np.add.at(sums, inv, d[valid])
+        buf = self._buf
+        n_new = 0
+        for k, s in zip(uniq.tolist(), sums.tolist()):
+            cur = buf.get(k)
+            if cur is None:
+                if s:
+                    buf[k] = s
+                    n_new += 1            # a slot really opened
+                else:
+                    self.stats.cancelled += 1  # batch-internal zero sum
+            elif cur + s:
+                buf[k] = cur + s
+            else:
+                del buf[k]
+                self.stats.cancelled += 1
+        self.stats.buffered += n_new
+        self.stats.deduped += n_valid - n_new
+        if len(buf) >= self.flush_threshold:
+            self.stats.auto_flushes += 1
+            self.flush()
+
+    def flush(self):
+        """Drain H_R to the device change segment (stage, no forced
+        merge): sorted entries, EMPTY-padded fixed-shape chunks, donated
+        dispatches; then invalidate the paired query engine."""
+        if not self._buf:
+            return self.state
+        jnp, tj = self._jnp, self._tj
+        keys = np.fromiter(self._buf.keys(), np.int64, len(self._buf))
+        dels = np.fromiter(self._buf.values(), np.int64, len(self._buf))
+        order = np.argsort(keys, kind="stable")   # deterministic dispatch
+        keys, dels = keys[order], dels[order]
+        step = self.chunk
+        for lo in range(0, keys.size, step):
+            pk = keys[lo:lo + step]
+            pd = dels[lo:lo + step]
+            pad = step - pk.size
+            if pad:  # fixed shapes → one compiled program per table
+                pk = np.concatenate([pk, np.full(pad, tj.EMPTY, np.int64)])
+                pd = np.concatenate([pd, np.zeros(pad, np.int64)])
+            if self.record is not None:
+                self.record.append((pk, pd))
+            self.state = tj.update(self.cfg, self.state,
+                                   jnp.asarray(pk, jnp.int32),
+                                   jnp.asarray(pd, jnp.int32))
+            self.stats.dispatches += 1
+        self.stats.dispatched_entries += keys.size
+        self._buf.clear()
+        self.stats.flushes += 1
+        self._invalidate()
+        return self.state
+
+    def merge(self):
+        """Flush H_R, then force the device merge of any staged change
+        segment (end-of-stream / checkpoint)."""
+        invalidated = bool(self._buf)     # flush() invalidates iff it ran
+        self.flush()
+        self.state = self._tj.flush(self.cfg, self.state)
+        self.stats.merges += 1
+        if not invalidated:
+            # conservative: the device merge moves placement, not counts,
+            # but clear the cache anyway — one invalidation per drain
+            self._invalidate()
+        return self.state
+
+    # finalize is the adapter-facing spelling of the same operation
+    finalize = merge
+
+    def _invalidate(self) -> None:
+        if self.query_engine is not None:
+            self.query_engine.invalidate()
+            self.stats.invalidations += 1
+
+    # -- read-your-writes ---------------------------------------------------
+    @property
+    def buffered_entries(self) -> int:
+        """Unique (token, Δ) entries currently held in H_R."""
+        return len(self._buf)
+
+    def pending(self, keys) -> np.ndarray:
+        """Buffered (unflushed) Δ per key — the H_R contribution a
+        consolidated read must add on top of the device count."""
+        flat = np.asarray(keys).reshape(-1)
+        if not self._buf:
+            return np.zeros(flat.size, np.int64)
+        buf = self._buf
+        return np.fromiter((buf.get(int(k), 0) for k in flat),
+                           np.int64, flat.size)
+
+    def query_batch(self, keys) -> np.ndarray:
+        """Consolidated batched read: device counts through the paired
+        query engine, plus the H_R overlay. Because the device state only
+        changes on flush, the hot-key cache stays warm across buffered
+        writes — and reads still see every unflushed Δ."""
+        if self.query_engine is None:
+            raise ValueError("no paired query engine; construct with "
+                             "query_engine=BatchedQueryEngine(cfg)")
+        base = self.query_engine.query_batch(self.state, keys)
+        if self._buf:
+            base = base + self.pending(keys)
+        return base
+
+    def query(self, key: int) -> int:
+        """Single-key convenience wrapper (one-element batch)."""
+        return int(self.query_batch(np.asarray([key]))[0])

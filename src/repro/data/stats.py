@@ -3,7 +3,11 @@ layer's streaming statistics engine.
 
 ``CorpusStats`` ingests token batches into a flash-hash device table
 (MDB-L policy by default — the paper's recommendation) and answers
-frequency queries. On top of it:
+frequency queries. Ingest rides the
+:class:`~repro.core.write_engine.BatchedWriteEngine` (host H_R dedup,
+threshold-triggered donated flushes — DESIGN.md §7), which also drives
+the paired query engine's invalidation, so reads between ingests are
+never stale. On top of it:
 
 * ``tfidf_weights`` — per-token IDF weights for corpus filtering/weighting,
 * ``doc_filter`` — the paper's TF-IDF keyword criterion as a document
@@ -13,23 +17,30 @@ frequency queries. On top of it:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from ..core import table_jax as tj
 from ..core.query_engine import BatchedQueryEngine
+from ..core.write_engine import BatchedWriteEngine
 
 
-@dataclasses.dataclass
 class CorpusStats:
-    cfg: tj.FlashTableConfig
-    state: tj.DeviceTableState
-    docs_seen: int = 0
-    tokens_seen: int = 0
-    engine: Optional[BatchedQueryEngine] = None
+    def __init__(self, cfg: tj.FlashTableConfig,
+                 state: Optional[tj.DeviceTableState] = None,
+                 docs_seen: int = 0, tokens_seen: int = 0,
+                 engine: Optional[BatchedQueryEngine] = None,
+                 writer: Optional[BatchedWriteEngine] = None):
+        self.cfg = cfg
+        self.docs_seen = docs_seen
+        self.tokens_seen = tokens_seen
+        self.engine = engine if engine is not None else BatchedQueryEngine(
+            cfg, chunk=1024)
+        # the write engine owns the device state; a hand-built state
+        # (tests/restores) is adopted as its starting point
+        self.writer = writer if writer is not None else BatchedWriteEngine(
+            cfg, state=state, query_engine=self.engine)
 
     @classmethod
     def create(cls, q_log2: int = 18, r_log2: int = 10,
@@ -39,45 +50,49 @@ class CorpusStats:
         ``cs_partitions``, ...) to :class:`tj.FlashTableConfig`."""
         cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2,
                                   scheme=scheme, **table_kw)
-        return cls(cfg=cfg, state=tj.init(cfg),
-                   engine=BatchedQueryEngine(cfg, chunk=1024))
+        return cls(cfg=cfg)
+
+    @property
+    def state(self) -> tj.DeviceTableState:
+        """Current device table state (owned by the write engine)."""
+        return self.writer.state
 
     def wear(self) -> Dict[str, int]:
         """Device wear/traffic counters (``tile_stores`` = paper cleans);
         includes ``dropped``/``carried`` so capacity losses are visible."""
-        s = self.state.stats
+        s = self.writer.state.stats
         return {f: int(getattr(s, f)) for f in s._fields}
 
     def query_stats(self) -> Dict[str, int]:
         """Batch-aggregated read-path counters (dedup ratio, cache hits,
         probe-distance totals) from the query engine."""
-        return self.engine.stats.as_dict() if self.engine else {}
+        return self.engine.stats.as_dict()
 
-    def _invalidate(self) -> None:
-        if self.engine is not None:
-            self.engine.invalidate()
+    def write_stats(self) -> Dict[str, int]:
+        """H_R write-path counters (buffered/deduped/dispatched entries,
+        flush counts) from the write engine."""
+        return self.writer.stats.as_dict()
 
     # -- ingestion ----------------------------------------------------------
     def ingest(self, tokens: np.ndarray) -> None:
-        """Add one batch/document of token ids (host array)."""
-        t = jnp.asarray(np.asarray(tokens).reshape(-1), jnp.int32)
-        self.state = tj.update(self.cfg, self.state, t)
+        """Add one batch/document of token ids (host array): buffered in
+        H_R, dispatched to the device at the flush threshold."""
+        t = np.asarray(tokens).reshape(-1)
+        self.writer.update(t)
         self.docs_seen += 1
-        self.tokens_seen += int(t.shape[0])
-        self._invalidate()
+        self.tokens_seen += int(t.size)
 
     def flush(self) -> None:
-        self.state = tj.flush(self.cfg, self.state)
-        self._invalidate()
+        """Drain H_R and force the device merge (checkpoint boundary)."""
+        self.writer.merge()
 
     # -- queries ------------------------------------------------------------
     def counts(self, tokens: np.ndarray) -> np.ndarray:
         """Batched frequency lookup: deduped, fixed-shape chunks, served
-        through the hot-key cache between ingests (DESIGN.md §6)."""
+        through the hot-key cache between ingests (DESIGN.md §6), with
+        the buffered H_R deltas overlaid (DESIGN.md §7)."""
         q = np.asarray(tokens).reshape(-1)
-        if self.engine is None:  # states built by hand (tests/restores)
-            self.engine = BatchedQueryEngine(self.cfg, chunk=1024)
-        return self.engine.query_batch(self.state, q)
+        return self.writer.query_batch(q)
 
     def tfidf_weights(self, tokens: np.ndarray) -> np.ndarray:
         """IDF-style weights: log(total / freq) per queried token."""
@@ -103,10 +118,7 @@ class CorpusStats:
         (layer, expert) pairs — counting semantics, deletion-capable)."""
         e = counts.shape[0]
         keys = (np.arange(e, dtype=np.int64) | (np.int64(layer) << 16))
-        reps = jnp.asarray(keys, jnp.int32)
-        deltas = jnp.asarray(counts, jnp.int32)
-        self.state = tj.update(self.cfg, self.state, reps, deltas)
-        self._invalidate()
+        self.writer.update(keys, np.asarray(counts, np.int64))
 
     def expert_counts(self, layer: int, num_experts: int) -> np.ndarray:
         keys = (np.arange(num_experts, dtype=np.int64)

@@ -12,18 +12,22 @@ At cluster scale the value store is paged HBM blocks (vLLM-style) sharded
 like the KV cache; in this reference implementation the store is a host
 dict of cache pytrees, while the *refcount* path runs on-device through
 ``core.table_jax`` (any of the paper's schemes; MDB-L by default) — the
-part the paper contributes.
+part the paper contributes. Refcount bumps ride the
+:class:`~repro.core.write_engine.BatchedWriteEngine` (DESIGN.md §7): ±1
+deltas accumulate in H_R (a +1/−1 pair cancels before ever touching the
+device), reads overlay the buffered deltas so eviction decisions are
+exact, and the engine invalidates the hot-key cache on every flush.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from ..core import table_jax as tj
 from ..core.query_engine import BatchedQueryEngine
+from ..core.write_engine import BatchedWriteEngine
 
 
 def _chain_hash(prev: int, tokens: Sequence[int]) -> int:
@@ -54,12 +58,15 @@ class PrefixKVCache:
                                        cs_partitions=cs_partitions,
                                        max_updates_per_block=1 << 7,
                                        overflow_capacity=1 << 9)
-        self.refs = tj.init(self.cfg)
         # batched refcount reads: evictions scan every resident block key
         # in one deduped dispatch, and repeat scans between bumps are
-        # served from the engine's hot cache (invalidated on every bump).
+        # served from the engine's hot cache + H_R overlay (the write
+        # engine invalidates the cache whenever it flushes to the device).
         self.engine = BatchedQueryEngine(self.cfg, chunk=256,
                                          hot_capacity=4 * capacity_blocks)
+        self.writer = BatchedWriteEngine(self.cfg, chunk=256,
+                                         flush_threshold=2 * capacity_blocks,
+                                         query_engine=self.engine)
         self.store: Dict[int, _Block] = {}
         self.hits = 0
         self.misses = 0
@@ -76,25 +83,24 @@ class PrefixKVCache:
             keys.append(prev)
         return keys
 
+    @property
+    def refs(self) -> tj.DeviceTableState:
+        """Current refcount table state (owned by the write engine)."""
+        return self.writer.state
+
     def _count(self, keys: List[int]) -> np.ndarray:
         if not keys:
             return np.zeros(0, np.int32)
-        return self.engine.query_batch(self.refs, np.asarray(keys, np.int64))
+        # device count + buffered H_R deltas: exact even between flushes
+        return self.writer.query_batch(np.asarray(keys, np.int64))
 
     def _bump(self, keys: List[int], delta: int) -> None:
         if not keys:
             return
-        arr = np.asarray(keys, np.int64)
-        deltas = np.full(len(keys), delta, np.int64)
-        pad = 64 - len(keys) % 64 if len(keys) % 64 else 0
-        if pad:
-            arr = np.concatenate([arr, np.full(pad, tj.EMPTY, np.int64)])
-            deltas = np.concatenate([deltas, np.zeros(pad, np.int64)])
-        self.refs = tj.update(self.cfg, self.refs,
-                              jnp.asarray(arr, jnp.int32),
-                              jnp.asarray(deltas, jnp.int32))
-        self.refs = tj.flush(self.cfg, self.refs)
-        self.engine.invalidate()  # refcounts moved: hot entries are stale
+        # buffered ±delta: a +1/−1 pair cancels in H_R without device
+        # traffic; the engine pads/chunks/invalidates when it flushes
+        self.writer.update(np.asarray(keys, np.int64),
+                           np.full(len(keys), delta, np.int64))
 
     # -- public API ------------------------------------------------------------
     def acquire(self, tokens: Sequence[int]) -> Tuple[int, Optional[Any],
@@ -162,6 +168,7 @@ class PrefixKVCache:
 
     def stats(self) -> dict:
         q = self.engine.stats
+        w = self.writer.stats
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "resident": len(self.store),
                 "scheme": self.cfg.scheme,
@@ -170,4 +177,8 @@ class PrefixKVCache:
                 "carried": int(self.refs.stats.carried),
                 "query_batches": q.batches,
                 "query_cache_hits": q.cache_hits,
-                "query_device_keys": q.device_queries}
+                "query_device_keys": q.device_queries,
+                "write_buffered": w.buffered,
+                "write_cancelled": w.cancelled,
+                "write_flushes": w.flushes,
+                "write_dispatches": w.dispatches}

@@ -61,16 +61,23 @@ def test_query_batch_equals_per_key_equals_sim(scheme):
     assert ov_resident >= 8                               # spill really hit
     sim.insert_batch(merged)
     sim.finalize()
-    # change segment / log: staged only, never flushed (MB merges at once,
-    # which is that scheme's contract — no change segment to stage into)
+    # change segment / log: staged on device, never merged (MB merges at
+    # once, which is that scheme's contract — no change segment to stage
+    # into). writer.flush() drains H_R to the device *without* a merge.
     staged = np.arange(1000, 1020)
     dev.insert_batch(staged)
+    dev.writer.flush()
     sim.insert_batch(staged)
     if scheme != "MB":
         assert int(np.ravel(dev.state.log_ptr).sum()) > 0
+    # RAM buffer H_R: buffered in the write engine, never dispatched
+    buffered = np.arange(5000, 5012)
+    dev.insert_batch(buffered)
+    assert dev.writer.buffered_entries == len(buffered)
+    sim.insert_batch(buffered)
     # the query set crosses every region + absent keys + duplicates
     absent = np.asarray([777777, 888888])
-    q = np.concatenate([hot, staged, bulk[:64], absent, hot[:5]])
+    q = np.concatenate([hot, staged, buffered, bulk[:64], absent, hot[:5]])
     per_key = np.asarray([dev.query(int(k)) for k in q])
     batched = dev.query_batch(q)
     oracle = np.asarray([sim.query(int(k)) for k in q])
@@ -102,12 +109,19 @@ def test_hot_cache_serves_repeats_and_invalidates_on_update():
     np.testing.assert_array_equal(first, second)
     assert st.cache_hits == len(keys)
     assert st.device_dispatches == dispatches      # no device traffic
-    # any write invalidates: the repeat key must show its new count
+    # a buffered (unflushed) write must be visible immediately: the H_R
+    # overlay serves it on top of the still-valid hot cache, with no new
+    # device traffic
     dev.insert_batch(np.asarray([50]))
-    assert st.invalidations >= 1
+    inval_before = st.invalidations
     assert dev.query(50) == 2
-    # and the engine really went back to the device for it
-    assert st.device_queries > len(keys)
+    assert st.device_dispatches == dispatches
+    # the engine-driven flush invalidates the hot cache; the re-probe
+    # then sees the device-resident count
+    dev.writer.flush()
+    assert st.invalidations > inval_before
+    assert dev.query(50) == 2
+    assert st.device_queries > len(keys)           # really went back
 
 
 def test_probe_distance_batch_aggregation():
@@ -152,6 +166,7 @@ def test_engine_state_free_reads():
     """query_batch must not mutate table state (reads are functional)."""
     dev = _dev("MDB")
     dev.insert_batch(np.arange(10))
+    dev.writer.flush()              # drain H_R so the device has the counts
     stats_before = dev.wear()
     eng = BatchedQueryEngine(dev.cfg, chunk=8)
     out = eng.query_batch(dev.state, np.arange(10))

@@ -1,0 +1,204 @@
+"""Batched write engine: engine-buffered ≡ direct tj.update ≡ table_sim.
+
+The PR-3 acceptance property (ISSUE 3): updates routed through the
+host-side H_R buffer (``BatchedWriteEngine``) must be *bit-identical* —
+table contents and wear counters — to dispatching the same chunks
+through direct ``tj.update`` calls, and logically identical to the
+event-level ``table_sim`` oracle, under every scheme, including
+flush-threshold boundaries, Δ-cancellation, and state reuse across
+donated dispatches. Plus the donation-aliasing contract (no stale host
+references survive a donated update) and the automatic-invalidation
+regression (no stale read after an unflushed writer).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import table_jax as tj
+from repro.core.flash_model import TableGeometry
+from repro.core.query_engine import BatchedQueryEngine
+from repro.core.table_sim import make_table
+from repro.core.write_engine import BatchedWriteEngine
+from repro.data import CorpusStats
+
+SCHEMES = ["MB", "MDB", "MDB-L"]
+GEOM = TableGeometry(num_blocks=16, pages_per_block=2, entries_per_page=8)
+
+
+def _cfg(scheme, **kw):
+    base = dict(q_log2=8, r_log2=4, scheme=scheme, log_capacity=64,
+                cs_partitions=4, max_updates_per_block=32,
+                overflow_capacity=128)
+    base.update(kw)
+    return tj.FlashTableConfig(**base)
+
+
+def _assert_states_bitidentical(a, b):
+    """Every leaf — data/change/overflow segments AND TableStats wear
+    counters — must match exactly."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_engine_equals_direct_equals_sim(scheme):
+    cfg = _cfg(scheme)
+    rec = []
+    eng = BatchedWriteEngine(cfg, chunk=32, flush_threshold=48, record=rec)
+    sim = make_table(scheme, GEOM, ram_buffer_pct=10.0,
+                     change_segment_pct=25.0)
+    rng = np.random.default_rng(0)
+    seen = []
+    # several writer batches: duplicates, skew, explicit ±Δ
+    for i in range(6):
+        toks = rng.integers(0, 300, size=40)
+        eng.update(toks)
+        sim.update_batch(toks)
+        seen.append(toks)
+    negs = np.asarray([5, 9, 13])
+    eng.update(negs, np.full(3, -1, np.int64))
+    sim.update_batch(negs, np.full(3, -1, np.int64))
+    # the threshold really triggered mid-stream, and the engine kept
+    # updating through the donated post-flush state
+    assert eng.stats.auto_flushes >= 1
+    assert eng.stats.dispatches >= 1
+    eng.merge()
+    sim.finalize()
+    # 1) logical oracle: engine counts == sim counts for the union of
+    #    touched keys + absent keys (reads through a fresh query engine,
+    #    so nothing is served from a cache)
+    keys = np.concatenate([np.unique(np.concatenate(seen)),
+                           np.asarray([7777, 8888])])
+    qe = BatchedQueryEngine(cfg, hot_capacity=0)
+    got = qe.query_batch(eng.state, keys)
+    want = sim.query_batch(keys)
+    np.testing.assert_array_equal(got, want)
+    # 2) bit-identity: replaying the exact recorded dispatch chunks
+    #    through direct per-call tj.update produces the same final state
+    #    — contents and wear counters — as the engine path
+    st = tj.init(cfg)
+    for pk, pd in rec:
+        st = tj.update(cfg, st, jnp.asarray(pk, jnp.int32),
+                       jnp.asarray(pd, jnp.int32))
+    st = tj.flush(cfg, st)
+    _assert_states_bitidentical(st, eng.state)
+    assert int(eng.state.stats.dropped) == 0
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_flush_threshold_boundary(scheme):
+    """Exactly `flush_threshold` unique entries must trigger the auto
+    flush; one fewer must not."""
+    cfg = _cfg(scheme)
+    eng = BatchedWriteEngine(cfg, chunk=16, flush_threshold=20)
+    eng.update(np.arange(19))
+    assert eng.stats.auto_flushes == 0 and eng.buffered_entries == 19
+    eng.update(np.asarray([19]))          # hits the boundary exactly
+    assert eng.stats.auto_flushes == 1 and eng.buffered_entries == 0
+    assert eng.stats.dispatches == 2      # 20 entries / chunk 16
+    # post-flush, the engine keeps accepting updates on the donated state
+    eng.update(np.arange(5))
+    eng.merge()
+    qe = BatchedQueryEngine(cfg, hot_capacity=0)
+    got = qe.query_batch(eng.state, np.arange(20))
+    np.testing.assert_array_equal(got, [2] * 5 + [1] * 15)
+
+
+def test_delta_cancellation_never_reaches_device():
+    """+Δ/−Δ pairs cancel inside H_R (paper §2.6): no device traffic."""
+    cfg = _cfg("MDB-L")
+    eng = BatchedWriteEngine(cfg, chunk=16, flush_threshold=1000)
+    eng.update(np.asarray([42, 42, 43]))
+    eng.update(np.asarray([42, 42, 43]), np.asarray([-1, -1, -1]))
+    assert eng.buffered_entries == 0
+    assert eng.stats.cancelled == 2
+    eng.flush()                            # empty H_R: no dispatch at all
+    assert eng.stats.dispatches == 0 and eng.stats.dispatched_entries == 0
+
+
+def test_write_stats_ledger_identities():
+    cfg = _cfg("MDB-L")
+    eng = BatchedWriteEngine(cfg, chunk=16, flush_threshold=1000)
+    eng.update(np.asarray([1, 2, 3, 1, 2, tj.EMPTY]))   # EMPTY = padding
+    eng.update(np.asarray([3, 4]))
+    s = eng.stats
+    assert s.updates == 2
+    assert s.entries == 7                  # EMPTY never counted
+    assert s.buffered == 4                 # tokens 1..4 opened slots
+    assert s.deduped == 3                  # 1, 2 (in-batch) + 3 (cross)
+    assert s.entries == s.buffered + s.deduped
+    eng.flush()
+    assert s.dispatched_entries == 4 and s.flushes == 1
+    # a brand-new token whose batch-internal Δs cancel opens no slot:
+    # absorbed (deduped + cancelled), never counted as buffered
+    eng.update(np.asarray([99, 99]), np.asarray([1, -1]))
+    assert eng.buffered_entries == 0
+    assert s.buffered == 4 and s.cancelled == 1
+    assert s.entries == s.buffered + s.deduped   # identity still holds
+
+
+def test_donated_update_invalidates_old_state():
+    """Donation aliasing: after a donated update/flush, the old state's
+    buffers are spent — no stale host reference survives — and the
+    returned state is fully usable."""
+    cfg = _cfg("MDB-L")
+    st0 = tj.init(cfg)
+    st1 = tj.update(cfg, st0, jnp.asarray([1, 2, 3], jnp.int32))
+    assert all(leaf.is_deleted() for leaf in jax.tree.leaves(st0))
+    with pytest.raises(RuntimeError):
+        np.asarray(st0.keys)
+    cnt, _ = tj.lookup(cfg, st1, jnp.asarray([1, 2, 3, 4], jnp.int32))
+    assert list(map(int, cnt)) == [1, 1, 1, 0]
+    st2 = tj.flush(cfg, st1)
+    assert all(leaf.is_deleted() for leaf in jax.tree.leaves(st1))
+    cnt, _ = tj.lookup(cfg, st2, jnp.asarray([1, 2, 3, 4], jnp.int32))
+    assert list(map(int, cnt)) == [1, 1, 1, 0]
+    # lookup is a read: it must NOT donate
+    assert not any(leaf.is_deleted() for leaf in jax.tree.leaves(st2))
+
+
+def test_no_stale_reads_after_unflushed_writer():
+    """Regression (ISSUE 3 satellite): a writer mutation that has not
+    reached the device yet must still be visible to readers — previously
+    each caller had to remember a manual engine.invalidate() after every
+    write; now the write engine owns the contract."""
+    st = CorpusStats.create(q_log2=10, r_log2=6, scheme="MDB-L",
+                            log_capacity=1 << 8, overflow_capacity=1 << 8,
+                            max_updates_per_block=1 << 6)
+    toks = np.arange(100, 130)
+    st.ingest(toks)
+    st.flush()
+    first = st.counts(toks)                # populates the hot-key cache
+    np.testing.assert_array_equal(first, np.ones(30))
+    st.ingest(toks[:10])                   # buffered in H_R, no dispatch
+    assert st.writer.buffered_entries > 0
+    got = st.counts(toks)                  # must not serve stale counts
+    np.testing.assert_array_equal(got, [2] * 10 + [1] * 20)
+    # after the device flush the same counts come from the table itself
+    st.flush()
+    assert st.writer.buffered_entries == 0
+    np.testing.assert_array_equal(st.counts(toks), got)
+    # MoE accounting rides the same engine: deltas visible pre-flush
+    st.ingest_expert_counts(layer=2, counts=np.asarray([4, 0, 1]))
+    np.testing.assert_array_equal(st.expert_counts(2, 3), [4, 0, 1])
+
+
+def test_sim_update_batch_is_engine_chunk_compatible():
+    """The sim twin accepts EMPTY-padded fixed-shape (keys, Δ) chunks:
+    padding is ignored at no cost, deltas keep counting semantics."""
+    sim = make_table("MDB-L", GEOM, ram_buffer_pct=10.0,
+                     change_segment_pct=25.0)
+    chunk = np.asarray([5, 5, 9, -1, -1, -1], np.int64)
+    sim.update_batch(chunk)
+    sim.update_batch(np.asarray([9, -1], np.int64),
+                     np.asarray([-1, 7], np.int64))
+    sim.finalize()
+    assert sim.logical_count(5) == 2
+    assert sim.logical_count(9) == 0       # 1 − 1: decremented away
+    # a padded chunk of only EMPTY keys is a free no-op
+    before = dict(sim.ledger.__dict__)
+    sim.update_batch(np.full(8, -1, np.int64))
+    assert dict(sim.ledger.__dict__) == before
