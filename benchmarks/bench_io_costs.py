@@ -15,10 +15,12 @@ import time
 import numpy as np
 
 from . import common as _common
-from .common import DEVICES, build_table, corpus, emit, run_inserts, smoke
+from .common import (DEVICES, build_table, corpus, emit, run_inserts,
+                     slow_mode, smoke)
 
 N_DEV_UPDATES = 200_000     # the ISSUE-3 acceptance stream
 DEV_BATCH = 128             # per-call micro-batch (one ingest document)
+N_SWEEP_UPDATES = 100_000   # per grid point of the --slow sweeps
 
 
 def fig4dev(rows):
@@ -122,6 +124,66 @@ def fig4dev(rows):
                      f"contents_equal=1;replay_bitident=1"))
 
 
+def fig4dev_sweeps(rows):
+    """Paper Figure 4's remaining axes on the *device* table (--slow):
+    the change-segment-size sweep (MDB-L ``log_capacity`` — the paper's
+    x-axis in Fig 4 right) and the RAM-buffer-size sweep (H_R
+    ``flush_threshold`` — Fig 4 left), each at a fixed zipf stream
+    through the FlashStore facade. Expected trends: a larger change
+    segment amortizes merges (fewer tile rewrites); a larger H_R absorbs
+    more duplicates before dispatch (fewer dispatched entries)."""
+    import time as _time
+
+    import jax
+
+    from repro.core import table_jax as tj
+    from repro.core.store import FlashStore
+
+    toks = corpus("wiki", N_SWEEP_UPDATES * _common.SMOKE_SCALE)
+    n = toks.size
+
+    def drive(store):
+        t0 = _time.time()
+        for i in range(0, n, DEV_BATCH):
+            store.update(toks[i:i + DEV_BATCH])
+        store.flush()
+        jax.block_until_ready(store.state)
+        return _time.time() - t0
+
+    # (a) change-segment size: log_capacity from 1/8 to 2× the default
+    for cap_log2 in (11, 12, 13, 14, 15):
+        cfg = tj.FlashTableConfig(q_log2=15, r_log2=9, scheme="MDB-L",
+                                  log_capacity=1 << cap_log2)
+        store = FlashStore.open(cfg, backend="device", chunk=4096,
+                                flush_threshold=8192)
+        secs = drive(store)
+        w, s = store.wear(), store.stats()
+        rows.append((f"fig4dev_sweep/cs/MDB-L/log2_{cap_log2}",
+                     secs / n * 1e6,
+                     f"updates={n};log_capacity={1 << cap_log2};"
+                     f"tile_stores={w['tile_stores']};"
+                     f"merges={w['merges']};staged={w['staged_entries']};"
+                     f"dispatched={s['write_dispatched_entries']};"
+                     f"dropped={w['dropped']}"))
+        store.close()
+    # (b) RAM-buffer size: H_R flush threshold from 1k to 64k entries
+    for thr_log2 in (10, 12, 14, 16):
+        cfg = tj.FlashTableConfig(q_log2=15, r_log2=9, scheme="MDB-L")
+        store = FlashStore.open(cfg, backend="device", chunk=4096,
+                                flush_threshold=1 << thr_log2)
+        secs = drive(store)
+        w, s = store.wear(), store.stats()
+        rows.append((f"fig4dev_sweep/hr/MDB-L/log2_{thr_log2}",
+                     secs / n * 1e6,
+                     f"updates={n};flush_threshold={1 << thr_log2};"
+                     f"tile_stores={w['tile_stores']};"
+                     f"flushes={s['write_flushes']};"
+                     f"deduped={s['write_deduped']};"
+                     f"dispatched={s['write_dispatched_entries']};"
+                     f"dropped={w['dropped']}"))
+        store.close()
+
+
 def run(rows, include_naive: bool = True):
     for dataset in ("wiki", "meme"):
         tokens = corpus(dataset)
@@ -149,6 +211,8 @@ def run(rows, include_naive: bool = True):
                              f"io_s={io_s:.3f};cleans={t.ledger.cleans};"
                              f"slowdown_vs_best={io_s / max(best, 1e-9):.0f}x"))
     fig4dev(rows)
+    if slow_mode():
+        fig4dev_sweeps(rows)
     return rows
 
 

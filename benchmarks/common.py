@@ -40,6 +40,21 @@ def smoke() -> bool:
     return SMOKE_SCALE > 1
 
 
+# --slow: opt-in long-running sweeps (the paper's remaining fig4 axes on
+# device: change-segment-size and RAM-buffer-size grids). Off by default
+# so the CI bench-smoke job stays minutes-long.
+SLOW = False
+
+
+def set_slow() -> None:
+    global SLOW
+    SLOW = True
+
+
+def slow_mode() -> bool:
+    return SLOW
+
+
 def corpus(name: str, n_tokens: int | None = None) -> np.ndarray:
     rng = np.random.default_rng(42 if name == "wiki" else 1337)
     n = (n_tokens or (WIKI_TOKENS if name == "wiki" else MEME_TOKENS)

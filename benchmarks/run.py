@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig3dev — per-key vs batched device query engine bench_query_times
   fig4*   — paper Figure 4 + §3.5 naive (I/O cost) bench_io_costs
   fig5*   — paper Figure 5 (cleans)                bench_cleans
+  fig6dev — sharded FlashStore weak scaling        bench_weak_scaling
   table2* — paper Table 2 (op mix)                 bench_block_page_ops
   kernel* — Pallas flash-hash microbench           bench_kernels
   roofline* — dry-run-derived roofline terms       bench_roofline
@@ -20,7 +21,9 @@ for a minutes-long CI run. ``--baseline PATH`` compares the device
 acceptance rows (fig3dev batched speedup, fig4dev engine-buffered
 speedup) against their floors, printing the committed trajectory file's
 values for reference, and exits nonzero on a regression — the CI
-bench-smoke gate.
+bench-smoke gate. ``--slow`` opts into the long-running fig4dev
+change-segment-size and RAM-buffer-size sweeps (the paper's remaining
+Figure-4 axes on device).
 """
 from __future__ import annotations
 
@@ -31,13 +34,16 @@ import sys
 import time
 
 from . import (bench_block_page_ops, bench_cleans, bench_io_costs,
-               bench_kernels, bench_query_times, bench_roofline)
-from .common import compare_to_baseline, emit, rows_to_json, set_smoke
+               bench_kernels, bench_query_times, bench_roofline,
+               bench_weak_scaling)
+from .common import (compare_to_baseline, emit, rows_to_json, set_slow,
+                     set_smoke)
 
 SUITES = {
     "fig3": bench_query_times,
     "fig4": bench_io_costs,
     "fig5": bench_cleans,
+    "fig6": bench_weak_scaling,
     "table2": bench_block_page_ops,
     "kernel": bench_kernels,
     "roofline": bench_roofline,
@@ -52,6 +58,9 @@ def main() -> None:
                     help="also write rows as machine-readable JSON")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced workloads (CI bench-smoke job)")
+    ap.add_argument("--slow", action="store_true",
+                    help="include long-running sweeps (fig4dev change-"
+                         "segment-size and RAM-buffer-size grids)")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="compare acceptance rows against this committed "
                          "BENCH_PR*.json; exit 1 if any speedup falls "
@@ -59,6 +68,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         set_smoke()
+    if args.slow:
+        set_slow()
     names = list(SUITES) if not args.only else args.only.split(",")
     rows = []
     suite_secs = {}

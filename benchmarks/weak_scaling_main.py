@@ -1,0 +1,96 @@
+"""Subprocess helper for the fig6dev weak-scaling benchmark.
+
+Forces an 8-virtual-device XLA view *before* importing jax (the parent
+benchmark process must keep its single-device view), then drives
+``FlashStore(backend="sharded")`` at 1 → 8 shards with **fixed per-shard
+load** (weak scaling): per-shard update stream, per-shard table geometry
+and a key space that grows with the mesh. Ideal weak scaling holds
+us/update constant as shards grow.
+
+Prints one ``ROW|name|us_per_call|derived`` line per shard count;
+``benchmarks.bench_weak_scaling`` parses them into suite rows.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.core import table_jax as tj
+from repro.core.distributed import ShardedTableConfig
+from repro.core.store import FlashStore
+
+PER_SHARD_UPDATES = 100_000
+PER_SHARD_KEYS = 1 << 14
+BATCH = 4096
+N_QUERIES = 4096
+
+
+def bench_shards(n: int, n_updates: int, rng: np.random.Generator):
+    cfg = ShardedTableConfig(
+        local=tj.FlashTableConfig(q_log2=13, r_log2=9, scheme="MDB-L",
+                                  log_capacity=1 << 13,
+                                  max_updates_per_block=1 << 8,
+                                  overflow_capacity=1 << 10),
+        num_shards=n, bucket_cap=1 << 10)
+    store = FlashStore.open(cfg, backend="sharded", shard_chunk=1024,
+                            flush_threshold=2048)
+    total = n * n_updates
+    # key space scales with the mesh: per-shard unique load stays fixed
+    toks = (rng.zipf(1.35, size=total) % (n * PER_SHARD_KEYS)).astype(
+        np.int64)
+    # warm the compiled update/lookup programs outside the timed region
+    store.update(np.arange(BATCH, dtype=np.int64))
+    store._b.drain()
+    store.query(np.arange(N_QUERIES, dtype=np.int64))
+    t0 = time.time()
+    for i in range(0, total, BATCH):
+        store.update(toks[i:i + BATCH])
+    store.flush()
+    jax.block_until_ready(store.state)
+    upd_secs = time.time() - t0
+    q = rng.choice(toks, size=N_QUERIES).astype(np.int64)
+    t0 = time.time()
+    store.query_batch(q)
+    q_secs = time.time() - t0
+    s = store.stats()
+    store.close()
+    return upd_secs, q_secs, total, s
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    n_updates = PER_SHARD_UPDATES // (16 if smoke else 1)
+    assert jax.device_count() == 8, jax.devices()
+    base_us = None
+    for n in (1, 2, 4, 8):
+        rng = np.random.default_rng(7)
+        upd_secs, q_secs, total, s = bench_shards(n, n_updates, rng)
+        us = upd_secs / total * 1e6
+        if base_us is None:
+            base_us = us
+        eff = base_us / us
+        derived = (f"shards={n};per_shard_updates={n_updates};"
+                   f"total_updates={total};secs={upd_secs:.2f};"
+                   f"weak_efficiency={eff:.2f};"
+                   f"query_us_per_key={q_secs / N_QUERIES * 1e6:.2f};"
+                   f"flushes={s['write_flushes']};"
+                   f"collectives={s['write_dispatches']};"
+                   f"auto_flushes={s['write_auto_flushes']};"
+                   f"piggybacked={s['write_piggybacked']};"
+                   f"deduped={s['write_deduped']};"
+                   f"tile_stores={s['tile_stores']};"
+                   f"carried={s['write_carried']};dropped={s['dropped']}")
+        print(f"ROW|fig6dev/sharded/MDB-L/shards_{n}|{us:.3f}|{derived}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

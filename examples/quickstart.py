@@ -1,8 +1,6 @@
-"""Quickstart: the paper's counting hash table in 60 seconds.
-
-Builds all three schemes (MB / MDB / MDB-L), streams a zipf token corpus,
-compares their I/O ledgers on the paper's three SSD configurations, and
-shows the device-resident (JAX/Pallas) twin answering the same queries.
+"""Quickstart: one `FlashStore`, three backends (SSD simulator, JAX/Pallas
+device table, multi-device sharded table) — same API, same deferred-update
+discipline (H_R buffer → block-local merges).
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,43 +8,23 @@ import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import DEVICES, TableGeometry, make_table
-from repro.core import table_jax as tj
+from repro.core import FlashStore
 
 rng = np.random.default_rng(0)
 tokens = (rng.zipf(1.4, size=200_000) % (1 << 20)).astype(np.int64)
-geom = TableGeometry(num_blocks=16, pages_per_block=64, entries_per_page=64)
+uniq, cnt = np.unique(tokens, return_counts=True)
+probe, truth = uniq[:512], dict(zip(uniq.tolist(), cnt.tolist()))
 
-print("=== SSD simulation (paper §3) ===")
-for scheme in ("MB", "MDB", "MDB-L", "naive"):
-    t = make_table(scheme, geom, ram_buffer_pct=5.0, change_segment_pct=12.5)
-    t.insert_batch(tokens)
-    t.finalize()
-    led = t.ledger
-    ios = {name: led.time_us(dev) / 1e6 for name, dev in DEVICES.items()}
-    print(f"{scheme:6s} cleans={led.cleans:6d} block_ops={led.block_ops:6d} "
-          f"page_ops={led.page_ops:7d} "
-          + " ".join(f"{n}={s:7.2f}s" for n, s in ios.items()))
-
-print("\n=== device-resident twin (JAX + Pallas kernels) ===")
-cfg = tj.FlashTableConfig(q_log2=16, r_log2=10, scheme="MDB-L")
-state = tj.init(cfg)
-for i in range(0, len(tokens), 16384):
-    chunk = tokens[i:i + 16384]
-    if len(chunk) < 16384:
-        chunk = np.pad(chunk, (0, 16384 - len(chunk)),
-                       constant_values=tj.EMPTY)
-    state = tj.update(cfg, state, jnp.asarray(chunk, jnp.int32))
-state = tj.flush(cfg, state)
-probe = np.unique(tokens)[:512]
-cnt, dist = tj.lookup(cfg, state, jnp.asarray(probe, jnp.int32))
-from collections import Counter
-truth = Counter(tokens.tolist())
-ok = all(truth[int(k)] == int(c) for k, c in zip(probe, cnt))
-print(f"512 point queries correct: {ok}; "
-      f"mean probe distance {float(dist.mean()):.2f} slots; "
-      f"tile rewrites (clean analogue): {int(state.stats.tile_stores)}")
+for backend in ("sim", "device", "sharded"):
+    with FlashStore.open(backend=backend, scheme="MDB-L") as store:
+        store.update(tokens)                    # buffered + deduped in H_R
+        store.increment(int(probe[0]), -1)      # deletion-by-decrement §2.6
+        store.increment(int(probe[0]), +1)
+        counts = store.query(probe)             # batched, read-your-writes
+        ok = all(truth[int(k)] == int(c) for k, c in zip(probe, counts))
+        store.flush()                           # durability point: merge
+        wear = store.stats().get("tile_stores", store.stats().get("cleans"))
+        print(f"{backend:8s} 512 point queries correct: {ok}; "
+              f"wear (cleans analogue): {wear}")

@@ -23,8 +23,10 @@ DOCS = [
 ] * 20
 
 print("=== TF-IDF over the counting hash table (paper §3.2) ===")
+# every table behind the pipeline is a FlashStore (DESIGN.md §8);
+# backend="sim" | "device" | "sharded" swaps the engine with no other change
 geom = TableGeometry(num_blocks=8, pages_per_block=16, entries_per_page=32)
-pipe = TfIdfPipeline(geom, scheme="MDB-L", ram_buffer_pct=5.0)
+pipe = TfIdfPipeline(geom, scheme="MDB-L", ram_buffer_pct=5.0, backend="sim")
 for d in DOCS:
     pipe.add_document(tokenize(d))
 pipe.finalize()
@@ -34,9 +36,9 @@ top = sorted(scores.items(), key=lambda kv: -kv[1])[:5]
 print("top keywords of doc 0:", [t for t, _ in top])
 print(f"'the' idf={pipe.idf('the'):.3f}  'sequential' idf="
       f"{pipe.idf('sequential'):.3f}")
-led = pipe.term_table.ledger
-print(f"I/O ledger: cleans={led.cleans} block_ops={led.block_ops} "
-      f"page_ops={led.page_ops}")
+s = pipe.term_table.stats()
+print(f"I/O ledger: cleans={s['cleans']} block_ops={s['block_ops']} "
+      f"page_ops={s['page_ops']}")
 
 print("\n=== as the LM data layer (framework integration) ===")
 corpus = SyntheticCorpus(num_docs=200, mean_doc_len=96, vocab_size=8000,

@@ -8,11 +8,12 @@ from .flash_model import (CostLedger, FlashDevice, TableGeometry, DEVICES,
 from .hashing import HashPair, Pow2Hash, hash_pair_for
 from .table_sim import (EMPTY, MBTable, MDBTable, MDBLTable, NaiveTable,
                         SCHEMES, make_table)
+from .store import FlashStore
 from .tfidf import TfIdfPipeline, token_id, tokenize
 
 __all__ = [
     "CostLedger", "FlashDevice", "TableGeometry", "DEVICES", "MLC1", "MLC2",
     "SLC", "HashPair", "Pow2Hash", "hash_pair_for", "EMPTY", "MBTable",
     "MDBTable", "MDBLTable", "NaiveTable", "SCHEMES", "make_table",
-    "TfIdfPipeline", "token_id", "tokenize",
+    "FlashStore", "TfIdfPipeline", "token_id", "tokenize",
 ]

@@ -93,31 +93,46 @@ def _bucket_by_owner(cfg: ShardedTableConfig, keys, cnts):
     return buk, buc, carry_k, carry_c
 
 
-def make_update_fn(cfg: ShardedTableConfig, mesh, axis: str):
-    """Build a shard_map'd update: (state, tokens) -> (state, n_carried).
+def _squeeze(state):
+    """Drop the leading per-shard dim of scalar leaves inside shard_map."""
+    return state._replace(
+        log_ptr=state.log_ptr.reshape(state.log_ptr.shape[1:]),
+        ov_ptr=state.ov_ptr.reshape(()),
+        stats=jax.tree.map(lambda x: x.reshape(()), state.stats))
+
+
+def _expand(state):
+    """Restore the leading per-shard dim on scalar leaves for out_specs."""
+    return state._replace(
+        log_ptr=state.log_ptr.reshape((1,) + state.log_ptr.shape),
+        ov_ptr=state.ov_ptr.reshape((1,)),
+        stats=jax.tree.map(lambda x: x.reshape((1,)), state.stats))
+
+
+def make_update_fn(cfg: ShardedTableConfig, mesh, axis: str,
+                   with_deltas: bool = False, donate: bool = False):
+    """Build a shard_map'd update: ``(state, tokens) -> (state, n_carried)``
+    (or ``(state, tokens, deltas) -> ...`` with ``with_deltas``).
 
     ``tokens`` is sharded over ``axis`` (each shard contributes its local
-    stream); state is block-sharded over the same axis.
+    stream); state is block-sharded over the same axis. ``with_deltas``
+    switches the in-kernel RAM-buffer dedup to the ±Δ variant
+    (:func:`segments.accumulate_deltas`) so decrements/cancellation reach
+    the sharded table too. ``donate=True`` donates the state argument —
+    the engine discipline (DESIGN.md §7): buffers update in place, the
+    caller rebinds and never reuses the donated value.
     """
     from ..kernels.flash_hash import ops as hops
     local_cfg = cfg.local
     spec = state_pspec(axis)
 
-    def _squeeze(state):
-        return state._replace(
-            log_ptr=state.log_ptr.reshape(()),
-            ov_ptr=state.ov_ptr.reshape(()),
-            stats=jax.tree.map(lambda x: x.reshape(()), state.stats))
-
-    def _expand(state):
-        return state._replace(
-            log_ptr=state.log_ptr.reshape((1,)),
-            ov_ptr=state.ov_ptr.reshape((1,)),
-            stats=jax.tree.map(lambda x: x.reshape((1,)), state.stats))
-
-    def local_update(state: tj.DeviceTableState, tokens):
+    def local_update(state: tj.DeviceTableState, tokens, deltas=None):
         state = _squeeze(state)
-        keys, cnts = hops.accumulate(tokens.astype(jnp.int32))
+        if deltas is None:
+            keys, cnts = hops.accumulate(tokens.astype(jnp.int32))
+        else:
+            keys, cnts = tj.accumulate_deltas(tokens.astype(jnp.int32),
+                                              deltas.astype(jnp.int32))
         buk, buc, carry_k, carry_c = _bucket_by_owner(cfg, keys, cnts)
         # one collective per flush: (n_shards, cap) -> (n_shards, cap)
         buk = jax.lax.all_to_all(buk, axis, split_axis=0, concat_axis=0,
@@ -136,38 +151,65 @@ def make_update_fn(cfg: ShardedTableConfig, mesh, axis: str):
         return _expand(state), n_carry[None]
 
     from jax.experimental.shard_map import shard_map
-    upd = shard_map(local_update, mesh=mesh,
-                    in_specs=(spec, P(axis)),
+    if with_deltas:
+        body = local_update
+        in_specs = (spec, P(axis), P(axis))
+    else:
+        body = lambda state, tokens: local_update(state, tokens)
+        in_specs = (spec, P(axis))
+    upd = shard_map(body, mesh=mesh, in_specs=in_specs,
                     out_specs=(spec, P(axis)),
                     check_rep=False)
-    return jax.jit(upd)
+    return jax.jit(upd, donate_argnums=(0,) if donate else ())
 
 
-def make_lookup_fn(cfg: ShardedTableConfig, mesh, axis: str):
+def make_lookup_fn(cfg: ShardedTableConfig, mesh, axis: str,
+                   with_dist: bool = False):
     """Build a shard_map'd lookup: every shard queries the full batch
     against its local blocks; non-owned keys contribute 0; one psum
-    combines. (Read path = the paper's fast random reads.)"""
+    combines. (Read path = the paper's fast random reads.)
+
+    ``with_dist=True`` additionally returns the per-key probe distance
+    (the owner shard's device probe; non-owners contribute 0), matching
+    the ``(counts, distances)`` contract of :func:`table_jax.lookup` so a
+    :class:`~.query_engine.BatchedQueryEngine` can front this path.
+    """
     local_cfg = cfg.local
     spec = state_pspec(axis)
 
     def local_lookup(state: tj.DeviceTableState, q):
-        state = state._replace(
-            log_ptr=state.log_ptr.reshape(()),
-            ov_ptr=state.ov_ptr.reshape(()),
-            stats=jax.tree.map(lambda x: x.reshape(()), state.stats))
-        n = cfg.num_shards
+        state = _squeeze(state)
         blocks_per_shard_log2 = cfg.local.q_log2 - cfg.local.r_log2
         owner = cfg.global_pair.s(q) >> blocks_per_shard_log2
         me = jax.lax.axis_index(axis)
         mine = owner == me
         masked_q = jnp.where(mine, q, EMPTY)
         cnt, dist = tj.lookup(local_cfg, state, masked_q)
-        cnt = jnp.where(mine, cnt, 0)
-        return jax.lax.psum(cnt, axis)
+        cnt = jax.lax.psum(jnp.where(mine, cnt, 0), axis)
+        if not with_dist:
+            return cnt
+        return cnt, jax.lax.psum(jnp.where(mine, dist, 0), axis)
 
     from jax.experimental.shard_map import shard_map
     look = shard_map(local_lookup, mesh=mesh,
                      in_specs=(spec, P()),
-                     out_specs=P(),
+                     out_specs=(P(), P()) if with_dist else P(),
                      check_rep=False)
     return jax.jit(look)
+
+
+def make_flush_fn(cfg: ShardedTableConfig, mesh, axis: str,
+                  donate: bool = False):
+    """Build a shard_map'd device merge: every shard drains its staged
+    change segment through :func:`table_jax.flush` (end-of-stream /
+    checkpoint). No collective — merges are block-local by construction."""
+    local_cfg = cfg.local
+    spec = state_pspec(axis)
+
+    def local_flush(state: tj.DeviceTableState):
+        return _expand(tj.flush(local_cfg, _squeeze(state)))
+
+    from jax.experimental.shard_map import shard_map
+    fl = shard_map(local_flush, mesh=mesh, in_specs=(spec,),
+                   out_specs=spec, check_rep=False)
+    return jax.jit(fl, donate_argnums=(0,) if donate else ())

@@ -53,7 +53,8 @@ class QueryEngineStats:
 class BatchedQueryEngine:
     """Dedup + chunk + hot-cache front end over ``table_jax.lookup``."""
 
-    def __init__(self, cfg, chunk: int = 1024, hot_capacity: int = 4096):
+    def __init__(self, cfg, chunk: int = 1024, hot_capacity: int = 4096,
+                 lookup_fn=None):
         import jax.numpy as jnp  # deferred: sim-only users stay jax-free
 
         from . import table_jax as tj
@@ -62,6 +63,12 @@ class BatchedQueryEngine:
         self.cfg = cfg
         self.chunk = int(chunk)
         self.hot_capacity = int(hot_capacity)
+        # pluggable device dispatch: any (state, keys) -> (counts, dists)
+        # with table_jax.lookup's contract (EMPTY -> (0, 0)). The sharded
+        # backend passes its shard_map'd consolidated lookup here; the
+        # default is the single-table path.
+        self._lookup = (lookup_fn if lookup_fn is not None
+                        else lambda state, q: tj.lookup(self.cfg, state, q))
         self._hot: Dict[int, int] = {}
         self.stats = QueryEngineStats()
 
@@ -124,8 +131,7 @@ class BatchedQueryEngine:
                 if pad:  # fixed shapes → one compiled program per table
                     part = np.concatenate(
                         [part, np.full(pad, tj.EMPTY, np.int64)])
-                cnt, dist = tj.lookup(self.cfg, state,
-                                      jnp.asarray(part, jnp.int32))
+                cnt, dist = self._lookup(state, jnp.asarray(part, jnp.int32))
                 n_real = step - pad
                 cnt = np.asarray(cnt)[:n_real]
                 dist = np.asarray(dist)[:n_real]

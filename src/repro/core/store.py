@@ -1,0 +1,598 @@
+"""One `FlashStore` facade over every flash-hash table backend (DESIGN.md §8).
+
+The paper's central claim is that one deferred-update discipline — RAM
+buffer H_R in front, semi-random block-local merges behind — serves every
+scheme variant (§2, Fig 4). Before this module, the public surface leaked
+the plumbing: every consumer manually constructed and paired a
+:class:`~.write_engine.BatchedWriteEngine` with a
+:class:`~.query_engine.BatchedQueryEngine`, while the sharded table
+(:mod:`.distributed`) exposed a third, engine-less API with none of the
+H_R dedup, donation or read-your-writes semantics. `FlashStore` is the
+single entry point:
+
+    with FlashStore.open(backend="device", scheme="MDB-L") as store:
+        store.update(tokens)            # buffered in H_R
+        store.increment(key, -1)        # deletion-by-decrement (§2.6)
+        counts = store.query(keys)      # read-your-writes, batched
+        store.flush()                   # durability point: drain + merge
+        print(store.stats())
+
+Three backends plug in behind the identical lifecycle via a small
+``TableBackend`` protocol (duck-typed — ``update`` / ``query_batch`` /
+``drain`` / ``flush`` / ``stats`` / ``pending_entries``):
+
+* ``sim``     — the event-level NumPy simulator (exact SSD cost ledger;
+  the paper's measurement harness). Its RAM buffer *is* H_R.
+* ``device``  — the single-table JAX/Pallas path: the store owns the
+  engine pair, and the flush → invalidate contract is enforced here,
+  never by callers.
+* ``sharded`` — the multi-device table: per-shard H_R partitions keyed
+  by ``owner(x)``, shard-local flush thresholds (one hot shard drains
+  its own partition without forcing every shard's buffer out), and
+  cross-shard consolidated batched lookups (one psum per query chunk).
+
+Engine pairing happens *only* in this module: constructing a write/query
+engine by hand elsewhere is the deprecated pre-PR4 surface.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .table_sim import EMPTY
+
+
+def _flat_i64(x) -> np.ndarray:
+    return np.asarray(x).reshape(-1).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# sim backend: the event-level SSD simulation
+# ---------------------------------------------------------------------------
+class SimBackend:
+    """`table_sim` behind the store protocol. The sim's own RAM buffer
+    plays H_R; `update_batch` is the engine-chunk-compatible ±Δ twin and
+    `query_batch` already consolidates data/change/overflow + buffer."""
+
+    name = "sim"
+
+    def __init__(self, geom=None, scheme: str = "MDB-L",
+                 ram_buffer_pct: float = 5.0,
+                 change_segment_pct: float = 12.5, **table_kw):
+        from .flash_model import TableGeometry
+        from .table_sim import make_table
+        self.geom = geom if geom is not None else TableGeometry(
+            num_blocks=16, pages_per_block=64, entries_per_page=64)
+        self.scheme = scheme
+        self.table = make_table(scheme, self.geom, ram_buffer_pct,
+                                change_segment_pct, **table_kw)
+
+    def update(self, tokens, deltas=None) -> None:
+        self.table.update_batch(tokens, deltas)
+
+    def query_batch(self, keys) -> np.ndarray:
+        return np.asarray(self.table.query_batch(keys), np.int64)
+
+    def drain(self) -> None:          # stage H_R without a forced merge
+        self.table.flush()
+
+    def flush(self) -> None:          # durability point
+        self.table.finalize()
+
+    def pending_entries(self) -> int:
+        return len(self.table.ram.items)
+
+    def partition_heat(self, keys) -> np.ndarray:
+        return np.zeros(_flat_i64(keys).size)     # no device wear feed
+
+    def wear(self) -> Dict[str, int]:
+        """The sim's wear counters: ``cleans`` *is* the paper's erase
+        count (the device backends' ``tile_stores`` analogue)."""
+        led = self.table.ledger
+        return {"cleans": led.cleans, "block_ops": led.block_ops,
+                "page_ops": led.page_ops, "merges": led.merges,
+                "stages": led.stages}
+
+    def stats(self) -> Dict[str, int]:
+        led = self.table.ledger
+        q = self.table.qstats
+        out = {"backend": self.name, "scheme": self.scheme,
+               "cleans": led.cleans, "block_ops": led.block_ops,
+               "page_ops": led.page_ops, "merges": led.merges,
+               "stages": led.stages, "queries": q.queries,
+               "found": q.found,
+               "buffered_entries": self.pending_entries()}
+        return out
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# device backend: single-table engine pair
+# ---------------------------------------------------------------------------
+class DeviceBackend:
+    """The PR-2/PR-3 engine pair, auto-wired: one
+    :class:`~.write_engine.BatchedWriteEngine` owning the table state,
+    one paired :class:`~.query_engine.BatchedQueryEngine`, flush →
+    invalidate enforced by construction. With ``track_wear=True`` the
+    backend additionally attributes per-drain ``TableStats`` wear deltas
+    (Δ``tile_stores``) to change-segment partitions — the feed for
+    wear-aware eviction policies (`serving/prefix_cache`)."""
+
+    name = "device"
+
+    def __init__(self, cfg=None, state=None, chunk: int = 4096,
+                 query_chunk: int = 1024,
+                 flush_threshold: Optional[int] = None,
+                 hot_capacity: int = 4096, track_wear: bool = False,
+                 record: Optional[list] = None, **table_kw):
+        from . import table_jax as tj
+        from .query_engine import BatchedQueryEngine
+        from .write_engine import BatchedWriteEngine
+        self.cfg = cfg if cfg is not None else tj.FlashTableConfig(**table_kw)
+        self.scheme = self.cfg.scheme
+        self.query_engine = BatchedQueryEngine(
+            self.cfg, chunk=query_chunk, hot_capacity=hot_capacity)
+        self._track_wear = bool(track_wear)
+        self.writer = BatchedWriteEngine(
+            self.cfg, state=state, chunk=chunk,
+            flush_threshold=flush_threshold, query_engine=self.query_engine,
+            record=record, on_flush=self._on_drain if track_wear else None)
+        # wear attribution: partition -> accumulated Δtile_stores share,
+        # plus the staged-since-last-merge histogram merges are charged to
+        self._heat: Dict[int, float] = {}
+        self._staged_parts: Dict[int, int] = {}
+
+    # -- wear attribution ---------------------------------------------------
+    def _partition_of(self, keys: np.ndarray) -> np.ndarray:
+        """Host-side partition id: MDB's change-segment partition when the
+        scheme has one, else the data block itself (finest granularity)."""
+        s = self.cfg.pair.s(np.asarray(keys, np.int64))
+        if self.scheme == "MDB":
+            return np.asarray(s) // self.cfg.blocks_per_partition
+        return np.asarray(s)
+
+    def _on_drain(self, keys: Optional[np.ndarray], wear_delta: int) -> None:
+        if keys is not None:                 # H_R drain: staged entries
+            parts, counts = np.unique(self._partition_of(keys),
+                                      return_counts=True)
+            for p, c in zip(parts.tolist(), counts.tolist()):
+                self._staged_parts[p] = self._staged_parts.get(p, 0) + c
+        # charge the measured Δtile_stores to the partitions staged since
+        # the last forced merge, proportional to their staged volume; the
+        # history decays so heat tracks *recent* merge pressure, not the
+        # lifetime total (an old burst must not pin a partition hot)
+        if wear_delta > 0 and self._staged_parts:
+            self._heat = {p: 0.5 * v for p, v in self._heat.items()}
+            total = sum(self._staged_parts.values())
+            for p, c in self._staged_parts.items():
+                self._heat[p] = self._heat.get(p, 0.0) + wear_delta * c / total
+        if keys is None:                     # forced merge drained the lot
+            self._staged_parts.clear()
+
+    def partition_heat(self, keys) -> np.ndarray:
+        """Write pressure of each key's partition: entries currently
+        pending for it (H_R + staged-unmerged — it *will* be rewritten at
+        the next merge no matter what) plus the decayed per-merge
+        ``TableStats`` wear history. Hot partitions are being rewritten
+        anyway — re-dirtying them is nearly free; dirtying a cold one
+        costs a fresh block rewrite."""
+        flat = _flat_i64(keys)
+        if flat.size == 0:
+            return np.zeros(0)
+        pending = dict(self._staged_parts)
+        if self.writer.buffered_entries:
+            bk = np.fromiter(self.writer._buf.keys(), np.int64,
+                             self.writer.buffered_entries)
+            parts, counts = np.unique(self._partition_of(bk),
+                                      return_counts=True)
+            for p, c in zip(parts.tolist(), counts.tolist()):
+                pending[p] = pending.get(p, 0) + c
+        if not pending and not self._heat:
+            return np.zeros(flat.size)
+        parts = self._partition_of(flat)
+        return np.asarray([pending.get(int(p), 0)
+                           + self._heat.get(int(p), 0.0) for p in parts])
+
+    # -- protocol -----------------------------------------------------------
+    @property
+    def state(self):
+        return self.writer.state
+
+    def update(self, tokens, deltas=None) -> None:
+        self.writer.update(tokens, deltas)
+
+    def query_batch(self, keys) -> np.ndarray:
+        return self.writer.query_batch(keys)
+
+    def drain(self) -> None:
+        self.writer.flush()
+
+    def flush(self) -> None:
+        self.writer.merge()
+
+    def pending_entries(self) -> int:
+        return self.writer.buffered_entries
+
+    def wear(self) -> Dict[str, int]:
+        s = self.state.stats
+        return {f: int(getattr(s, f)) for f in s._fields}
+
+    def stats(self) -> Dict[str, int]:
+        out = {"backend": self.name, "scheme": self.scheme}
+        out.update(self.wear())
+        out.update({f"write_{k}": v
+                    for k, v in self.writer.stats.as_dict().items()})
+        out.update({f"query_{k}": v
+                    for k, v in self.query_engine.stats.as_dict().items()})
+        out["buffered_entries"] = self.pending_entries()
+        return out
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# sharded backend: per-shard H_R partitions over the distributed table
+# ---------------------------------------------------------------------------
+class ShardedBackend:
+    """The distributed table (:mod:`.distributed`) brought to engine
+    parity — the ROADMAP "distributed sharded table at scale" item.
+
+    * **per-shard H_R partitions** — the host buffer is split by
+      ``owner(x)`` (the same two-level hash that shards the data
+      segment), so dedup/cancellation state is per-shard and a drain can
+      target one shard's traffic;
+    * **shard-local flush thresholds** — a partition drains when *it*
+      fills; the other shards' buffers stay warm (their entries keep
+      absorbing duplicates) instead of being forced out by a global
+      count. Because the collective is fixed-shape anyway, partitions at
+      least ``piggyback_frac`` full ride along for free;
+    * **owner-aligned dispatch** — drained entries are placed directly in
+      their owner shard's slice of the update batch, so the ``all_to_all``
+      routes every entry shard-locally (src == dst: zero cross-shard
+      payload movement) and the per-(src,dst) ``bucket_cap`` can never
+      overflow (``shard_chunk <= bucket_cap`` entries, all self-owned);
+    * **consolidated lookups** — one shard_map'd lookup per EMPTY-padded
+      query chunk serves the whole deduped batch (every shard probes its
+      blocks, one psum combines), fronted by the standard
+      :class:`~.query_engine.BatchedQueryEngine` hot cache + H_R overlay.
+
+    The local scheme must be MB or MDB-L (MDB's partitioned change
+    segment and the shard axis would partition the same dimension twice).
+    """
+
+    name = "sharded"
+
+    def __init__(self, cfg=None, mesh=None, axis: str = "table",
+                 num_shards: Optional[int] = None,
+                 shard_chunk: Optional[int] = None,
+                 flush_threshold: Optional[int] = None,
+                 query_chunk: int = 1024, hot_capacity: int = 4096,
+                 piggyback_frac: float = 0.5, **table_kw):
+        import jax
+        from jax.sharding import NamedSharding
+
+        from . import distributed as D
+        from . import table_jax as tj
+        from .query_engine import BatchedQueryEngine
+        from .write_engine import WriteEngineStats
+
+        if cfg is None or isinstance(cfg, tj.FlashTableConfig):
+            n = int(num_shards if num_shards is not None
+                    else jax.device_count())
+            local = cfg if cfg is not None else tj.FlashTableConfig(
+                **table_kw)
+            cfg = D.ShardedTableConfig(local=local, num_shards=n)
+        self.cfg = cfg
+        n = cfg.num_shards
+        if n & (n - 1):
+            raise ValueError(f"num_shards={n} must be a power of two")
+        if cfg.local.scheme not in ("MB", "MDB-L"):
+            raise ValueError(
+                f"sharded backend requires an MB or MDB-L local scheme, "
+                f"got {cfg.local.scheme!r} (MDB partitions the change "
+                f"segment over the same axis the mesh shards)")
+        self.scheme = cfg.local.scheme
+        self.mesh = mesh if mesh is not None else jax.make_mesh((n,), (axis,))
+        self.axis = axis
+        self.shard_chunk = int(min(cfg.bucket_cap, shard_chunk or 1024))
+        self.flush_threshold = int(2 * self.shard_chunk
+                                   if flush_threshold is None
+                                   else flush_threshold)
+        self.piggyback_frac = float(piggyback_frac)
+        self._jnp = jax.numpy
+        self._upd = D.make_update_fn(cfg, self.mesh, axis,
+                                     with_deltas=True, donate=True)
+        self._mrg = D.make_flush_fn(cfg, self.mesh, axis, donate=True)
+        look = D.make_lookup_fn(cfg, self.mesh, axis, with_dist=True)
+        self.query_engine = BatchedQueryEngine(
+            cfg.local, chunk=query_chunk, hot_capacity=hot_capacity,
+            lookup_fn=lambda state, q: look(state, q))
+        spec = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            D.state_pspec(axis),
+                            is_leaf=lambda s: type(s).__name__
+                            == "PartitionSpec")
+        self.state = jax.device_put(D.init_global(cfg), spec)
+        self._shard_bits = cfg.local.q_log2 - cfg.local.r_log2
+        self._buf: List[Dict[int, int]] = [dict() for _ in range(n)]
+        self.stats_ledger = WriteEngineStats()
+        self.piggybacked = 0
+        self.carried = 0
+
+    # -- owner routing ------------------------------------------------------
+    def owner_of(self, keys) -> np.ndarray:
+        """Owner shard per key: the global block id's top (shard) bits."""
+        s = np.asarray(self.cfg.global_pair.s(_flat_i64(keys)))
+        return s >> self._shard_bits
+
+    # -- the buffered write path -------------------------------------------
+    def update(self, tokens, deltas=None) -> None:
+        from .write_engine import dedup_batch, fold_entry
+        led = self.stats_ledger
+        led.updates += 1
+        uniq, sums, n_valid = dedup_batch(tokens, deltas, EMPTY)
+        if n_valid == 0:
+            return
+        led.entries += n_valid
+        owners = self.owner_of(uniq)
+        n_new = 0
+        for k, s, o in zip(uniq.tolist(), sums.tolist(), owners.tolist()):
+            opened = fold_entry(self._buf[o], k, s)
+            if opened > 0:
+                n_new += 1
+            elif opened < 0:
+                led.cancelled += 1
+        led.buffered += n_new
+        led.deduped += n_valid - n_new
+        hot = [i for i, b in enumerate(self._buf)
+               if len(b) >= self.flush_threshold]
+        if hot:
+            led.auto_flushes += 1
+            ride = [i for i, b in enumerate(self._buf)
+                    if i not in hot
+                    and len(b) >= self.piggyback_frac * self.flush_threshold]
+            self.piggybacked += len(ride)
+            self.drain(shards=hot + ride)
+
+    def drain(self, shards: Optional[List[int]] = None) -> None:
+        """Drain the selected shards' H_R partitions to their owners'
+        change segments (no forced merge). One fixed-shape collective per
+        ``shard_chunk``-entry wave; every drained entry rides in its
+        owner's slice, so the a2a is shard-local by construction."""
+        jnp = self._jnp
+        n = self.cfg.num_shards
+        step = self.shard_chunk
+        sel = [s for s in (range(n) if shards is None else shards)
+               if self._buf[s]]
+        if not sel:
+            return
+        led = self.stats_ledger
+        per_shard = {}
+        waves = 0
+        for s in sel:
+            ks = np.fromiter(self._buf[s].keys(), np.int64, len(self._buf[s]))
+            vs = np.fromiter(self._buf[s].values(), np.int64,
+                             len(self._buf[s]))
+            order = np.argsort(ks, kind="stable")   # deterministic dispatch
+            per_shard[s] = (ks[order], vs[order])
+            waves = max(waves, -(-ks.size // step))
+        for w in range(waves):
+            toks = np.full(n * step, EMPTY, np.int64)
+            dels = np.zeros(n * step, np.int64)
+            for s, (ks, vs) in per_shard.items():
+                part_k = ks[w * step:(w + 1) * step]
+                part_v = vs[w * step:(w + 1) * step]
+                toks[s * step:s * step + part_k.size] = part_k
+                dels[s * step:s * step + part_v.size] = part_v
+            self.state, n_carry = self._upd(self.state,
+                                            jnp.asarray(toks, jnp.int32),
+                                            jnp.asarray(dels, jnp.int32))
+            led.dispatches += 1
+            # owner-aligned placement keeps every (src,dst) bucket within
+            # bucket_cap, so the collective can never carry entries over
+            self.carried += int(np.asarray(n_carry).sum())
+        for s in sel:
+            led.dispatched_entries += per_shard[s][0].size
+            self._buf[s].clear()
+        led.flushes += 1
+        self.query_engine.invalidate()
+        led.invalidations += 1
+
+    def flush(self) -> None:
+        """Durability point: drain every H_R partition, then force the
+        device merge of all staged change segments."""
+        self.drain()
+        self.state = self._mrg(self.state)
+        self.stats_ledger.merges += 1
+        self.query_engine.invalidate()
+        self.stats_ledger.invalidations += 1
+
+    # -- read-your-writes ---------------------------------------------------
+    def pending_entries(self) -> int:
+        return sum(len(b) for b in self._buf)
+
+    def pending(self, keys) -> np.ndarray:
+        flat = _flat_i64(keys)
+        if not any(self._buf):
+            return np.zeros(flat.size, np.int64)
+        owners = self.owner_of(flat)
+        return np.fromiter(
+            (self._buf[o].get(int(k), 0) for k, o in zip(flat, owners)),
+            np.int64, flat.size)
+
+    def query_batch(self, keys) -> np.ndarray:
+        base = self.query_engine.query_batch(self.state, keys)
+        if any(self._buf):
+            base = base + self.pending(keys)
+        return base
+
+    def partition_heat(self, keys) -> np.ndarray:
+        return np.zeros(_flat_i64(keys).size)     # not tracked per shard yet
+
+    def wear(self) -> Dict[str, int]:
+        """Device wear counters summed across shards."""
+        s = self.state.stats
+        return {f: int(np.asarray(getattr(s, f)).sum()) for f in s._fields}
+
+    def stats(self) -> Dict[str, int]:
+        out = {"backend": self.name, "scheme": self.scheme,
+               "shards": self.cfg.num_shards}
+        out.update(self.wear())
+        out.update({f"write_{k}": v
+                    for k, v in self.stats_ledger.as_dict().items()})
+        out.update({f"query_{k}": v
+                    for k, v in self.query_engine.stats.as_dict().items()})
+        out["buffered_entries"] = self.pending_entries()
+        out["write_piggybacked"] = self.piggybacked
+        out["write_carried"] = self.carried
+        out["buffered_per_shard_max"] = max(
+            (len(b) for b in self._buf), default=0)
+        return out
+
+    def close(self) -> None:
+        pass
+
+
+_BACKENDS = {"sim": SimBackend, "device": DeviceBackend,
+             "sharded": ShardedBackend}
+
+
+# ---------------------------------------------------------------------------
+# the facade
+# ---------------------------------------------------------------------------
+class FlashStore:
+    """Backend-agnostic counting hash table with the paper's deferred-
+    update discipline built in. Construct with :meth:`open`; use as a
+    context manager for automatic flush-on-exit. See the module docstring
+    for the backend landscape."""
+
+    def __init__(self, backend_impl):
+        self._b = backend_impl
+        self._closed = False
+
+    @classmethod
+    def open(cls, config=None, backend: str = "device", **kw) -> "FlashStore":
+        """One constructor for every backend.
+
+        ``config`` is backend-shaped — a ``TableGeometry`` for ``sim``, a
+        ``FlashTableConfig`` for ``device``, a ``ShardedTableConfig`` (or
+        the local ``FlashTableConfig``) for ``sharded`` — or ``None`` to
+        build one from ``**kw`` (``scheme=``, ``q_log2=``, ...). Engine
+        knobs (``chunk``, ``flush_threshold``, ``query_chunk``,
+        ``hot_capacity``, ...) pass through as keywords.
+        """
+        try:
+            impl = _BACKENDS[backend]
+        except KeyError:
+            raise ValueError(f"unknown backend {backend!r}; expected one "
+                             f"of {tuple(_BACKENDS)}") from None
+        if config is None:
+            return cls(impl(**kw))
+        if backend == "sim":
+            return cls(impl(geom=config, **kw))
+        return cls(impl(cfg=config, **kw))
+
+    # -- lifecycle ----------------------------------------------------------
+    def _check_open(self) -> None:
+        if self._closed:
+            raise ValueError("store is closed")
+
+    def close(self) -> None:
+        """Flush (durability point) and release the store. Idempotent."""
+        if self._closed:
+            return
+        self._b.flush()
+        self._b.close()
+        self._closed = True
+
+    def __enter__(self) -> "FlashStore":
+        self._check_open()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # an exception mid-stream still drains H_R: buffered counts are
+        # the caller's data, not scratch
+        self.close()
+
+    # -- writes -------------------------------------------------------------
+    def update(self, tokens, deltas=None) -> None:
+        """Accumulate a (token[, Δ]) batch into H_R. Duplicates fold,
+        zero-sum Δs cancel (§2.6), EMPTY tokens are padding; the device
+        sees traffic only at flush thresholds."""
+        self._check_open()
+        self._b.update(tokens, deltas)
+
+    def increment(self, key: int, delta: int = 1) -> None:
+        """Single-key counter bump; ``delta=-1`` is the paper's
+        deletion-by-decrement."""
+        self.update(np.asarray([key], np.int64),
+                    np.asarray([delta], np.int64))
+
+    def flush(self) -> None:
+        """Durability point: drain H_R and force the device merge of any
+        staged change segment (end-of-stream / checkpoint)."""
+        self._check_open()
+        self._b.flush()
+
+    # -- reads --------------------------------------------------------------
+    def query(self, keys):
+        """Counts for ``keys`` — scalar in, ``int`` out; array-like in,
+        ``int64`` array out (aligned with the flattened input). Reads are
+        read-your-writes: buffered H_R deltas overlay device counts."""
+        self._check_open()
+        if np.isscalar(keys) or (isinstance(keys, np.ndarray)
+                                 and keys.ndim == 0):
+            return int(self._b.query_batch(np.asarray([keys]))[0])
+        return self._b.query_batch(keys)
+
+    def query_batch(self, keys) -> np.ndarray:
+        """Alias of :meth:`query` for unambiguously-batched call sites."""
+        self._check_open()
+        return self._b.query_batch(keys)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return self._b.name
+
+    @property
+    def scheme(self) -> str:
+        return self._b.scheme
+
+    @property
+    def cfg(self):
+        return getattr(self._b, "cfg", None)
+
+    @property
+    def state(self):
+        """Device table state (device/sharded backends)."""
+        return getattr(self._b, "state", None)
+
+    @property
+    def buffered_entries(self) -> int:
+        return self._b.pending_entries()
+
+    def stats(self) -> Dict[str, int]:
+        """One flat ledger: device wear (``tile_stores`` = paper cleans)
+        or sim I/O counters, plus ``write_*`` (H_R) and ``query_*``
+        (batched read path) counters."""
+        return self._b.stats()
+
+    def wear(self) -> Dict[str, int]:
+        """The backend's wear counters: device/sharded ``TableStats``
+        fields (``tile_stores`` = paper cleans), sim ledger counters
+        (``cleans`` itself)."""
+        return self._b.wear()
+
+    def partition_heat(self, keys) -> np.ndarray:
+        """Per-key wear heat of the key's change-segment partition (device
+        backend with ``track_wear=True``; zeros elsewhere). Feed for
+        wear-aware eviction: re-dirtying a hot partition is nearly free."""
+        return self._b.partition_heat(keys)
+
+
+__all__ = ["FlashStore", "SimBackend", "DeviceBackend", "ShardedBackend",
+           "EMPTY"]

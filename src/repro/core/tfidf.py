@@ -7,59 +7,62 @@ Two counting tables are maintained while streaming a corpus:
 
 ``tfidf(w, d) = tf(w, d) * log(N / df(w))`` (Salton–Buckley weighting [32]).
 
-Any of the paper's schemes (MB / MDB / MDB-L / naive) can back either table;
-the I/O ledgers of the tables are what the paper's Figures 3–5 measure.
+Any of the paper's schemes (MB / MDB / MDB-L / naive) can back either
+table, and since PR 4 every table is a
+:class:`~repro.core.store.FlashStore` — the backend-agnostic facade
+(DESIGN.md §8) that owns the H_R buffering, flush/invalidate contract and
+batched read path. ``backend=`` selects:
 
-Two backends expose the same scheme landscape:
-
-* ``backend="sim"``    — the event-level NumPy simulator (exact SSD cost
-  ledger; the paper's measurement harness).
-* ``backend="device"`` — the JAX/Pallas device table (``core.table_jax``;
-  wear accounted as ``tile_stores``), for sim-vs-device comparisons of
-  MB / MDB / MDB-L on one workload.
+* ``"sim"``     — event-level NumPy simulator (exact SSD cost ledger),
+* ``"device"``  — single-table JAX/Pallas path,
+* ``"sharded"`` — the multi-device table (one shard per local device).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from .flash_model import TableGeometry
-from .table_sim import make_table
+from .store import FlashStore
 
 
 class DeviceTableAdapter:
-    """``table_sim``-compatible facade over the device table.
+    """Deprecated pre-PR4 facade over the device table.
 
-    Wraps :mod:`core.table_jax` behind the small surface the TF-IDF
-    pipeline uses (``insert_batch`` / ``query`` / ``query_batch`` /
-    ``finalize``), so the same workload can be driven through the
-    on-device MB / MDB / MDB-L implementations. Writes go through a
-    :class:`..core.write_engine.BatchedWriteEngine` (host H_R dedup,
-    threshold flushes, EMPTY-padded fixed-shape chunks, donated
-    dispatches — DESIGN.md §7), which owns the table state and
-    invalidates the paired :class:`..core.query_engine.BatchedQueryEngine`
-    on every flush. Reads consolidate the device count with the buffered
-    H_R overlay, so unflushed writes are never stale. ``wear()`` exposes
-    the device stats whose ``tile_stores`` field is the simulator
-    ledger's clean-count analogue.
+    Kept one PR as a shim: it now *is* a thin wrapper over
+    ``FlashStore.open(backend="device")`` — the engine pair lives in
+    :mod:`.store`, never here. New code should open a
+    :class:`~repro.core.store.FlashStore` directly.
     """
 
     def __init__(self, cfg, chunk: int = 4096, query_chunk: int = 1024,
                  flush_threshold: Optional[int] = None):
-        from .query_engine import BatchedQueryEngine
-        from .write_engine import BatchedWriteEngine
+        warnings.warn(
+            "DeviceTableAdapter is deprecated: use FlashStore.open(cfg, "
+            "backend='device') — the store owns the engine pair and the "
+            "flush/invalidate contract (DESIGN.md §8)",
+            DeprecationWarning, stacklevel=2)
+        self.store = FlashStore.open(cfg, backend="device", chunk=chunk,
+                                     query_chunk=query_chunk,
+                                     flush_threshold=flush_threshold)
         self.cfg = cfg
         self.scheme = cfg.scheme
-        self.engine = BatchedQueryEngine(cfg, chunk=query_chunk)
-        self.writer = BatchedWriteEngine(cfg, chunk=chunk,
-                                         flush_threshold=flush_threshold,
-                                         query_engine=self.engine)
+
+    # the engine pair, reachable for one more PR (tests / diagnostics)
+    @property
+    def engine(self):
+        return self.store._b.query_engine
+
+    @property
+    def writer(self):
+        return self.store._b.writer
 
     @property
     def state(self):
         """Current device table state (owned by the write engine)."""
-        return self.writer.state
+        return self.store.state
 
     @property
     def chunk(self) -> int:
@@ -77,35 +80,30 @@ class DeviceTableAdapter:
         # (write-through, draining anything already buffered with it).
         # Without it, writes buffer in H_R at the engine's own width.
         if chunk is None:
-            self.writer.update(keys, deltas)
+            self.store.update(keys, deltas)
             return
         prev = self.writer.chunk
         self.writer.chunk = int(chunk)
         try:
-            self.writer.update(keys, deltas)
+            self.store.update(keys, deltas)
             self.writer.flush()
         finally:
             self.writer.chunk = prev
 
     def query(self, key: int) -> int:
-        return self.writer.query(int(key))
+        return self.store.query(int(key))
 
     def query_batch(self, keys) -> np.ndarray:
-        """Batched counts (paper §2.7, batched regime): one deduped,
-        chunked dispatch for the whole key set instead of a per-key
-        lookup loop — the change-segment scan is paid once per chunk,
-        plus the H_R overlay for buffered (unflushed) writes."""
-        return self.writer.query_batch(keys)
+        return self.store.query_batch(keys)
 
     # the device table has no separate uncosted path; counts are exact
     logical_count = query
 
     def finalize(self) -> None:
-        self.writer.finalize()
+        self.store.flush()
 
     def wear(self) -> Dict[str, int]:
-        s = self.writer.state.stats
-        return {f: int(getattr(s, f)) for f in s._fields}
+        return self.store.wear()
 
     def write_stats(self) -> Dict[str, int]:
         """H_R-side write-path counters (dedup ratio, flushes, dispatches)."""
@@ -114,7 +112,8 @@ class DeviceTableAdapter:
 
 def make_device_table(scheme: str, q_log2: int = 14, r_log2: int = 9,
                       **kw) -> DeviceTableAdapter:
-    """Device-backed twin of :func:`table_sim.make_table`."""
+    """Deprecated device-backed twin of :func:`table_sim.make_table`;
+    use ``FlashStore.open(backend="device", scheme=..., ...)``."""
     from . import table_jax as tj
     cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2, scheme=scheme,
                               **kw)
@@ -137,19 +136,24 @@ def token_id(token: str, key_space: int = 1 << 30) -> int:
 
 
 class TfIdfPipeline:
-    """Streaming TF-IDF scorer over a counting hash table."""
+    """Streaming TF-IDF scorer over counting hash tables, all backends
+    through the one :class:`~repro.core.store.FlashStore` facade."""
 
     def __init__(self, geom: TableGeometry, scheme: str = "MDB-L",
                  ram_buffer_pct: float = 5.0, change_segment_pct: float = 12.5,
                  track_df: bool = True, backend: str = "sim",
                  q_log2: int = 14, r_log2: int = 9):
         if backend == "sim":
-            mk = lambda: make_table(scheme, geom, ram_buffer_pct,
-                                    change_segment_pct)
-        elif backend == "device":
+            mk = lambda: FlashStore.open(
+                geom, backend="sim", scheme=scheme,
+                ram_buffer_pct=ram_buffer_pct,
+                change_segment_pct=change_segment_pct)
+        elif backend in ("device", "sharded"):
             if scheme == "naive":
-                raise ValueError("the device table has no naive scheme")
-            mk = lambda: make_device_table(scheme, q_log2, r_log2)
+                raise ValueError(f"the {backend} table has no naive scheme")
+            mk = lambda: FlashStore.open(
+                backend=backend, scheme=scheme, q_log2=q_log2,
+                r_log2=r_log2)
         else:
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
@@ -168,9 +172,9 @@ class TfIdfPipeline:
         if len(ids) == 0:
             self.num_docs += 1
             return
-        self.term_table.insert_batch(ids)
+        self.term_table.update(ids)
         if self.doc_table is not None:
-            self.doc_table.insert_batch(np.unique(ids))
+            self.doc_table.update(np.unique(ids))
         self.num_docs += 1
         self.total_tokens += len(ids)
 
@@ -192,7 +196,7 @@ class TfIdfPipeline:
 
     def idf_many(self, tokens: Sequence[str]) -> np.ndarray:
         """Vectorized IDF: all tokens resolved in one batched df lookup
-        (duplicates deduped before dispatch by the query engine)."""
+        (duplicates deduped before dispatch by the store)."""
         df = self._df_many(tokens)
         out = np.zeros(len(tokens), np.float64)
         pos = df > 0
@@ -222,6 +226,6 @@ class TfIdfPipeline:
                       key=lambda t: -scores[t])
 
     def finalize(self) -> None:
-        self.term_table.finalize()
+        self.term_table.flush()
         if self.doc_table is not None:
-            self.doc_table.finalize()
+            self.doc_table.flush()

@@ -68,6 +68,48 @@ class WriteEngineStats:
         return dataclasses.asdict(self)
 
 
+def dedup_batch(tokens, deltas, empty: int):
+    """Validate and pre-fold one raw writer batch: flatten, drop ``empty``
+    padding, and collapse duplicate tokens to (unique, Δ-sum) pairs.
+
+    Returns ``(uniq, sums, n_valid)``; shared by every H_R front
+    (single-table engine and the sharded store backend)."""
+    flat = np.asarray(tokens).reshape(-1).astype(np.int64)
+    if deltas is None:
+        d = np.ones(flat.size, np.int64)
+    else:
+        d = np.asarray(deltas).reshape(-1).astype(np.int64)
+        if d.size != flat.size:
+            raise ValueError(f"deltas size {d.size} != tokens {flat.size}")
+    valid = flat != empty
+    n_valid = int(valid.sum())
+    if n_valid == 0:
+        return (np.zeros(0, np.int64),) * 2 + (0,)
+    uniq, inv = np.unique(flat[valid], return_inverse=True)
+    sums = np.zeros(uniq.size, np.int64)
+    np.add.at(sums, inv, d[valid])
+    return uniq, sums, n_valid
+
+
+def fold_entry(buf: Dict[int, int], k: int, s: int) -> int:
+    """Fold one (token, Δ-sum) into an H_R dict with the paper's §2.6
+    semantics: duplicates accumulate, sums that hit zero drop out (never
+    retained in memory). Returns +1 if a new slot opened, 0 if it folded
+    into an existing slot, −1 if it cancelled (ledger: buffered /
+    deduped / cancelled respectively)."""
+    cur = buf.get(k)
+    if cur is None:
+        if s:
+            buf[k] = s
+            return 1
+        return -1
+    if cur + s:
+        buf[k] = cur + s
+        return 0
+    del buf[k]
+    return -1
+
+
 class BatchedWriteEngine:
     """H_R dedup + threshold flush + donated fixed-shape dispatch over
     ``table_jax.update``."""
@@ -75,7 +117,8 @@ class BatchedWriteEngine:
     def __init__(self, cfg, state=None, chunk: int = 4096,
                  flush_threshold: Optional[int] = None,
                  query_engine=None,
-                 record: Optional[List[Tuple[np.ndarray, np.ndarray]]] = None):
+                 record: Optional[List[Tuple[np.ndarray, np.ndarray]]] = None,
+                 on_flush=None):
         import jax.numpy as jnp  # deferred: sim-only users stay jax-free
 
         from . import table_jax as tj
@@ -91,44 +134,34 @@ class BatchedWriteEngine:
         # appended, letting tests/benchmarks replay the exact device
         # traffic through direct per-call updates (bit-identity oracle)
         self.record = record
+        # optional wear listener: called after every device drain with
+        # (drained_keys_or_None, Δtile_stores) — ``None`` keys mark the
+        # forced end-of-stream merge, whose wear belongs to everything
+        # staged since the last merge. Enabling it syncs the device stats
+        # once per drain (flushes are rare; updates stay async).
+        self.on_flush = on_flush
         self._buf: Dict[int, int] = {}
         self.stats = WriteEngineStats()
+
+    def _tile_stores(self) -> int:
+        return int(np.asarray(self.state.stats.tile_stores))
 
     # -- the buffered write path --------------------------------------------
     def update(self, tokens, deltas=None) -> None:
         """Accumulate a (token, Δ) batch into H_R; auto-flush at the
         threshold. ``EMPTY`` tokens are padding and ignored."""
-        tj = self._tj
-        flat = np.asarray(tokens).reshape(-1).astype(np.int64)
-        if deltas is None:
-            d = np.ones(flat.size, np.int64)
-        else:
-            d = np.asarray(deltas).reshape(-1).astype(np.int64)
-            if d.size != flat.size:
-                raise ValueError(f"deltas size {d.size} != tokens {flat.size}")
         self.stats.updates += 1
-        valid = flat != tj.EMPTY
-        n_valid = int(valid.sum())
+        uniq, sums, n_valid = dedup_batch(tokens, deltas, self._tj.EMPTY)
         if n_valid == 0:
             return
         self.stats.entries += n_valid
-        uniq, inv = np.unique(flat[valid], return_inverse=True)
-        sums = np.zeros(uniq.size, np.int64)
-        np.add.at(sums, inv, d[valid])
         buf = self._buf
         n_new = 0
         for k, s in zip(uniq.tolist(), sums.tolist()):
-            cur = buf.get(k)
-            if cur is None:
-                if s:
-                    buf[k] = s
-                    n_new += 1            # a slot really opened
-                else:
-                    self.stats.cancelled += 1  # batch-internal zero sum
-            elif cur + s:
-                buf[k] = cur + s
-            else:
-                del buf[k]
+            opened = fold_entry(buf, k, s)
+            if opened > 0:
+                n_new += 1                # a slot really opened
+            elif opened < 0:
                 self.stats.cancelled += 1
         self.stats.buffered += n_new
         self.stats.deduped += n_valid - n_new
@@ -147,6 +180,7 @@ class BatchedWriteEngine:
         dels = np.fromiter(self._buf.values(), np.int64, len(self._buf))
         order = np.argsort(keys, kind="stable")   # deterministic dispatch
         keys, dels = keys[order], dels[order]
+        wear_before = self._tile_stores() if self.on_flush else 0
         step = self.chunk
         for lo in range(0, keys.size, step):
             pk = keys[lo:lo + step]
@@ -165,6 +199,8 @@ class BatchedWriteEngine:
         self._buf.clear()
         self.stats.flushes += 1
         self._invalidate()
+        if self.on_flush:
+            self.on_flush(keys, self._tile_stores() - wear_before)
         return self.state
 
     def merge(self):
@@ -172,8 +208,11 @@ class BatchedWriteEngine:
         segment (end-of-stream / checkpoint)."""
         invalidated = bool(self._buf)     # flush() invalidates iff it ran
         self.flush()
+        wear_before = self._tile_stores() if self.on_flush else 0
         self.state = self._tj.flush(self.cfg, self.state)
         self.stats.merges += 1
+        if self.on_flush:
+            self.on_flush(None, self._tile_stores() - wear_before)
         if not invalidated:
             # conservative: the device merge moves placement, not counts,
             # but clear the cache anyway — one invalidation per drain

@@ -1,13 +1,14 @@
 """Corpus statistics service: the paper's counting hash table as the data
 layer's streaming statistics engine.
 
-``CorpusStats`` ingests token batches into a flash-hash device table
-(MDB-L policy by default — the paper's recommendation) and answers
-frequency queries. Ingest rides the
-:class:`~repro.core.write_engine.BatchedWriteEngine` (host H_R dedup,
-threshold-triggered donated flushes — DESIGN.md §7), which also drives
-the paired query engine's invalidation, so reads between ingests are
-never stale. On top of it:
+``CorpusStats`` ingests token batches into a flash-hash table (MDB-L
+policy by default — the paper's recommendation) and answers frequency
+queries. Since PR 4 the table is a
+:class:`~repro.core.store.FlashStore` (DESIGN.md §8): the store owns the
+H_R buffering, threshold-triggered donated flushes and the
+flush → invalidate contract, so reads between ingests are never stale —
+and ``backend="sharded"`` scales the same service across every local
+device with zero caller changes. On top of it:
 
 * ``tfidf_weights`` — per-token IDF weights for corpus filtering/weighting,
 * ``doc_filter`` — the paper's TF-IDF keyword criterion as a document
@@ -17,74 +18,99 @@ never stale. On top of it:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional
 
 import numpy as np
 
 from ..core import table_jax as tj
-from ..core.query_engine import BatchedQueryEngine
-from ..core.write_engine import BatchedWriteEngine
+from ..core.store import FlashStore
 
 
 class CorpusStats:
     def __init__(self, cfg: tj.FlashTableConfig,
                  state: Optional[tj.DeviceTableState] = None,
                  docs_seen: int = 0, tokens_seen: int = 0,
-                 engine: Optional[BatchedQueryEngine] = None,
-                 writer: Optional[BatchedWriteEngine] = None):
+                 engine=None, writer=None, backend: str = "device"):
         self.cfg = cfg
         self.docs_seen = docs_seen
         self.tokens_seen = tokens_seen
-        self.engine = engine if engine is not None else BatchedQueryEngine(
-            cfg, chunk=1024)
-        # the write engine owns the device state; a hand-built state
-        # (tests/restores) is adopted as its starting point
-        self.writer = writer if writer is not None else BatchedWriteEngine(
-            cfg, state=state, query_engine=self.engine)
+        if engine is not None or writer is not None:
+            warnings.warn(
+                "passing engine=/writer= to CorpusStats is deprecated: "
+                "the FlashStore facade owns the engine pair now "
+                "(DESIGN.md §8); the writer's state is adopted (H_R "
+                "drained first), the hand-built engines are discarded",
+                DeprecationWarning, stacklevel=2)
+            if writer is not None and state is None:
+                writer.flush()          # unflushed H_R entries are data
+                state = writer.state
+        if backend == "sharded" and state is not None:
+            raise ValueError("sharded backend cannot adopt a single-table "
+                             "state")
+        kw = {"state": state} if backend == "device" else {}
+        self.store = FlashStore.open(cfg, backend=backend, **kw)
 
     @classmethod
     def create(cls, q_log2: int = 18, r_log2: int = 10,
-               scheme: str = "MDB-L", **table_kw) -> "CorpusStats":
+               scheme: str = "MDB-L", backend: str = "device",
+               **table_kw) -> "CorpusStats":
         """Any device scheme (MB / MDB / MDB-L) backs the stats engine;
         ``table_kw`` forwards change-segment knobs (``log_capacity``,
         ``cs_partitions``, ...) to :class:`tj.FlashTableConfig`."""
         cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2,
                                   scheme=scheme, **table_kw)
-        return cls(cfg=cfg)
+        return cls(cfg=cfg, backend=backend)
 
     @property
     def state(self) -> tj.DeviceTableState:
-        """Current device table state (owned by the write engine)."""
-        return self.writer.state
+        """Current device table state (owned by the store)."""
+        return self.store.state
+
+    # the engine pair, reachable for one more PR (tests / diagnostics)
+    @property
+    def writer(self):
+        b = self.store._b
+        if not hasattr(b, "writer"):
+            raise AttributeError(
+                "CorpusStats.writer is a deprecated single-table surface "
+                f"with no {b.name!r}-backend equivalent; use "
+                "CorpusStats.write_stats() / .store instead")
+        return b.writer
+
+    @property
+    def engine(self):
+        return self.store._b.query_engine
 
     def wear(self) -> Dict[str, int]:
         """Device wear/traffic counters (``tile_stores`` = paper cleans);
         includes ``dropped``/``carried`` so capacity losses are visible."""
-        s = self.writer.state.stats
-        return {f: int(getattr(s, f)) for f in s._fields}
+        return self.store.wear()
 
     def query_stats(self) -> Dict[str, int]:
         """Batch-aggregated read-path counters (dedup ratio, cache hits,
-        probe-distance totals) from the query engine."""
-        return self.engine.stats.as_dict()
+        probe-distance totals) from the store's query path."""
+        return {k[len("query_"):]: v for k, v in self.store.stats().items()
+                if k.startswith("query_")}
 
     def write_stats(self) -> Dict[str, int]:
         """H_R write-path counters (buffered/deduped/dispatched entries,
-        flush counts) from the write engine."""
-        return self.writer.stats.as_dict()
+        flush counts) from the store's write path."""
+        return {k[len("write_"):]: v for k, v in self.store.stats().items()
+                if k.startswith("write_")}
 
     # -- ingestion ----------------------------------------------------------
     def ingest(self, tokens: np.ndarray) -> None:
         """Add one batch/document of token ids (host array): buffered in
         H_R, dispatched to the device at the flush threshold."""
         t = np.asarray(tokens).reshape(-1)
-        self.writer.update(t)
+        self.store.update(t)
         self.docs_seen += 1
         self.tokens_seen += int(t.size)
 
     def flush(self) -> None:
         """Drain H_R and force the device merge (checkpoint boundary)."""
-        self.writer.merge()
+        self.store.flush()
 
     # -- queries ------------------------------------------------------------
     def counts(self, tokens: np.ndarray) -> np.ndarray:
@@ -92,7 +118,7 @@ class CorpusStats:
         through the hot-key cache between ingests (DESIGN.md §6), with
         the buffered H_R deltas overlaid (DESIGN.md §7)."""
         q = np.asarray(tokens).reshape(-1)
-        return self.writer.query_batch(q)
+        return self.store.query_batch(q)
 
     def tfidf_weights(self, tokens: np.ndarray) -> np.ndarray:
         """IDF-style weights: log(total / freq) per queried token."""
@@ -118,7 +144,7 @@ class CorpusStats:
         (layer, expert) pairs — counting semantics, deletion-capable)."""
         e = counts.shape[0]
         keys = (np.arange(e, dtype=np.int64) | (np.int64(layer) << 16))
-        self.writer.update(keys, np.asarray(counts, np.int64))
+        self.store.update(keys, np.asarray(counts, np.int64))
 
     def expert_counts(self, layer: int, num_experts: int) -> np.ndarray:
         keys = (np.arange(num_experts, dtype=np.int64)

@@ -10,13 +10,19 @@ to 0 are evictable.
 
 At cluster scale the value store is paged HBM blocks (vLLM-style) sharded
 like the KV cache; in this reference implementation the store is a host
-dict of cache pytrees, while the *refcount* path runs on-device through
-``core.table_jax`` (any of the paper's schemes; MDB-L by default) — the
-part the paper contributes. Refcount bumps ride the
-:class:`~repro.core.write_engine.BatchedWriteEngine` (DESIGN.md §7): ±1
-deltas accumulate in H_R (a +1/−1 pair cancels before ever touching the
-device), reads overlay the buffered deltas so eviction decisions are
-exact, and the engine invalidates the hot-key cache on every flush.
+dict of cache pytrees, while the *refcount* path runs through a
+:class:`~repro.core.store.FlashStore` (DESIGN.md §8) — H_R ±1
+cancellation before any device traffic, read-your-writes overlay so
+eviction decisions are exact, automatic hot-cache invalidation on flush.
+
+Eviction is **wear-aware** by default (``eviction="wear"``): among
+zero-refcount blocks, evict the one whose key lives in the *hottest*
+change-segment partition (per-merge ``TableStats`` wear deltas, tracked
+by the store's ``track_wear`` feed). A hot partition is being rewritten
+anyway, so the eventual re-insertion of that block's refcount dirties a
+block that merges regardless; evicting a cold-partition block instead
+would later re-dirty a quiet region and buy a fresh block rewrite.
+``eviction="first_fit"`` keeps the old drop-the-first-zero-ref policy.
 """
 from __future__ import annotations
 
@@ -26,15 +32,14 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core import table_jax as tj
-from ..core.query_engine import BatchedQueryEngine
-from ..core.write_engine import BatchedWriteEngine
+from ..core.store import FlashStore
 
 
 def _chain_hash(prev: int, tokens: Sequence[int]) -> int:
     h = np.uint32(prev if prev else 2166136261)
     for t in tokens:
         h = np.uint32(h ^ np.uint32(t & 0xFFFFFFFF))
-        h = np.uint32(h * np.uint32(16777619))
+        h = np.uint32(int(h) * 16777619 & 0xFFFFFFFF)
     out = int(h) & 0x3FFFFFFF
     return out if out else 1
 
@@ -49,9 +54,12 @@ class _Block:
 class PrefixKVCache:
     def __init__(self, block_tokens: int = 16, capacity_blocks: int = 256,
                  q_log2: int = 12, r_log2: int = 8, scheme: str = "MDB-L",
-                 cs_partitions: int = 4):
+                 cs_partitions: int = 4, eviction: str = "wear"):
+        if eviction not in ("wear", "first_fit"):
+            raise ValueError(f"unknown eviction policy {eviction!r}")
         self.block_tokens = block_tokens
         self.capacity = capacity_blocks
+        self.eviction = eviction
         self.cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2,
                                        scheme=scheme,
                                        log_capacity=1 << 10,
@@ -60,13 +68,14 @@ class PrefixKVCache:
                                        overflow_capacity=1 << 9)
         # batched refcount reads: evictions scan every resident block key
         # in one deduped dispatch, and repeat scans between bumps are
-        # served from the engine's hot cache + H_R overlay (the write
-        # engine invalidates the cache whenever it flushes to the device).
-        self.engine = BatchedQueryEngine(self.cfg, chunk=256,
-                                         hot_capacity=4 * capacity_blocks)
-        self.writer = BatchedWriteEngine(self.cfg, chunk=256,
-                                         flush_threshold=2 * capacity_blocks,
-                                         query_engine=self.engine)
+        # served from the store's hot cache + H_R overlay (the store
+        # invalidates the cache whenever it flushes to the device).
+        # track_wear feeds the per-partition heat the eviction policy uses.
+        self._refs = FlashStore.open(self.cfg, backend="device",
+                                     chunk=256, query_chunk=256,
+                                     flush_threshold=2 * capacity_blocks,
+                                     hot_capacity=4 * capacity_blocks,
+                                     track_wear=True)
         self.store: Dict[int, _Block] = {}
         self.hits = 0
         self.misses = 0
@@ -85,22 +94,22 @@ class PrefixKVCache:
 
     @property
     def refs(self) -> tj.DeviceTableState:
-        """Current refcount table state (owned by the write engine)."""
-        return self.writer.state
+        """Current refcount table state (owned by the store)."""
+        return self._refs.state
 
     def _count(self, keys: List[int]) -> np.ndarray:
         if not keys:
             return np.zeros(0, np.int32)
         # device count + buffered H_R deltas: exact even between flushes
-        return self.writer.query_batch(np.asarray(keys, np.int64))
+        return self._refs.query_batch(np.asarray(keys, np.int64))
 
     def _bump(self, keys: List[int], delta: int) -> None:
         if not keys:
             return
         # buffered ±delta: a +1/−1 pair cancels in H_R without device
-        # traffic; the engine pads/chunks/invalidates when it flushes
-        self.writer.update(np.asarray(keys, np.int64),
-                           np.full(len(keys), delta, np.int64))
+        # traffic; the store pads/chunks/invalidates when it flushes
+        self._refs.update(np.asarray(keys, np.int64),
+                          np.full(len(keys), delta, np.int64))
 
     # -- public API ------------------------------------------------------------
     def acquire(self, tokens: Sequence[int]) -> Tuple[int, Optional[Any],
@@ -153,32 +162,40 @@ class PrefixKVCache:
         self._bump(pinned, -1)
 
     def _evict(self) -> None:
-        """Drop a zero-refcount block (full removal, §2.6)."""
+        """Drop a zero-refcount block (full removal, §2.6).
+
+        ``eviction="wear"``: among the zero-refcount candidates, evict
+        the one whose key's change-segment partition has accumulated the
+        most merge wear — its eventual re-insertion dirties a partition
+        that is being rewritten anyway (ROADMAP wear-aware eviction)."""
         keys = list(self.store.keys())
         counts = self._count(keys)
-        for k, c in zip(keys, counts):
-            if c <= 0:
-                del self.store[k]
-                self.evictions += 1
-                return
-        # all pinned: drop the oldest anyway (degraded mode)
-        oldest = keys[0]
-        del self.store[oldest]
+        zero = [k for k, c in zip(keys, counts) if c <= 0]
+        if not zero:
+            # all pinned: drop the oldest anyway (degraded mode)
+            del self.store[keys[0]]
+            self.evictions += 1
+            return
+        victim = zero[0]
+        if self.eviction == "wear" and len(zero) > 1:
+            heat = self._refs.partition_heat(np.asarray(zero, np.int64))
+            victim = zero[int(np.argmax(heat))]
+        del self.store[victim]
         self.evictions += 1
 
     def stats(self) -> dict:
-        q = self.engine.stats
-        w = self.writer.stats
+        s = self._refs.stats()
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "resident": len(self.store),
                 "scheme": self.cfg.scheme,
-                "tile_stores": int(self.refs.stats.tile_stores),
-                "dropped": int(self.refs.stats.dropped),
-                "carried": int(self.refs.stats.carried),
-                "query_batches": q.batches,
-                "query_cache_hits": q.cache_hits,
-                "query_device_keys": q.device_queries,
-                "write_buffered": w.buffered,
-                "write_cancelled": w.cancelled,
-                "write_flushes": w.flushes,
-                "write_dispatches": w.dispatches}
+                "eviction": self.eviction,
+                "tile_stores": s["tile_stores"],
+                "dropped": s["dropped"],
+                "carried": s["carried"],
+                "query_batches": s["query_batches"],
+                "query_cache_hits": s["query_cache_hits"],
+                "query_device_keys": s["query_device_queries"],
+                "write_buffered": s["write_buffered"],
+                "write_cancelled": s["write_cancelled"],
+                "write_flushes": s["write_flushes"],
+                "write_dispatches": s["write_dispatches"]}

@@ -1,0 +1,252 @@
+"""FlashStore facade: one API, three backends, identical semantics.
+
+The PR-4 acceptance property (ISSUE 4): the same token stream driven
+through ``FlashStore.open(backend=...)`` for ``sim``, ``device`` and
+``sharded`` must produce identical counts — before a flush
+(read-your-writes through the H_R overlay), after increments/decrements
+(Δ-cancellation), and after the durability flush — plus the regression
+that the pre-PR4 manual engine-pair wiring surfaces now warn.
+"""
+import os
+import subprocess
+import sys
+from collections import Counter
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import table_jax as tj
+from repro.core.store import FlashStore
+
+HELPERS = Path(__file__).parent / "helpers"
+
+SCHEMES = ["MB", "MDB", "MDB-L"]
+
+
+def _cfg(scheme, **kw):
+    base = dict(q_log2=10, r_log2=6, scheme=scheme, log_capacity=1 << 9,
+                cs_partitions=4, max_updates_per_block=1 << 6,
+                overflow_capacity=1 << 9)
+    base.update(kw)
+    return tj.FlashTableConfig(**base)
+
+
+def _shard_count() -> int:
+    """All local devices when that is a power of two (the dedicated CI
+    job forces 8), else 1 — the facade must behave identically."""
+    import jax
+    n = jax.device_count()
+    return n if n & (n - 1) == 0 else 1
+
+
+def _open_all(scheme="MDB-L"):
+    stores = {
+        "sim": FlashStore.open(backend="sim", scheme=scheme),
+        "device": FlashStore.open(_cfg(scheme), backend="device",
+                                  chunk=256, flush_threshold=512),
+    }
+    if scheme in ("MB", "MDB-L"):
+        stores["sharded"] = FlashStore.open(
+            _cfg(scheme), backend="sharded", num_shards=_shard_count(),
+            shard_chunk=256, flush_threshold=300)
+    return stores
+
+
+def test_cross_backend_equivalence_one_stream():
+    """sim ≡ device ≡ sharded on one skewed stream with ±Δ batches,
+    visibility checked at every lifecycle point."""
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 500, size=4096).astype(np.int64)
+    truth = Counter(toks.tolist())
+    keys = np.array(sorted(truth))
+    want = np.array([truth[int(k)] for k in keys])
+    dec = keys[::7]                      # decrement a spread of keys
+    stores = _open_all("MDB-L")
+    results = {}
+    for name, st in stores.items():
+        for i in range(0, toks.size, 512):
+            st.update(toks[i:i + 512])
+        # read-your-writes: H_R + staged entries visible pre-flush
+        np.testing.assert_array_equal(st.query(keys), want,
+                                      err_msg=f"{name}: pre-flush")
+        st.update(dec, np.full(dec.size, -1, np.int64))
+        np.testing.assert_array_equal(
+            st.query(dec), want[::7] - 1, err_msg=f"{name}: post-decrement")
+        st.update(dec)                   # +1: cancels inside H_R
+        st.flush()
+        got = st.query(keys)
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{name}: post-flush")
+        assert st.query(999_999) == 0    # absent key, scalar path
+        results[name] = got
+        s = st.stats()
+        assert s["backend"] == name and s["buffered_entries"] == 0
+        st.close()
+    for name, got in results.items():
+        np.testing.assert_array_equal(got, results["sim"], err_msg=name)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_sim_equals_device_per_scheme(scheme):
+    """Every scheme answers the same counts through the facade."""
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, 300, size=1500).astype(np.int64)
+    keys = np.unique(toks)
+    got = {}
+    sim = FlashStore.open(backend="sim", scheme=scheme)
+    dev = FlashStore.open(_cfg(scheme), backend="device", chunk=128,
+                          flush_threshold=256)
+    for st in (sim, dev):
+        st.update(toks)
+        st.flush()
+        got[st.backend] = st.query(keys)
+        st.close()
+    np.testing.assert_array_equal(got["sim"], got["device"])
+
+
+def test_increment_and_context_manager():
+    with FlashStore.open(_cfg("MDB-L"), backend="device") as st:
+        st.increment(42)
+        st.increment(42, 2)
+        st.increment(42, -1)
+        assert st.query(42) == 2         # buffered Δs, no flush yet
+        assert st.buffered_entries == 1
+    assert st._closed
+    with pytest.raises(ValueError):
+        st.update(np.asarray([1]))
+    st.close()                           # idempotent
+
+
+def test_sharded_shard_local_thresholds():
+    """One hot shard drains alone: the other shards' H_R partitions keep
+    buffering (no global drain), and the collective carries nothing."""
+    n = _shard_count()
+    if n == 1:
+        pytest.skip("needs a multi-device mesh (dedicated CI job)")
+    st = FlashStore.open(_cfg("MDB-L"), backend="sharded", num_shards=n,
+                         shard_chunk=64, flush_threshold=64,
+                         piggyback_frac=2.0)    # piggyback off: isolate
+    b = st._b
+    # craft keys owned by shard 0 vs the rest
+    keys = np.arange(20_000)
+    owners = b.owner_of(keys)
+    hot = keys[owners == 0][:64]          # exactly the threshold
+    cold = keys[owners != 0][:32]
+    st.update(cold)
+    assert st.buffered_entries == 32      # below threshold: all buffered
+    st.update(hot)                        # shard 0 hits its threshold
+    s = st.stats()
+    assert s["write_auto_flushes"] == 1
+    assert st.buffered_entries == 32      # cold shards kept their H_R
+    assert s["write_carried"] == 0
+    # reads still consolidate across drained + buffered shards
+    np.testing.assert_array_equal(st.query(hot), np.ones(hot.size))
+    np.testing.assert_array_equal(st.query(cold), np.ones(cold.size))
+    st.close()
+
+
+def test_deprecated_manual_engine_wiring_warns():
+    """The pre-PR4 surfaces survive one PR behind a DeprecationWarning."""
+    from repro.core.tfidf import DeviceTableAdapter, make_device_table
+    from repro.data import CorpusStats
+    with pytest.warns(DeprecationWarning, match="FlashStore"):
+        DeviceTableAdapter(_cfg("MDB-L"))
+    with pytest.warns(DeprecationWarning, match="FlashStore"):
+        make_device_table("MDB-L", q_log2=10, r_log2=6)
+    from repro.core.query_engine import BatchedQueryEngine
+    with pytest.warns(DeprecationWarning, match="FlashStore"):
+        CorpusStats(_cfg("MDB-L"), engine=BatchedQueryEngine(_cfg("MDB-L")))
+
+
+def test_deprecated_writer_adoption_drains_buffer():
+    """Adopting a hand-built writer must not lose its unflushed H_R
+    entries (they are the caller's data, not scratch)."""
+    from repro.core.write_engine import BatchedWriteEngine
+    from repro.data import CorpusStats
+    cfg = _cfg("MDB-L")
+    w = BatchedWriteEngine(cfg, chunk=64, flush_threshold=1000)
+    w.update(np.asarray([1, 1, 2]))
+    assert w.buffered_entries > 0           # really unflushed
+    with pytest.warns(DeprecationWarning):
+        cs = CorpusStats(cfg, writer=w)
+    np.testing.assert_array_equal(cs.counts(np.asarray([1, 2])), [2, 1])
+
+
+def test_sim_backend_implements_wear():
+    """Generic cross-backend code may call wear() everywhere: the sim
+    reports its ledger (cleans = the paper's erase count)."""
+    st = FlashStore.open(backend="sim", scheme="MDB-L")
+    st.update(np.arange(100))
+    st.flush()
+    w = st.wear()
+    assert w["cleans"] > 0 and "block_ops" in w
+    st.close()
+
+
+def test_corpus_stats_sharded_backend():
+    """CorpusStats scales to the sharded store with zero caller changes;
+    the deprecated single-table .writer surface refuses clearly."""
+    from repro.data import CorpusStats
+    st = CorpusStats.create(q_log2=10, r_log2=6, scheme="MDB-L",
+                            log_capacity=1 << 9,
+                            max_updates_per_block=1 << 6,
+                            overflow_capacity=1 << 9, backend="sharded")
+    toks = np.arange(50, 90)
+    st.ingest(toks)
+    np.testing.assert_array_equal(st.counts(toks), np.ones(40))
+    st.flush()
+    np.testing.assert_array_equal(st.counts(toks), np.ones(40))
+    assert st.wear()["dropped"] == 0
+    assert not hasattr(st, "writer")        # explicit, not a crash
+    assert st.engine is not None            # consolidated read path
+
+
+def test_adapter_shim_still_works():
+    """The deprecated adapter delegates to the store: same counts, same
+    wear surface (so PR-2/3 tests keep their meaning for one PR)."""
+    with pytest.warns(DeprecationWarning):
+        from repro.core.tfidf import make_device_table
+        t = make_device_table("MDB-L", q_log2=10, r_log2=6,
+                              log_capacity=1 << 9,
+                              max_updates_per_block=1 << 6,
+                              overflow_capacity=1 << 9)
+    t.insert_batch(np.asarray([7, 7, 8]))
+    assert t.query(7) == 2 and t.query_batch([7, 8]).tolist() == [2, 1]
+    t.finalize()
+    assert t.wear()["dropped"] == 0
+
+
+def test_engine_pairing_lives_only_in_store():
+    """Acceptance guard: no consumer module constructs the engine pair
+    by hand anymore — the store is the only wiring point."""
+    import ast
+    root = Path(__file__).resolve().parent.parent / "src" / "repro"
+    offenders = []
+    for py in root.rglob("*.py"):
+        if py.name in ("store.py", "write_engine.py", "query_engine.py"):
+            continue
+        tree = ast.parse(py.read_text())
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in ("BatchedWriteEngine",
+                                         "BatchedQueryEngine")):
+                offenders.append(f"{py}:{node.lineno}")
+    assert not offenders, f"manual engine wiring: {offenders}"
+
+
+def _run(script, *args, timeout=1200):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, str(HELPERS / script), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.mark.slow
+def test_sharded_store_eight_devices():
+    """The full 8-shard facade property, in a subprocess with its own
+    8-virtual-device XLA view (mirrors tests/test_distributed.py)."""
+    r = _run("dist_store_main.py")
+    assert "DIST_STORE_OK" in r.stdout, r.stdout + r.stderr

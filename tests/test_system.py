@@ -72,7 +72,7 @@ def test_tfidf_end_to_end_all_schemes():
                for s, p in pipes.items()}
     assert answers["MB"] == answers["MDB"] == answers["MDB-L"]
     # different I/O profiles, same ordering as the paper
-    cleans = {s: p.term_table.ledger.cleans for s, p in pipes.items()}
+    cleans = {s: p.term_table.stats()["cleans"] for s, p in pipes.items()}
     assert cleans["MB"] >= cleans["MDB"] >= cleans["MDB-L"]
 
 
