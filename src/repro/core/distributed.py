@@ -15,6 +15,14 @@ writes land block-local on the owner (semi-random discipline end-to-end).
 Fixed-capacity buckets (``bucket_cap`` entries per destination shard) keep
 the collective statically shaped; overflowing entries are carried over to
 the next flush (same deferred-update discipline as the tile merge).
+
+Async-safe drains (DESIGN.md §9): the update/flush programs built with
+``donate=True`` donate the global state, and the sharded store runs them
+on its background drain worker. Per-shard drains therefore follow the
+same off-thread discipline as the single table — exactly one drain in
+flight, the worker is the only caller of the donated programs, and every
+dispatch is guarded by :func:`assert_live` (re-exported from
+:mod:`segments`) so a raced state fails loudly.
 """
 from __future__ import annotations
 
@@ -28,6 +36,7 @@ from . import table_jax as tj
 from .hashing import Pow2Hash
 
 EMPTY = tj.EMPTY
+assert_live = tj.assert_live    # off-thread donation guard (DESIGN.md §9)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,6 +16,13 @@ stats, the serving prefix cache) goes through instead:
   Counts are global aggregates, so *any* update/merge/flush may move any
   key's count: writers call :meth:`invalidate` (wholesale clear) after
   every mutation rather than tracking per-key dirtiness (DESIGN.md §6);
+* **invalidate fencing** — drains run on a background worker thread
+  since the store went async (DESIGN.md §9), so an invalidation can land
+  while a batch lookup is mid-flight. Every ``invalidate()`` bumps an
+  epoch; a lookup only populates the cache if the epoch it started under
+  is still current, so a count probed against a pre-drain state can
+  never be cached after the drain's invalidation (it would be served
+  stale forever);
 * **probe-distance aggregation** — per-key probe distances from the
   device are folded into batch-level wear/latency stats (sum + max +
   served-query count); cache hits do not re-probe and add nothing.
@@ -43,6 +50,9 @@ class QueryEngineStats:
     device_queries: int = 0     # unique keys sent to the device
     device_dispatches: int = 0  # compiled lookup launches (chunks)
     invalidations: int = 0      # hot-cache clears by writers
+    fenced: int = 0             # cache inserts dropped because a writer
+                                # invalidated while the lookup was in
+                                # flight (epoch fence, DESIGN.md §9)
     probe_total: int = 0        # sum of device probe distances
     probe_max: int = 0          # worst single probe in any batch
 
@@ -70,12 +80,19 @@ class BatchedQueryEngine:
         self._lookup = (lookup_fn if lookup_fn is not None
                         else lambda state, q: tj.lookup(self.cfg, state, q))
         self._hot: Dict[int, int] = {}
+        # invalidation epoch: bumped on every invalidate(). Lookups fence
+        # their cache inserts on it so a count probed against a pre-drain
+        # state is never remembered after the drain invalidated.
+        self._epoch = 0
         self.stats = QueryEngineStats()
 
     # -- cache maintenance --------------------------------------------------
     def invalidate(self) -> None:
         """Writers call this after any update/merge/flush: counts are
-        global aggregates, so the whole hot cache goes at once."""
+        global aggregates, so the whole hot cache goes at once. Also
+        bumps the epoch fence — a lookup racing this call will drop its
+        (now possibly stale) cache inserts."""
+        self._epoch += 1
         if self._hot:
             self._hot.clear()
             self.stats.invalidations += 1
@@ -121,6 +138,7 @@ class BatchedQueryEngine:
                     ucnt[i] = c
                     self.stats.cache_hits += 1
         if miss_idx:
+            epoch = self._epoch          # fence: inserts only if unchanged
             miss = uniq[miss_idx]
             self.stats.device_queries += miss.size
             got = np.empty(miss.size, np.int64)
@@ -142,8 +160,13 @@ class BatchedQueryEngine:
                     self.stats.probe_max = max(self.stats.probe_max,
                                                int(dist.max()))
             ucnt[miss_idx] = got
-            for k, c in zip(miss, got):
-                self._remember(int(k), int(c))
+            if epoch == self._epoch:
+                for k, c in zip(miss, got):
+                    self._remember(int(k), int(c))
+            else:
+                # a drain invalidated mid-lookup: these counts may predate
+                # it, so they must not outlive the invalidation
+                self.stats.fenced += miss.size
         return ucnt[inv]
 
     def query(self, state, key: int) -> int:

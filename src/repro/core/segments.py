@@ -105,6 +105,24 @@ def accumulate_deltas(tokens, deltas):
     return keys, cnts.astype(jnp.int32)
 
 
+def assert_live(state) -> None:
+    """Off-thread donation guard (DESIGN.md §9).
+
+    ``update``/``flush`` donate the state, and since the store's flush
+    went asynchronous those donations happen on a background worker: a
+    dispatch that starts from an already-donated value would die deep in
+    XLA with an opaque deleted-buffer error. Every drain calls this on
+    the state it is about to donate — a failure means two drains raced,
+    or a caller reused a stale reference it captured before a drain."""
+    for leaf in jax.tree.leaves(state):
+        if getattr(leaf, "is_deleted", None) is not None and leaf.is_deleted():
+            raise RuntimeError(
+                "device table state was already donated: a drain is "
+                "running (or ran) on this value — rebind state after "
+                "every update/flush and never dispatch two drains on "
+                "the same state (DESIGN.md §9)")
+
+
 def compact(keys, counts):
     """Compact valid entries to the front, EMPTY-pad the tail."""
     valid = keys != EMPTY

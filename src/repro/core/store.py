@@ -32,10 +32,22 @@ Three backends plug in behind the identical lifecycle via a small
   cross-shard consolidated batched lookups (one psum per query chunk).
 
 Engine pairing happens *only* in this module: constructing a write/query
-engine by hand elsewhere is the deprecated pre-PR4 surface.
+engine by hand elsewhere is the pre-PR4 surface, deleted in PR 5.
+
+Since PR 5 every backend flushes **asynchronously and double-buffered**
+(DESIGN.md §9): ingest fills an active H_R buffer while a single
+background worker (one :class:`FlushDispatcher` per store) drains the
+sealed one through the donated update/merge programs. ``flush(wait=True)``
+is the durability barrier; reads overlay both buffers plus the in-flight
+chunk, so read-your-writes holds at every instant; ``async_flush=False``
+restores the synchronous pre-PR5 discipline (drains still route through
+the dispatcher so the ``stall_us`` ledger measures what async buys).
 """
 from __future__ import annotations
 
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -48,40 +60,248 @@ def _flat_i64(x) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# the drain dispatcher: one worker thread + state lock per store
+# ---------------------------------------------------------------------------
+class FlushDispatcher:
+    """Background drain executor shared by every backend (DESIGN.md §9).
+
+    Owns three things:
+
+    * **the state lock** — every device-state access (drain dispatch,
+      forced merge, batched lookup) runs under it, so a reader always
+      sees a consistent (device state, in-flight overlay) snapshot and
+      never a half-applied drain or a donated-away buffer;
+    * **the one in-flight future** — double buffering means at most one
+      sealed buffer is draining; submitting while it drains first waits
+      it out (the stall the second buffer exists to minimise);
+    * **the overlap/stall ledgers** — written into the attached
+      :class:`~.write_engine.WriteEngineStats` (``ledger``): drain time
+      spent on the worker counts as ``overlap_us`` (hidden behind
+      ingest), caller time spent waiting counts as ``stall_us``. With
+      ``enabled=False`` drains run inline and their full duration is
+      ``stall_us`` — the synchronous baseline the async rows are
+      measured against.
+
+    ``wait()`` is the barrier: it re-raises any drain exception in the
+    caller, so failures surface at ``flush(wait=True)`` / ``stats()`` /
+    ``close()`` instead of dying silently on the worker.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = bool(enabled)
+        self.lock = threading.RLock()
+        self.ledger = None            # WriteEngineStats sink (set by owner)
+        self._pool = (ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="flashstore-drain")
+            if self.enabled else None)
+        self._future = None
+        self._closed = False
+
+    def _charge(self, field: str, t0: float) -> None:
+        if self.ledger is not None:
+            us = int((time.perf_counter() - t0) * 1e6)
+            setattr(self.ledger, field, getattr(self.ledger, field) + us)
+
+    @property
+    def pending(self) -> bool:
+        """A submitted job has not been waited out yet (it may still be
+        running, or be finished holding an un-raised exception)."""
+        return self._future is not None
+
+    def submit(self, fn) -> None:
+        """Run one sealed-buffer drain under the state lock: on the
+        worker when async, inline when not. Any previous in-flight drain
+        is waited out first (there are exactly two buffers)."""
+        if self._closed:
+            raise ValueError("dispatcher is closed")
+        self.wait()
+        if not self.enabled:
+            t0 = time.perf_counter()
+            with self.lock:
+                fn()
+            self._charge("stall_us", t0)
+            return
+
+        def run():
+            t0 = time.perf_counter()
+            with self.lock:
+                fn()
+            self._charge("overlap_us", t0)
+
+        self._future = self._pool.submit(run)
+
+    def wait(self) -> None:
+        """Durability barrier: block until the in-flight drain (if any)
+        lands, re-raising its exception in the caller."""
+        f, self._future = self._future, None
+        if f is None:
+            return
+        t0 = time.perf_counter()
+        try:
+            f.result()
+        finally:
+            self._charge("stall_us", t0)
+
+    def close(self) -> None:
+        """Join the worker (completing any in-flight drain). Idempotent;
+        re-raises a pending drain exception exactly once."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self.wait()
+        finally:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
 # sim backend: the event-level SSD simulation
 # ---------------------------------------------------------------------------
 class SimBackend:
-    """`table_sim` behind the store protocol. The sim's own RAM buffer
-    plays H_R; `update_batch` is the engine-chunk-compatible ±Δ twin and
-    `query_batch` already consolidates data/change/overflow + buffer."""
+    """`table_sim` behind the store protocol, with the store-level
+    double-buffered H_R in front (DESIGN.md §9): updates fold into an
+    active host dict; sealed chunks replay into the simulator —
+    ``update_batch`` is the engine-chunk-compatible ±Δ twin — on the
+    drain worker, so the async lifecycle is identical across backends.
+    The sim's own RAM buffer keeps playing the *costed* H_R inside the
+    cost model; `query_batch` already consolidates
+    data/change/overflow + buffer, and the front buffers overlay on
+    top."""
 
     name = "sim"
 
     def __init__(self, geom=None, scheme: str = "MDB-L",
                  ram_buffer_pct: float = 5.0,
-                 change_segment_pct: float = 12.5, **table_kw):
+                 change_segment_pct: float = 12.5,
+                 flush_threshold: Optional[int] = None,
+                 async_flush: bool = True, **table_kw):
         from .flash_model import TableGeometry
         from .table_sim import make_table
+        from .write_engine import WriteEngineStats
         self.geom = geom if geom is not None else TableGeometry(
             num_blocks=16, pages_per_block=64, entries_per_page=64)
         self.scheme = scheme
         self.table = make_table(scheme, self.geom, ram_buffer_pct,
                                 change_segment_pct, **table_kw)
+        # the front H_R seals at the costed RAM buffer's own capacity by
+        # default, so threshold behaviour tracks the paper's H_R size
+        self.flush_threshold = int(self.table.ram.capacity
+                                   if flush_threshold is None
+                                   else flush_threshold)
+        self._disp = FlushDispatcher(enabled=async_flush)
+        self._buf: Dict[int, int] = {}
+        self._inflight: Optional[Dict[int, int]] = None
+        self._dirty = False          # sim holds undrained/unmerged entries
+        self.stats_ledger = WriteEngineStats()
+        self._disp.ledger = self.stats_ledger
 
+    # -- the buffered write path -------------------------------------------
     def update(self, tokens, deltas=None) -> None:
-        self.table.update_batch(tokens, deltas)
+        from .write_engine import dedup_batch, fold_entry
+        led = self.stats_ledger
+        led.updates += 1
+        uniq, sums, n_valid = dedup_batch(tokens, deltas, EMPTY)
+        if n_valid == 0:
+            return
+        led.entries += n_valid
+        n_new = 0
+        for k, s in zip(uniq.tolist(), sums.tolist()):
+            opened = fold_entry(self._buf, k, s)
+            if opened > 0:
+                n_new += 1
+            elif opened < 0:
+                led.cancelled += 1
+        led.buffered += n_new
+        led.deduped += n_valid - n_new
+        if len(self._buf) >= self.flush_threshold:
+            led.auto_flushes += 1
+            self.drain(wait=False)
+
+    def _settle(self) -> None:
+        if self._inflight is not None or self._disp.pending:
+            self._disp.wait()
+        if self._inflight is not None:
+            # still sealed after the barrier: its replay died (the worker
+            # clears it on success; the barrier re-raised the error once)
+            raise RuntimeError(
+                "store is poisoned: a drain failed and its sealed H_R "
+                "chunk was never delivered — reopen from the last "
+                "durable state")
+
+    def _seal(self) -> Optional[tuple]:
+        if not self._buf:
+            return None
+        if self._inflight is not None:
+            # never clobber a sealed chunk (a failed drain leaves its
+            # entries here — they are still the read overlay)
+            raise RuntimeError("sealed H_R over an in-flight chunk; wait "
+                               "out the previous drain first")
+        keys = np.fromiter(self._buf.keys(), np.int64, len(self._buf))
+        dels = np.fromiter(self._buf.values(), np.int64, len(self._buf))
+        order = np.argsort(keys, kind="stable")
+        self._inflight = self._buf
+        self._buf = {}
+        return keys[order], dels[order]
+
+    def _replay(self, keys, dels, merge: bool) -> None:
+        # worker side, under the dispatcher lock
+        led = self.stats_ledger
+        if keys is not None:
+            self.table.update_batch(keys, dels)
+            led.dispatches += 1
+            led.dispatched_entries += keys.size
+            self._dirty = True
+            self._inflight = None
+            led.flushes += 1
+        if merge:
+            self.table.finalize()
+            led.merges += 1
+            self._dirty = False
+        elif keys is not None:
+            self.table.flush()       # stage, no forced merge
+
+    def drain(self, wait: bool = True) -> None:
+        self._settle()
+        sealed = self._seal()
+        if sealed is not None:
+            k, d = sealed
+            self._disp.submit(lambda: self._replay(k, d, merge=False))
+        if wait:
+            self._disp.wait()
+
+    def flush(self, wait: bool = True) -> None:       # durability point
+        self._settle()
+        sealed = self._seal()
+        if sealed is None and not self._dirty:
+            if wait:
+                self._disp.wait()
+            return                    # complete no-op
+        k, d = sealed if sealed is not None else (None, None)
+        self._disp.submit(lambda: self._replay(k, d, merge=True))
+        if wait:
+            self._disp.wait()
+
+    # -- read-your-writes ---------------------------------------------------
+    def pending(self, keys) -> np.ndarray:
+        flat = _flat_i64(keys)
+        buf, inf = self._buf, self._inflight
+        if not buf and not inf:
+            return np.zeros(flat.size, np.int64)
+        return np.fromiter(
+            (buf.get(int(k), 0) + (inf.get(int(k), 0) if inf else 0)
+             for k in flat), np.int64, flat.size)
 
     def query_batch(self, keys) -> np.ndarray:
-        return np.asarray(self.table.query_batch(keys), np.int64)
-
-    def drain(self) -> None:          # stage H_R without a forced merge
-        self.table.flush()
-
-    def flush(self) -> None:          # durability point
-        self.table.finalize()
+        with self._disp.lock:
+            base = np.asarray(self.table.query_batch(keys), np.int64)
+            pend = self.pending(keys)
+        return base + pend
 
     def pending_entries(self) -> int:
-        return len(self.table.ram.items)
+        inf = self._inflight
+        return (len(self._buf) + (len(inf) if inf else 0)
+                + len(self.table.ram.items))
 
     def partition_heat(self, keys) -> np.ndarray:
         return np.zeros(_flat_i64(keys).size)     # no device wear feed
@@ -89,12 +309,14 @@ class SimBackend:
     def wear(self) -> Dict[str, int]:
         """The sim's wear counters: ``cleans`` *is* the paper's erase
         count (the device backends' ``tile_stores`` analogue)."""
+        self._disp.wait()
         led = self.table.ledger
         return {"cleans": led.cleans, "block_ops": led.block_ops,
                 "page_ops": led.page_ops, "merges": led.merges,
                 "stages": led.stages}
 
     def stats(self) -> Dict[str, int]:
+        self._disp.wait()             # quiesce: one consistent ledger
         led = self.table.ledger
         q = self.table.qstats
         out = {"backend": self.name, "scheme": self.scheme,
@@ -103,10 +325,12 @@ class SimBackend:
                "stages": led.stages, "queries": q.queries,
                "found": q.found,
                "buffered_entries": self.pending_entries()}
+        out.update({f"write_{k}": v
+                    for k, v in self.stats_ledger.as_dict().items()})
         return out
 
     def close(self) -> None:
-        pass
+        self._disp.close()
 
 
 # ---------------------------------------------------------------------------
@@ -127,7 +351,8 @@ class DeviceBackend:
                  query_chunk: int = 1024,
                  flush_threshold: Optional[int] = None,
                  hot_capacity: int = 4096, track_wear: bool = False,
-                 record: Optional[list] = None, **table_kw):
+                 record: Optional[list] = None, async_flush: bool = True,
+                 **table_kw):
         from . import table_jax as tj
         from .query_engine import BatchedQueryEngine
         from .write_engine import BatchedWriteEngine
@@ -136,10 +361,12 @@ class DeviceBackend:
         self.query_engine = BatchedQueryEngine(
             self.cfg, chunk=query_chunk, hot_capacity=hot_capacity)
         self._track_wear = bool(track_wear)
+        self._disp = FlushDispatcher(enabled=async_flush)
         self.writer = BatchedWriteEngine(
             self.cfg, state=state, chunk=chunk,
             flush_threshold=flush_threshold, query_engine=self.query_engine,
-            record=record, on_flush=self._on_drain if track_wear else None)
+            record=record, on_flush=self._on_drain if track_wear else None,
+            dispatcher=self._disp)
         # wear attribution: partition -> accumulated Δtile_stores share,
         # plus the staged-since-last-merge histogram merges are charged to
         self._heat: Dict[int, float] = {}
@@ -174,27 +401,31 @@ class DeviceBackend:
 
     def partition_heat(self, keys) -> np.ndarray:
         """Write pressure of each key's partition: entries currently
-        pending for it (H_R + staged-unmerged — it *will* be rewritten at
-        the next merge no matter what) plus the decayed per-merge
-        ``TableStats`` wear history. Hot partitions are being rewritten
-        anyway — re-dirtying them is nearly free; dirtying a cold one
-        costs a fresh block rewrite."""
+        pending for it (H_R — both buffers — + staged-unmerged; it *will*
+        be rewritten at the next merge no matter what) plus the decayed
+        per-merge ``TableStats`` wear history. Hot partitions are being
+        rewritten anyway — re-dirtying them is nearly free; dirtying a
+        cold one costs a fresh block rewrite. Takes the dispatcher lock:
+        ``_on_drain`` mutates the heat ledgers on the drain worker."""
         flat = _flat_i64(keys)
         if flat.size == 0:
             return np.zeros(0)
-        pending = dict(self._staged_parts)
-        if self.writer.buffered_entries:
-            bk = np.fromiter(self.writer._buf.keys(), np.int64,
-                             self.writer.buffered_entries)
-            parts, counts = np.unique(self._partition_of(bk),
-                                      return_counts=True)
-            for p, c in zip(parts.tolist(), counts.tolist()):
-                pending[p] = pending.get(p, 0) + c
-        if not pending and not self._heat:
+        with self._disp.lock:
+            pending = dict(self._staged_parts)
+            heat = dict(self._heat)
+            for b in (self.writer._buf, self.writer._inflight):
+                if not b:
+                    continue
+                bk = np.fromiter(b.keys(), np.int64, len(b))
+                parts, counts = np.unique(self._partition_of(bk),
+                                          return_counts=True)
+                for p, c in zip(parts.tolist(), counts.tolist()):
+                    pending[p] = pending.get(p, 0) + c
+        if not pending and not heat:
             return np.zeros(flat.size)
         parts = self._partition_of(flat)
         return np.asarray([pending.get(int(p), 0)
-                           + self._heat.get(int(p), 0.0) for p in parts])
+                           + heat.get(int(p), 0.0) for p in parts])
 
     # -- protocol -----------------------------------------------------------
     @property
@@ -207,22 +438,23 @@ class DeviceBackend:
     def query_batch(self, keys) -> np.ndarray:
         return self.writer.query_batch(keys)
 
-    def drain(self) -> None:
-        self.writer.flush()
+    def drain(self, wait: bool = True) -> None:
+        self.writer.flush(wait=wait)
 
-    def flush(self) -> None:
-        self.writer.merge()
+    def flush(self, wait: bool = True) -> None:
+        self.writer.merge(wait=wait)
 
     def pending_entries(self) -> int:
         return self.writer.buffered_entries
 
     def wear(self) -> Dict[str, int]:
+        self._disp.wait()             # quiesce: device counters settled
         s = self.state.stats
         return {f: int(getattr(s, f)) for f in s._fields}
 
     def stats(self) -> Dict[str, int]:
         out = {"backend": self.name, "scheme": self.scheme}
-        out.update(self.wear())
+        out.update(self.wear())       # barriers the in-flight drain
         out.update({f"write_{k}": v
                     for k, v in self.writer.stats.as_dict().items()})
         out.update({f"query_{k}": v
@@ -231,7 +463,7 @@ class DeviceBackend:
         return out
 
     def close(self) -> None:
-        pass
+        self._disp.close()
 
 
 # ---------------------------------------------------------------------------
@@ -271,7 +503,8 @@ class ShardedBackend:
                  shard_chunk: Optional[int] = None,
                  flush_threshold: Optional[int] = None,
                  query_chunk: int = 1024, hot_capacity: int = 4096,
-                 piggyback_frac: float = 0.5, **table_kw):
+                 piggyback_frac: float = 0.5, async_flush: bool = True,
+                 **table_kw):
         import jax
         from jax.sharding import NamedSharding
 
@@ -318,7 +551,13 @@ class ShardedBackend:
         self.state = jax.device_put(D.init_global(cfg), spec)
         self._shard_bits = cfg.local.q_log2 - cfg.local.r_log2
         self._buf: List[Dict[int, int]] = [dict() for _ in range(n)]
+        # sealed-but-draining H_R partitions: the worker clears a shard's
+        # slot (under the dispatcher lock) once its entries are on device
+        self._inflight: List[Optional[Dict[int, int]]] = [None] * n
+        self._staged_dirty = False    # staged entries since last merge
+        self._disp = FlushDispatcher(enabled=async_flush)
         self.stats_ledger = WriteEngineStats()
+        self._disp.ledger = self.stats_ledger
         self.piggybacked = 0
         self.carried = 0
 
@@ -355,30 +594,47 @@ class ShardedBackend:
                     if i not in hot
                     and len(b) >= self.piggyback_frac * self.flush_threshold]
             self.piggybacked += len(ride)
-            self.drain(shards=hot + ride)
+            self.drain(shards=hot + ride, wait=False)
 
-    def drain(self, shards: Optional[List[int]] = None) -> None:
-        """Drain the selected shards' H_R partitions to their owners'
-        change segments (no forced merge). One fixed-shape collective per
-        ``shard_chunk``-entry wave; every drained entry rides in its
-        owner's slice, so the a2a is shard-local by construction."""
-        jnp = self._jnp
+    def _seal(self, shards: Optional[List[int]]) -> Optional[Dict]:
+        """Seal the selected shards' H_R partitions: each sealed dict
+        becomes that shard's in-flight overlay and a fresh dict takes its
+        place. Returns {shard: (sorted keys, deltas)} or None."""
         n = self.cfg.num_shards
-        step = self.shard_chunk
         sel = [s for s in (range(n) if shards is None else shards)
                if self._buf[s]]
         if not sel:
-            return
-        led = self.stats_ledger
+            return None
         per_shard = {}
-        waves = 0
         for s in sel:
-            ks = np.fromiter(self._buf[s].keys(), np.int64, len(self._buf[s]))
-            vs = np.fromiter(self._buf[s].values(), np.int64,
-                             len(self._buf[s]))
+            b = self._buf[s]
+            ks = np.fromiter(b.keys(), np.int64, len(b))
+            vs = np.fromiter(b.values(), np.int64, len(b))
             order = np.argsort(ks, kind="stable")   # deterministic dispatch
             per_shard[s] = (ks[order], vs[order])
-            waves = max(waves, -(-ks.size // step))
+            if self._inflight[s] is not None:
+                # never clobber a sealed partition (a failed drain leaves
+                # its entries here — they are still the read overlay)
+                raise RuntimeError(
+                    f"sealed shard {s}'s H_R over an in-flight partition; "
+                    f"wait out the previous drain first")
+            self._inflight[s] = b
+            self._buf[s] = dict()
+        return per_shard
+
+    def _drain_sealed(self, per_shard: Dict) -> None:
+        """Dispatch sealed shard partitions to their owners' change
+        segments (no forced merge) — worker side, under the dispatcher
+        lock. One fixed-shape collective per ``shard_chunk``-entry wave;
+        every drained entry rides in its owner's slice, so the a2a is
+        shard-local by construction."""
+        from .distributed import assert_live
+        jnp = self._jnp
+        n = self.cfg.num_shards
+        step = self.shard_chunk
+        led = self.stats_ledger
+        assert_live(self.state)       # off-thread donation guard (§9)
+        waves = max(-(-ks.size // step) for ks, _ in per_shard.values())
         for w in range(waves):
             toks = np.full(n * step, EMPTY, np.int64)
             dels = np.zeros(n * step, np.int64)
@@ -394,53 +650,116 @@ class ShardedBackend:
             # owner-aligned placement keeps every (src,dst) bucket within
             # bucket_cap, so the collective can never carry entries over
             self.carried += int(np.asarray(n_carry).sum())
-        for s in sel:
-            led.dispatched_entries += per_shard[s][0].size
-            self._buf[s].clear()
+        import jax
+        jax.block_until_ready(self.state)   # durable, not merely queued (§9)
+        self._staged_dirty = True
+        for s, (ks, _vs) in per_shard.items():
+            led.dispatched_entries += ks.size
+            self._inflight[s] = None
         led.flushes += 1
         self.query_engine.invalidate()
         led.invalidations += 1
 
-    def flush(self) -> None:
-        """Durability point: drain every H_R partition, then force the
-        device merge of all staged change segments."""
-        self.drain()
+    def _merge_device(self) -> None:
+        """Force the device merge of all staged change segments — worker
+        side, under the dispatcher lock."""
+        import jax
+
+        from .distributed import assert_live
+        assert_live(self.state)
         self.state = self._mrg(self.state)
+        jax.block_until_ready(self.state)
         self.stats_ledger.merges += 1
+        self._staged_dirty = False
         self.query_engine.invalidate()
         self.stats_ledger.invalidations += 1
 
+    def _stall_if_inflight(self) -> None:
+        """Wait out in-flight work before sealing or a no-op decision:
+        undrained sealed partitions (both buffers busy) or a running job
+        whose merge phase has yet to settle ``_staged_dirty``."""
+        if any(b is not None for b in self._inflight) or self._disp.pending:
+            self._disp.wait()
+        if any(b is not None for b in self._inflight):
+            # still sealed after the barrier: the drain died (the worker
+            # clears every drained slot; the barrier re-raised the error)
+            raise RuntimeError(
+                "store is poisoned: a drain failed and sealed H_R "
+                "partitions were never delivered — reopen from the last "
+                "durable state")
+
+    def drain(self, shards: Optional[List[int]] = None,
+              wait: bool = True) -> None:
+        """Seal the selected shards' H_R partitions and drain them on
+        the worker (no forced merge)."""
+        self._stall_if_inflight()
+        per_shard = self._seal(shards)
+        if per_shard is not None:
+            self._disp.submit(lambda: self._drain_sealed(per_shard))
+        if wait:
+            self._disp.wait()
+
+    def flush(self, wait: bool = True) -> None:
+        """Durability point: drain every H_R partition, then force the
+        device merge of all staged change segments. A complete no-op —
+        nothing buffered, in flight or staged — touches neither the
+        device nor the hot cache."""
+        self._stall_if_inflight()
+        per_shard = self._seal(None)
+        if per_shard is None and not self._staged_dirty:
+            if wait:
+                self._disp.wait()
+            return
+
+        def job():
+            if per_shard is not None:
+                self._drain_sealed(per_shard)
+            self._merge_device()
+
+        self._disp.submit(job)
+        if wait:
+            self._disp.wait()
+
     # -- read-your-writes ---------------------------------------------------
     def pending_entries(self) -> int:
-        return sum(len(b) for b in self._buf)
+        return (sum(len(b) for b in self._buf)
+                + sum(len(b) for b in self._inflight if b))
 
     def pending(self, keys) -> np.ndarray:
+        """Not-yet-durable Δ per key: active + in-flight partition of the
+        key's owner shard. Call under the dispatcher lock (the worker
+        clears in-flight slots under it, atomically with the state
+        rebind)."""
         flat = _flat_i64(keys)
-        if not any(self._buf):
+        if not any(self._buf) and not any(self._inflight):
             return np.zeros(flat.size, np.int64)
         owners = self.owner_of(flat)
+        inf = self._inflight
         return np.fromiter(
-            (self._buf[o].get(int(k), 0) for k, o in zip(flat, owners)),
+            (self._buf[o].get(int(k), 0)
+             + (inf[o].get(int(k), 0) if inf[o] else 0)
+             for k, o in zip(flat, owners)),
             np.int64, flat.size)
 
     def query_batch(self, keys) -> np.ndarray:
-        base = self.query_engine.query_batch(self.state, keys)
-        if any(self._buf):
-            base = base + self.pending(keys)
-        return base
+        with self._disp.lock:
+            base = self.query_engine.query_batch(self.state, keys)
+            pend = self.pending(keys)
+        return base + pend
 
     def partition_heat(self, keys) -> np.ndarray:
         return np.zeros(_flat_i64(keys).size)     # not tracked per shard yet
 
     def wear(self) -> Dict[str, int]:
         """Device wear counters summed across shards."""
+        self._disp.wait()             # quiesce: device counters settled
         s = self.state.stats
         return {f: int(np.asarray(getattr(s, f)).sum()) for f in s._fields}
 
     def stats(self) -> Dict[str, int]:
         out = {"backend": self.name, "scheme": self.scheme,
                "shards": self.cfg.num_shards}
-        out.update(self.wear())
+        out.update(self.wear())       # barriers the in-flight drain
         out.update({f"write_{k}": v
                     for k, v in self.stats_ledger.as_dict().items()})
         out.update({f"query_{k}": v
@@ -453,7 +772,7 @@ class ShardedBackend:
         return out
 
     def close(self) -> None:
-        pass
+        self._disp.close()
 
 
 _BACKENDS = {"sim": SimBackend, "device": DeviceBackend,
@@ -482,7 +801,9 @@ class FlashStore:
         the local ``FlashTableConfig``) for ``sharded`` — or ``None`` to
         build one from ``**kw`` (``scheme=``, ``q_log2=``, ...). Engine
         knobs (``chunk``, ``flush_threshold``, ``query_chunk``,
-        ``hot_capacity``, ...) pass through as keywords.
+        ``hot_capacity``, ``async_flush``, ...) pass through as keywords;
+        ``async_flush=False`` opts out of the background drain worker
+        (DESIGN.md §9) for a synchronous store.
         """
         try:
             impl = _BACKENDS[backend]
@@ -501,12 +822,20 @@ class FlashStore:
             raise ValueError("store is closed")
 
     def close(self) -> None:
-        """Flush (durability point) and release the store. Idempotent."""
+        """Flush (durability point) and release the store: any in-flight
+        drain completes, the buffers empty, the drain worker joins.
+        Idempotent — a second close (or ``__exit__`` after an explicit
+        close) does nothing. If the final flush fails (e.g. the store
+        was poisoned by an earlier drain failure), the error propagates
+        but the worker is still joined and the store still ends closed —
+        no thread leak, no close() loop."""
         if self._closed:
             return
-        self._b.flush()
-        self._b.close()
-        self._closed = True
+        try:
+            self._b.flush(wait=True)
+        finally:
+            self._b.close()
+            self._closed = True
 
     def __enter__(self) -> "FlashStore":
         self._check_open()
@@ -531,11 +860,27 @@ class FlashStore:
         self.update(np.asarray([key], np.int64),
                     np.asarray([delta], np.int64))
 
-    def flush(self) -> None:
+    def flush(self, wait: bool = True) -> None:
         """Durability point: drain H_R and force the device merge of any
-        staged change segment (end-of-stream / checkpoint)."""
+        staged change segment (end-of-stream / checkpoint).
+
+        ``wait=True`` (default) is the durability **barrier**: when it
+        returns, every buffered entry is on device and any drain error
+        has been re-raised here. ``wait=False`` schedules the drain+merge
+        on the background worker and returns immediately — ingest can
+        continue; a later ``flush()``/``stats()``/``close()`` barriers.
+        A flush with nothing buffered, in flight or staged is a complete
+        no-op (in particular, it does not invalidate the hot-key cache)."""
         self._check_open()
-        self._b.flush()
+        self._b.flush(wait=wait)
+
+    def drain(self, wait: bool = True) -> None:
+        """Stage H_R to the device change segment without forcing the
+        merge (the cheap half of :meth:`flush`): sealed entries reach
+        flash as sequential change-segment writes, data blocks are not
+        rewritten. Same ``wait`` semantics as :meth:`flush`."""
+        self._check_open()
+        self._b.drain(wait=wait)
 
     # -- reads --------------------------------------------------------------
     def query(self, keys):
@@ -577,8 +922,10 @@ class FlashStore:
 
     def stats(self) -> Dict[str, int]:
         """One flat ledger: device wear (``tile_stores`` = paper cleans)
-        or sim I/O counters, plus ``write_*`` (H_R) and ``query_*``
-        (batched read path) counters."""
+        or sim I/O counters, plus ``write_*`` (H_R, including the async
+        ``write_overlap_us``/``write_stall_us`` flush ledgers) and
+        ``query_*`` (batched read path) counters. Barriers any in-flight
+        drain first, so the ledger is a consistent snapshot."""
         return self._b.stats()
 
     def wear(self) -> Dict[str, int]:
@@ -594,5 +941,5 @@ class FlashStore:
         return self._b.partition_heat(keys)
 
 
-__all__ = ["FlashStore", "SimBackend", "DeviceBackend", "ShardedBackend",
-           "EMPTY"]
+__all__ = ["FlashStore", "FlushDispatcher", "SimBackend", "DeviceBackend",
+           "ShardedBackend", "EMPTY"]

@@ -29,6 +29,13 @@ program. The ``update``/``flush`` entry points **donate** the incoming
 state (DESIGN.md §7): the old state's buffers are reused in place rather
 than copied — callers must rebind (``state = update(cfg, state, ...)``)
 and never touch the donated value again.
+
+Since the store's flush went asynchronous (DESIGN.md §9) donation happens
+*off-thread*: the background drain worker is the only code allowed to
+call the donated entry points while a drain is in flight, and it guards
+every dispatch with :func:`segments.assert_live` (re-exported here as
+``assert_live``) so a raced or reused state fails loudly instead of as
+an opaque XLA deleted-buffer error.
 """
 from __future__ import annotations
 
@@ -50,6 +57,7 @@ EMPTY = seg.EMPTY
 TableStats = seg.TableStats
 DeviceTableState = seg.DeviceTableState
 accumulate_deltas = seg.accumulate_deltas
+assert_live = seg.assert_live             # off-thread donation guard (§9)
 _scan_segment = seg.scan_segment          # back-compat alias (tests)
 
 _SCHEMES = ("MB", "MDB", "MDB-L")

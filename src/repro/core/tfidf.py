@@ -19,105 +19,12 @@ batched read path. ``backend=`` selects:
 """
 from __future__ import annotations
 
-import warnings
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 
 from .flash_model import TableGeometry
 from .store import FlashStore
-
-
-class DeviceTableAdapter:
-    """Deprecated pre-PR4 facade over the device table.
-
-    Kept one PR as a shim: it now *is* a thin wrapper over
-    ``FlashStore.open(backend="device")`` — the engine pair lives in
-    :mod:`.store`, never here. New code should open a
-    :class:`~repro.core.store.FlashStore` directly.
-    """
-
-    def __init__(self, cfg, chunk: int = 4096, query_chunk: int = 1024,
-                 flush_threshold: Optional[int] = None):
-        warnings.warn(
-            "DeviceTableAdapter is deprecated: use FlashStore.open(cfg, "
-            "backend='device') — the store owns the engine pair and the "
-            "flush/invalidate contract (DESIGN.md §8)",
-            DeprecationWarning, stacklevel=2)
-        self.store = FlashStore.open(cfg, backend="device", chunk=chunk,
-                                     query_chunk=query_chunk,
-                                     flush_threshold=flush_threshold)
-        self.cfg = cfg
-        self.scheme = cfg.scheme
-
-    # the engine pair, reachable for one more PR (tests / diagnostics)
-    @property
-    def engine(self):
-        return self.store._b.query_engine
-
-    @property
-    def writer(self):
-        return self.store._b.writer
-
-    @property
-    def state(self):
-        """Current device table state (owned by the write engine)."""
-        return self.store.state
-
-    @property
-    def chunk(self) -> int:
-        return self.writer.chunk
-
-    @chunk.setter
-    def chunk(self, value: int) -> None:
-        self.writer.chunk = int(value)
-
-    def insert_batch(self, keys: np.ndarray,
-                     deltas: Optional[np.ndarray] = None,
-                     chunk: Optional[int] = None) -> None:
-        # ``chunk`` (sim-API compatibility) keeps its pre-engine,
-        # call-scoped meaning: this call dispatches at that width, now
-        # (write-through, draining anything already buffered with it).
-        # Without it, writes buffer in H_R at the engine's own width.
-        if chunk is None:
-            self.store.update(keys, deltas)
-            return
-        prev = self.writer.chunk
-        self.writer.chunk = int(chunk)
-        try:
-            self.store.update(keys, deltas)
-            self.writer.flush()
-        finally:
-            self.writer.chunk = prev
-
-    def query(self, key: int) -> int:
-        return self.store.query(int(key))
-
-    def query_batch(self, keys) -> np.ndarray:
-        return self.store.query_batch(keys)
-
-    # the device table has no separate uncosted path; counts are exact
-    logical_count = query
-
-    def finalize(self) -> None:
-        self.store.flush()
-
-    def wear(self) -> Dict[str, int]:
-        return self.store.wear()
-
-    def write_stats(self) -> Dict[str, int]:
-        """H_R-side write-path counters (dedup ratio, flushes, dispatches)."""
-        return self.writer.stats.as_dict()
-
-
-def make_device_table(scheme: str, q_log2: int = 14, r_log2: int = 9,
-                      **kw) -> DeviceTableAdapter:
-    """Deprecated device-backed twin of :func:`table_sim.make_table`;
-    use ``FlashStore.open(backend="device", scheme=..., ...)``."""
-    from . import table_jax as tj
-    cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2, scheme=scheme,
-                              **kw)
-    return DeviceTableAdapter(cfg)
 
 
 def tokenize(text: str) -> List[str]:

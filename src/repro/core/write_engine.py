@@ -28,9 +28,22 @@ serving prefix cache's refcount bumps) goes through instead of calling
   routed through :meth:`query_batch` additionally overlay the buffered
   (unflushed) Δs, so writers get read-your-writes semantics without
   forcing a premature device dispatch;
+* **double-buffered async flush** (DESIGN.md §9) — with a store-owned
+  dispatcher attached, :meth:`flush` *seals* H_R (the active dict swaps
+  for a fresh one) and hands the sealed chunk to a background worker:
+  ingest keeps filling the new active buffer while the worker drains the
+  sealed one through the donated update programs. Reads overlay *both*
+  buffers (active + sealed in-flight) on the device counts, so
+  read-your-writes survives the flight; sealing again while a drain is
+  in flight stalls until it lands (there are exactly two buffers).
+  Without a dispatcher the engine drains inline, synchronously — the
+  pre-PR5 discipline;
 * **ledger** — :class:`WriteEngineStats` counts buffered / deduped /
   dispatched entries and flush events alongside the device-side
-  ``TableStats`` wear counters.
+  ``TableStats`` wear counters, plus the async ledgers: ``overlap_us``
+  (drain time hidden behind continued ingest) and ``stall_us`` (time
+  ingest blocked waiting for a drain — the whole drain, when
+  synchronous).
 
 Unlike the (state-free) query engine, this engine *owns* the device
 state: buffering means an ``update`` may not touch the device at all,
@@ -39,6 +52,7 @@ consumer reaches it through the engine.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
@@ -63,6 +77,10 @@ class WriteEngineStats:
     auto_flushes: int = 0        # threshold-triggered drains
     merges: int = 0              # device-merge (table flush) requests
     invalidations: int = 0       # query-engine invalidations driven
+    overlap_us: int = 0          # drain time hidden behind ingest (async)
+    stall_us: int = 0            # ingest time blocked on a drain: the
+                                 # whole drain when synchronous, only the
+                                 # double-buffer waits when async
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -112,16 +130,19 @@ def fold_entry(buf: Dict[int, int], k: int, s: int) -> int:
 
 class BatchedWriteEngine:
     """H_R dedup + threshold flush + donated fixed-shape dispatch over
-    ``table_jax.update``."""
+    ``table_jax.update``; double-buffered async drains with a dispatcher
+    attached (DESIGN.md §9)."""
 
     def __init__(self, cfg, state=None, chunk: int = 4096,
                  flush_threshold: Optional[int] = None,
                  query_engine=None,
                  record: Optional[List[Tuple[np.ndarray, np.ndarray]]] = None,
-                 on_flush=None):
-        import jax.numpy as jnp  # deferred: sim-only users stay jax-free
+                 on_flush=None, dispatcher=None):
+        import jax  # deferred: sim-only users stay jax-free
+        import jax.numpy as jnp
 
         from . import table_jax as tj
+        self._jax = jax
         self._jnp = jnp
         self._tj = tj
         self.cfg = cfg
@@ -140,8 +161,60 @@ class BatchedWriteEngine:
         # staged since the last merge. Enabling it syncs the device stats
         # once per drain (flushes are rare; updates stay async).
         self.on_flush = on_flush
-        self._buf: Dict[int, int] = {}
+        # drain executor (store.FlushDispatcher or None). With one, every
+        # drain runs on its worker under its lock; reads take the same
+        # lock so (device state, in-flight overlay) is always a
+        # consistent snapshot. Without one, drains run inline — the
+        # single-threaded pre-PR5 engine needs no locking at all.
+        self.dispatcher = dispatcher
+        self._buf: Dict[int, int] = {}       # active H_R (caller-owned)
+        self._inflight: Optional[Dict[int, int]] = None  # sealed, draining
+        # device entries staged since the last merge. An adopted state may
+        # arrive with a non-empty change segment, so it counts as dirty —
+        # the first merge() must really run (the pre-PR5 unconditional
+        # behaviour), not take the no-op path.
+        self._staged_dirty = state is not None
         self.stats = WriteEngineStats()
+        if dispatcher is not None:
+            dispatcher.ledger = self.stats
+
+    def _lock(self):
+        return (self.dispatcher.lock if self.dispatcher is not None
+                else contextlib.nullcontext())
+
+    def _submit(self, fn) -> None:
+        if self.dispatcher is None:
+            fn()
+        else:
+            self.dispatcher.submit(fn)
+
+    def _barrier(self) -> None:
+        if self.dispatcher is not None:
+            self.dispatcher.wait()
+
+    def _settle(self) -> None:
+        """Wait out any in-flight work before sealing or taking a no-op
+        decision: an undrained sealed buffer (both buffers busy — the
+        double-buffer stall) or a still-running job whose merge phase has
+        yet to clear ``_staged_dirty`` (deciding on a stale flag would
+        schedule a redundant merge + cache invalidation).
+
+        A sealed chunk still present *after* the barrier means its drain
+        died (the worker clears it on success, and the barrier re-raised
+        the worker's exception exactly once already): the chunk's entries
+        are undelivered and the donated state is suspect, so the store is
+        poisoned — fail every subsequent write path loudly rather than
+        silently dropping the chunk (reads keep overlaying it).
+        ``close()`` still releases the worker (`FlashStore.close` shuts
+        the dispatcher down in a ``finally``)."""
+        if self._inflight is not None or (
+                self.dispatcher is not None and self.dispatcher.pending):
+            self._barrier()
+        if self._inflight is not None:
+            raise RuntimeError(
+                "store is poisoned: a drain failed and its sealed H_R "
+                "chunk was never delivered — reopen from the last durable "
+                "state")
 
     def _tile_stores(self) -> int:
         return int(np.asarray(self.state.stats.tile_stores))
@@ -167,19 +240,40 @@ class BatchedWriteEngine:
         self.stats.deduped += n_valid - n_new
         if len(buf) >= self.flush_threshold:
             self.stats.auto_flushes += 1
-            self.flush()
+            self.flush(wait=False)
 
-    def flush(self):
-        """Drain H_R to the device change segment (stage, no forced
-        merge): sorted entries, EMPTY-padded fixed-shape chunks, donated
-        dispatches; then invalidate the paired query engine."""
+    def seal(self) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Swap H_R: the active buffer becomes the sealed in-flight chunk
+        (read-only from here; reads keep overlaying it until its drain
+        lands) and a fresh active buffer takes its place. Returns the
+        sealed ``(keys, deltas)`` in sorted, deterministic dispatch
+        order, or ``None`` when H_R is empty.
+
+        Callers must wait out any previous in-flight drain first — there
+        are exactly two buffers (:meth:`flush` does this)."""
         if not self._buf:
-            return self.state
-        jnp, tj = self._jnp, self._tj
+            return None
+        if self._inflight is not None:
+            # never clobber a sealed chunk (it may hold entries a failed
+            # drain left undelivered — they are still the read overlay)
+            raise RuntimeError("sealed H_R over an in-flight chunk; wait "
+                               "out the previous drain first")
         keys = np.fromiter(self._buf.keys(), np.int64, len(self._buf))
         dels = np.fromiter(self._buf.values(), np.int64, len(self._buf))
         order = np.argsort(keys, kind="stable")   # deterministic dispatch
-        keys, dels = keys[order], dels[order]
+        self._inflight = self._buf
+        self._buf = {}
+        return keys[order], dels[order]
+
+    def _dispatch(self, keys: np.ndarray, dels: np.ndarray) -> None:
+        """Drain one sealed chunk to the device change segment (stage, no
+        forced merge): EMPTY-padded fixed-shape chunks, donated
+        dispatches; then clear the in-flight overlay and invalidate the
+        paired query engine — all atomically with respect to readers
+        (runs under the dispatcher lock on the drain worker, or inline
+        when synchronous)."""
+        jnp, tj = self._jnp, self._tj
+        tj.assert_live(self.state)       # off-thread donation guard (§9)
         wear_before = self._tile_stores() if self.on_flush else 0
         step = self.chunk
         for lo in range(0, keys.size, step):
@@ -195,28 +289,75 @@ class BatchedWriteEngine:
                                    jnp.asarray(pk, jnp.int32),
                                    jnp.asarray(pd, jnp.int32))
             self.stats.dispatches += 1
+        if self.dispatcher is not None:
+            # store contract (DESIGN.md §9): a completed drain means the
+            # device really holds the entries — not merely that they sit
+            # in XLA's async dispatch queue. The worker absorbs this
+            # wait; the sync baseline pays it inline (that is the stall
+            # double buffering exists to hide). Engines without a
+            # dispatcher keep the bare pre-PR5 dispatch-and-go.
+            self._jax.block_until_ready(self.state)
         self.stats.dispatched_entries += keys.size
-        self._buf.clear()
+        self._staged_dirty = True
+        self._inflight = None
         self.stats.flushes += 1
         self._invalidate()
         if self.on_flush:
             self.on_flush(keys, self._tile_stores() - wear_before)
-        return self.state
 
-    def merge(self):
-        """Flush H_R, then force the device merge of any staged change
-        segment (end-of-stream / checkpoint)."""
-        invalidated = bool(self._buf)     # flush() invalidates iff it ran
-        self.flush()
+    def _merge_device(self) -> None:
+        """Force the device merge of the staged change segment (runs on
+        the drain worker under the dispatcher lock, or inline)."""
+        tj = self._tj
+        tj.assert_live(self.state)
         wear_before = self._tile_stores() if self.on_flush else 0
-        self.state = self._tj.flush(self.cfg, self.state)
+        self.state = tj.flush(self.cfg, self.state)
+        if self.dispatcher is not None:
+            self._jax.block_until_ready(self.state)   # durable, not queued
         self.stats.merges += 1
+        self._staged_dirty = False
+        # conservative: the merge moves placement, not counts, but clear
+        # the cache anyway — it is one invalidation per rare merge
+        self._invalidate()
         if self.on_flush:
             self.on_flush(None, self._tile_stores() - wear_before)
-        if not invalidated:
-            # conservative: the device merge moves placement, not counts,
-            # but clear the cache anyway — one invalidation per drain
-            self._invalidate()
+
+    def flush(self, wait: bool = True):
+        """Drain H_R to the device change segment (stage, no forced
+        merge). With a dispatcher and ``wait=False`` the sealed buffer
+        drains in the background while the caller keeps ingesting;
+        ``wait=True`` is the durability barrier for the staged entries."""
+        self._settle()
+        sealed = self.seal()
+        if sealed is not None:
+            keys, dels = sealed
+            self._submit(lambda: self._dispatch(keys, dels))
+        if wait:
+            self._barrier()
+        return self.state
+
+    def merge(self, wait: bool = True):
+        """Flush H_R, then force the device merge of any staged change
+        segment (end-of-stream / checkpoint). A complete no-op — nothing
+        buffered, nothing in flight, nothing staged since the last merge
+        — touches neither the device nor the hot cache."""
+        self._settle()
+        sealed = self.seal()
+        if sealed is None and not self._staged_dirty:
+            # no-op path: crucially, no cache invalidation (a flush of an
+            # empty engine must not evict every hot key)
+            if wait:
+                self._barrier()
+            return self.state
+
+        def job():
+            if sealed is not None:
+                self._dispatch(*sealed)
+            self._merge_device()
+
+        self._submit(job)
+        if wait:
+            self._barrier()
         return self.state
 
     # finalize is the adapter-facing spelling of the same operation
@@ -230,31 +371,43 @@ class BatchedWriteEngine:
     # -- read-your-writes ---------------------------------------------------
     @property
     def buffered_entries(self) -> int:
-        """Unique (token, Δ) entries currently held in H_R."""
-        return len(self._buf)
+        """Unique (token, Δ) entries not yet durable on device: the
+        active H_R buffer plus the sealed in-flight chunk (if a drain is
+        running)."""
+        inf = self._inflight
+        return len(self._buf) + (len(inf) if inf else 0)
 
     def pending(self, keys) -> np.ndarray:
-        """Buffered (unflushed) Δ per key — the H_R contribution a
-        consolidated read must add on top of the device count."""
+        """Not-yet-durable Δ per key — the overlay a consolidated read
+        must add on top of the device count: the active H_R buffer plus
+        the sealed in-flight chunk. Call under the dispatcher lock when
+        one is attached (the drain worker clears the in-flight chunk
+        under that lock, atomically with the device state rebind)."""
         flat = np.asarray(keys).reshape(-1)
-        if not self._buf:
+        buf, inf = self._buf, self._inflight
+        if not buf and not inf:
             return np.zeros(flat.size, np.int64)
-        buf = self._buf
+        if inf:
+            return np.fromiter(
+                (buf.get(int(k), 0) + inf.get(int(k), 0) for k in flat),
+                np.int64, flat.size)
         return np.fromiter((buf.get(int(k), 0) for k in flat),
                            np.int64, flat.size)
 
     def query_batch(self, keys) -> np.ndarray:
         """Consolidated batched read: device counts through the paired
-        query engine, plus the H_R overlay. Because the device state only
-        changes on flush, the hot-key cache stays warm across buffered
-        writes — and reads still see every unflushed Δ."""
+        query engine, plus the H_R overlay (both buffers). Taken under
+        the dispatcher lock, so the device lookup and the overlay always
+        describe the same instant — a drain either fully landed (its
+        entries are device counts, the in-flight overlay is gone) or not
+        at all (they overlay) — never both, never neither."""
         if self.query_engine is None:
             raise ValueError("no paired query engine; construct with "
                              "query_engine=BatchedQueryEngine(cfg)")
-        base = self.query_engine.query_batch(self.state, keys)
-        if self._buf:
-            base = base + self.pending(keys)
-        return base
+        with self._lock():
+            base = self.query_engine.query_batch(self.state, keys)
+            pend = self.pending(keys)
+        return base + pend
 
     def query(self, key: int) -> int:
         """Single-key convenience wrapper (one-element batch)."""

@@ -18,7 +18,6 @@ device with zero caller changes. On top of it:
 """
 from __future__ import annotations
 
-import warnings
 from typing import Dict, Optional
 
 import numpy as np
@@ -31,20 +30,10 @@ class CorpusStats:
     def __init__(self, cfg: tj.FlashTableConfig,
                  state: Optional[tj.DeviceTableState] = None,
                  docs_seen: int = 0, tokens_seen: int = 0,
-                 engine=None, writer=None, backend: str = "device"):
+                 backend: str = "device"):
         self.cfg = cfg
         self.docs_seen = docs_seen
         self.tokens_seen = tokens_seen
-        if engine is not None or writer is not None:
-            warnings.warn(
-                "passing engine=/writer= to CorpusStats is deprecated: "
-                "the FlashStore facade owns the engine pair now "
-                "(DESIGN.md §8); the writer's state is adopted (H_R "
-                "drained first), the hand-built engines are discarded",
-                DeprecationWarning, stacklevel=2)
-            if writer is not None and state is None:
-                writer.flush()          # unflushed H_R entries are data
-                state = writer.state
         if backend == "sharded" and state is not None:
             raise ValueError("sharded backend cannot adopt a single-table "
                              "state")
@@ -66,21 +55,6 @@ class CorpusStats:
     def state(self) -> tj.DeviceTableState:
         """Current device table state (owned by the store)."""
         return self.store.state
-
-    # the engine pair, reachable for one more PR (tests / diagnostics)
-    @property
-    def writer(self):
-        b = self.store._b
-        if not hasattr(b, "writer"):
-            raise AttributeError(
-                "CorpusStats.writer is a deprecated single-table surface "
-                f"with no {b.name!r}-backend equivalent; use "
-                "CorpusStats.write_stats() / .store instead")
-        return b.writer
-
-    @property
-    def engine(self):
-        return self.store._b.query_engine
 
     def wear(self) -> Dict[str, int]:
         """Device wear/traffic counters (``tile_stores`` = paper cleans);

@@ -1,0 +1,441 @@
+"""Async double-buffered flush (DESIGN.md §9) — the PR-5 tentpole.
+
+Every backend drains H_R on a background worker while ingest keeps
+filling the fresh active buffer. These tests pin the contract:
+
+* equivalence — the async path answers exactly what the synchronous
+  path (and the sim oracle) answers, at every lifecycle point;
+* read-your-writes *during* a drain — queries overlay the sealed
+  in-flight chunk (proved deterministically by parking the worker);
+* ``flush(wait=True)`` is a durability barrier; ``wait=False`` returns
+  with the drain in flight;
+* ``close()`` / ``__exit__`` with a drain in flight join the worker,
+  complete the barrier and stay idempotent (ISSUE-5 satellite);
+* a no-op flush — nothing buffered, in flight or staged — never
+  invalidates the hot-key cache (ISSUE-5 satellite regression);
+* the ``overlap_us``/``stall_us`` ledgers and the epoch fence in the
+  query engine;
+* a mixed-op concurrency stress stream per backend×scheme — the CI
+  ``tests-stress`` lane runs this file 3× under distinct
+  ``PYTHONHASHSEED``s with a faulthandler timeout, so flush/invalidate
+  races surface as dumps, not silent flakes.
+"""
+import threading
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import table_jax as tj
+from repro.core.store import FlashStore, FlushDispatcher
+
+SCHEMES = ["MB", "MDB", "MDB-L"]
+
+
+def _cfg(scheme, **kw):
+    base = dict(q_log2=10, r_log2=6, scheme=scheme, log_capacity=1 << 9,
+                cs_partitions=4, max_updates_per_block=1 << 6,
+                overflow_capacity=1 << 9)
+    base.update(kw)
+    return tj.FlashTableConfig(**base)
+
+
+def _shard_count() -> int:
+    import jax
+    n = jax.device_count()
+    return n if n & (n - 1) == 0 else 1
+
+
+def _open(backend, scheme="MDB-L", **kw):
+    if backend == "sim":
+        return FlashStore.open(backend="sim", scheme=scheme, **kw)
+    if backend == "device":
+        kw.setdefault("chunk", 128)
+        kw.setdefault("flush_threshold", 256)
+        return FlashStore.open(_cfg(scheme), backend="device", **kw)
+    kw.setdefault("shard_chunk", 128)
+    kw.setdefault("flush_threshold", 200)
+    return FlashStore.open(_cfg(scheme), backend="sharded",
+                           num_shards=_shard_count(), **kw)
+
+
+def _park_worker(store):
+    """Deterministically hold the store's drain worker busy: the next
+    sealed drain queues behind the returned event. Single worker, so
+    nothing drains until the event is set."""
+    ev = threading.Event()
+    store._b._disp._pool.submit(ev.wait)
+    return ev
+
+
+# ---------------------------------------------------------------------------
+# equivalence: async ≡ sync ≡ sim oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["sim", "device", "sharded"])
+def test_async_equals_sync_equals_oracle(backend):
+    """One skewed ±Δ stream with interleaved reads and wait=False
+    flushes: the async store must answer exactly what the synchronous
+    store answers, at every probe point and at the end."""
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 400, size=3000).astype(np.int64)
+    probes = np.arange(0, 450)           # resident + absent keys
+    stores = {"async": _open(backend, async_flush=True),
+              "sync": _open(backend, async_flush=False)}
+    answers = {name: [] for name in stores}
+    for name, st in stores.items():
+        for i in range(0, toks.size, 250):
+            st.update(toks[i:i + 250])
+            if i % 500 == 0:
+                answers[name].append(st.query(probes))   # mid-stream RYW
+            if i == 1000:
+                st.flush(wait=False)     # merge while ingest continues
+        dec = np.unique(toks)[::5]
+        st.update(dec, np.full(dec.size, -1, np.int64))
+        answers[name].append(st.query(probes))
+        st.flush()
+        answers[name].append(st.query(probes))
+        assert st.buffered_entries == 0
+        st.close()
+    for a, b in zip(answers["async"], answers["sync"]):
+        np.testing.assert_array_equal(a, b)
+    # independent truth for the final state
+    truth = Counter(toks.tolist())
+    for k in dec.tolist():
+        truth[k] -= 1
+    want = np.array([truth.get(int(k), 0) for k in probes])
+    np.testing.assert_array_equal(answers["async"][-1], want)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_async_per_scheme_final_contents(scheme):
+    """Every scheme survives threshold-triggered async drains."""
+    rng = np.random.default_rng(11)
+    toks = rng.integers(0, 300, size=2000).astype(np.int64)
+    truth = Counter(toks.tolist())
+    keys = np.array(sorted(truth))
+    want = np.array([truth[int(k)] for k in keys])
+    with _open("device", scheme=scheme) as st:
+        for i in range(0, toks.size, 100):
+            st.update(toks[i:i + 100])
+        np.testing.assert_array_equal(st.query(keys), want)
+        st.flush()
+        np.testing.assert_array_equal(st.query(keys), want)
+
+
+# ---------------------------------------------------------------------------
+# read-your-writes while a drain is in flight
+# ---------------------------------------------------------------------------
+def test_query_overlays_inflight_chunk():
+    """Park the worker, seal a buffer, query: the sealed (in-flight,
+    undrained) entries must still be visible — the overlay covers both
+    buffers. After release + barrier the same counts come from device."""
+    st = _open("device", flush_threshold=10_000)
+    st.update(np.arange(100))            # active H_R
+    ev = _park_worker(st)
+    try:
+        st.drain(wait=False)             # seals; drain queued behind ev
+        assert st._b.writer._inflight is not None
+        st.update(np.arange(50, 150))    # refills the fresh active buffer
+        got = st.query(np.arange(150))   # overlay: active + in-flight
+        want = np.concatenate([np.ones(50), 2 * np.ones(50), np.ones(50)])
+        np.testing.assert_array_equal(got, want)
+    finally:
+        ev.set()
+    st.flush()                           # barrier: everything on device
+    assert st._b.writer._inflight is None
+    np.testing.assert_array_equal(st.query(np.arange(150)), want)
+    st.close()
+
+
+def test_sharded_query_overlays_inflight_partitions():
+    st = _open("sharded", flush_threshold=10_000)
+    keys = np.arange(200)
+    st.update(keys)
+    ev = _park_worker(st)
+    try:
+        st.drain(wait=False)
+        assert any(b is not None for b in st._b._inflight)
+        np.testing.assert_array_equal(st.query(keys), np.ones(keys.size))
+    finally:
+        ev.set()
+    st.flush()
+    np.testing.assert_array_equal(st.query(keys), np.ones(keys.size))
+    st.close()
+
+
+def test_flush_wait_false_then_barrier():
+    st = _open("device", flush_threshold=10_000)
+    st.update(np.arange(500))
+    ev = _park_worker(st)
+    try:
+        st.flush(wait=False)             # returns with the drain queued
+        assert st.buffered_entries == 500   # sealed, not yet durable
+    finally:
+        ev.set()
+    st.flush(wait=True)                  # the durability barrier
+    assert st.buffered_entries == 0
+    s = st.stats()
+    assert s["write_flushes"] == 1 and s["write_merges"] >= 1
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# close()/__exit__ with a drain in flight (ISSUE-5 satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("how", ["close", "exit"])
+def test_close_joins_inflight_drain(how):
+    """close()/__exit__ during a drain must join the worker, complete
+    the durability barrier, and stay idempotent."""
+    st = _open("device", flush_threshold=10_000)
+    st.update(np.arange(300))
+    ev = _park_worker(st)
+    done = threading.Event()
+
+    def closer():
+        if how == "close":
+            st.close()
+        else:
+            st.__exit__(None, None, None)
+        done.set()
+
+    st.drain(wait=False)                 # in-flight, parked behind ev
+    t = threading.Thread(target=closer)
+    t.start()
+    assert not done.wait(0.2)            # close really blocks on the drain
+    ev.set()
+    t.join(timeout=30)
+    assert done.is_set() and st._closed
+    w = st._b.writer
+    assert w._inflight is None and w.buffered_entries == 0
+    assert w.stats.flushes == 1 and w.stats.merges >= 1
+    st.close()                           # idempotent
+    st.__exit__(None, None, None)        # also idempotent post-close
+    with pytest.raises(ValueError):
+        st.update(np.asarray([1]))
+
+
+def test_drain_error_surfaces_at_barrier_and_poisons():
+    """A drain that dies on the worker re-raises at the next barrier,
+    after which the store is poisoned: the undelivered sealed chunk is
+    never silently dropped (reads keep overlaying it, writes fail
+    loudly), and close() still joins the worker and ends closed."""
+    st = _open("device", flush_threshold=10_000)
+    st.update(np.arange(10))
+    # poison the dispatch: donate the state out from under the engine
+    tj.flush(st.cfg, st.state)
+    st.drain(wait=False)
+    with pytest.raises(RuntimeError, match="donated"):
+        st.flush(wait=True)
+    # the sealed chunk is still the read overlay, not silently dropped
+    assert st.buffered_entries == 10
+    with pytest.raises(RuntimeError, match="poisoned"):
+        st.flush()
+    # close releases the worker despite the poison, and stays idempotent
+    with pytest.raises(RuntimeError, match="poisoned"):
+        st.close()
+    assert st._closed and st._b._disp._closed
+    st.close()
+    with pytest.raises(ValueError):
+        st.update(np.asarray([1]))
+
+
+def test_assert_live_guard_rejects_stale_state():
+    """The segments.assert_live donation guard fails loudly (not as an
+    opaque XLA deleted-buffer error) when a drain would start from an
+    already-donated state."""
+    cfg = _cfg("MDB-L")
+    state = tj.init(cfg)
+    state2 = tj.update(cfg, state, np.arange(8, dtype=np.int32))
+    with pytest.raises(RuntimeError, match="donated"):
+        tj.assert_live(state)
+    tj.assert_live(state2)               # live state passes
+
+
+# ---------------------------------------------------------------------------
+# no-op flush must not invalidate (ISSUE-5 satellite regression)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["device", "sharded"])
+def test_noop_flush_skips_invalidation(backend):
+    """flush() with nothing buffered, in flight or staged must leave the
+    hot-key cache alone: previously some backends invalidated anyway,
+    evicting every hot key for no reason."""
+    st = _open(backend, flush_threshold=10_000)
+    keys = np.arange(40)
+    st.update(keys)
+    st.flush()                           # real flush: drains + merges
+    st.query(keys)                       # warm the hot cache
+    s0 = st.stats()
+    st.flush()                           # H_R empty, nothing staged
+    st.flush()                           # and again
+    s1 = st.stats()
+    assert s1["query_invalidations"] == s0["query_invalidations"]
+    assert s1["write_merges"] == s0["write_merges"]   # no device merge
+    st.query(keys)                       # served from the still-warm cache
+    s2 = st.stats()
+    assert s2["query_cache_hits"] > s1["query_cache_hits"]
+    assert s2["query_device_queries"] == s1["query_device_queries"]
+    st.close()
+
+
+def test_adopted_staged_state_still_merges():
+    """An adopted state may arrive with a staged (unmerged) change
+    segment: the first flush must really merge it — the no-op path is
+    only for provably-clean engines (regression: _staged_dirty used to
+    initialize False for state= adoption, silently skipping the
+    pre-PR5 unconditional merge)."""
+    cfg = _cfg("MDB-L")
+    staged = tj.update(cfg, tj.init(cfg), np.arange(40, dtype=np.int32))
+    assert int(np.ravel(staged.log_ptr).sum()) > 0    # really staged
+    st = FlashStore.open(cfg, backend="device", state=staged)
+    st.flush()
+    assert int(np.ravel(st.state.log_ptr).sum()) == 0  # log compacted
+    assert st.stats()["write_merges"] == 1
+    st.flush()                                         # now provably clean
+    assert st.stats()["write_merges"] == 1             # no-op path again
+    np.testing.assert_array_equal(st.query(np.arange(40)), np.ones(40))
+    st.close()
+
+
+def test_background_merge_not_duplicated():
+    """flush(wait=False) followed by flush() must not schedule a second
+    device merge: the no-op decision settles the pending job first
+    instead of reading a stale _staged_dirty mid-merge."""
+    st = _open("device", flush_threshold=10_000)
+    st.update(np.arange(64))
+    st.flush(wait=False)
+    st.flush()
+    st.flush()
+    assert st.stats()["write_merges"] == 1
+    st.close()
+
+
+def test_sim_noop_flush_is_free():
+    st = _open("sim")
+    st.update(np.arange(20))
+    st.flush()
+    before = st.stats()
+    st.flush()
+    after = st.stats()
+    for k in ("cleans", "block_ops", "page_ops", "merges", "stages"):
+        assert after[k] == before[k]
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# ledgers and fencing
+# ---------------------------------------------------------------------------
+def test_overlap_and_stall_ledgers():
+    """Synchronous drains charge their full duration to stall_us and
+    never to overlap_us; async drains run on the worker (overlap_us) and
+    only residual barrier waits stall."""
+    toks = np.random.default_rng(0).integers(0, 5000, 6000)
+    sync = _open("device", async_flush=False, flush_threshold=512)
+    for i in range(0, toks.size, 200):
+        sync.update(toks[i:i + 200])
+    sync.flush()
+    ss = sync.stats()
+    assert ss["write_stall_us"] > 0 and ss["write_overlap_us"] == 0
+    sync.close()
+    a = _open("device", async_flush=True, flush_threshold=512)
+    for i in range(0, toks.size, 200):
+        a.update(toks[i:i + 200])
+    a.flush()
+    sa = a.stats()
+    assert sa["write_overlap_us"] > 0
+    a.close()
+
+
+def test_dispatcher_serializes_and_propagates():
+    """FlushDispatcher unit contract: jobs run in order on one worker,
+    wait() re-raises, close() is idempotent."""
+    d = FlushDispatcher(enabled=True)
+    order = []
+    d.submit(lambda: order.append(1))
+    d.submit(lambda: order.append(2))    # waits job 1 out first
+    d.wait()
+    assert order == [1, 2]
+
+    def boom():
+        raise ValueError("drain died")
+
+    d.submit(boom)
+    with pytest.raises(ValueError, match="drain died"):
+        d.wait()
+    d.close()
+    d.close()
+    with pytest.raises(ValueError):
+        d.submit(lambda: None)
+
+
+def test_query_engine_epoch_fence():
+    """An invalidation landing mid-lookup drops that lookup's cache
+    inserts (they may predate the drain) — the fence the async store
+    relies on (DESIGN.md §9)."""
+    from repro.core.query_engine import BatchedQueryEngine
+    cfg = _cfg("MDB-L")
+    state = tj.update(cfg, tj.init(cfg), np.arange(8, dtype=np.int32))
+    eng = BatchedQueryEngine(cfg, chunk=8)
+    lookup = eng._lookup
+
+    def racing_lookup(st, q):
+        out = lookup(st, q)
+        eng.invalidate()                 # a drain lands mid-lookup
+        return out
+
+    eng._lookup = racing_lookup
+    out = eng.query_batch(state, np.arange(8))
+    np.testing.assert_array_equal(out, np.ones(8))
+    assert eng._hot == {}                # fenced: nothing cached
+    assert eng.stats.fenced == 8
+    eng._lookup = lookup
+    eng.query_batch(state, np.arange(8))
+    assert len(eng._hot) == 8            # un-raced lookups cache again
+    assert eng.stats.fenced == 8
+
+
+# ---------------------------------------------------------------------------
+# the stress lane (CI tests-stress: 3 × PYTHONHASHSEED, faulthandler)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend,scheme", [("sim", "MDB-L"),
+                                            ("device", "MB"),
+                                            ("device", "MDB"),
+                                            ("device", "MDB-L"),
+                                            ("sharded", "MDB-L")])
+def test_concurrency_stress(backend, scheme):
+    """Hammer the store with a mixed op stream — tiny thresholds so
+    drains are constantly in flight, queries and wait=False flushes
+    interleaved, ±Δ churn — and verify read-your-writes at every probe
+    plus exact final contents. Any flush/invalidate race shows up as a
+    wrong count or (under the CI faulthandler lane) a hang dump."""
+    rng = np.random.default_rng(29)
+    kw = (dict(flush_threshold=64, chunk=64) if backend == "device" else
+          dict(flush_threshold=48, shard_chunk=64) if backend == "sharded"
+          else dict(flush_threshold=64))
+    st = _open(backend, scheme=scheme, **kw)
+    truth = Counter()
+    probes = np.arange(0, 220)
+    for step in range(60):
+        toks = rng.integers(0, 200, size=rng.integers(1, 120))
+        st.update(toks)
+        truth.update(toks.tolist())
+        op = step % 6
+        if op == 0:
+            alive = np.array([k for k, v in truth.items() if v > 0])
+            dec = rng.choice(alive, size=min(5, alive.size), replace=False)
+            st.update(dec, np.full(dec.size, -1, np.int64))
+            truth.subtract(dec.tolist())
+        elif op == 1:
+            st.flush(wait=False)
+        elif op == 2:
+            st.drain(wait=False)
+        elif op == 3:
+            want = np.array([truth.get(int(k), 0) for k in probes])
+            np.testing.assert_array_equal(st.query(probes), want,
+                                          err_msg=f"step {step}")
+    st.flush()
+    want = np.array([truth.get(int(k), 0) for k in probes])
+    np.testing.assert_array_equal(st.query(probes), want)
+    assert st.buffered_entries == 0
+    if backend != "sim":
+        assert st.wear()["dropped"] == 0
+    st.close()

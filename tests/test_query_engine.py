@@ -7,15 +7,19 @@ segment, change segment/log (staged, unflushed), and overflow — plus
 absent keys, duplicates and EMPTY padding. The event-level ``table_sim``
 tables answer the same workload as the independent oracle (logical
 counts are placement-independent, so the differing sim hash pair does
-not matter).
+not matter). Since PR 5 these tests drive the engine through its only
+public surface, the :class:`~repro.core.store.FlashStore` facade
+(``store.drain()`` = stage without merge, ``store.stats()["query_*"]`` =
+the engine ledger); the engine shims they used to ride are gone.
 """
 import numpy as np
 import pytest
 
+from repro.core import table_jax as tj
 from repro.core.flash_model import TableGeometry
 from repro.core.query_engine import BatchedQueryEngine
+from repro.core.store import FlashStore
 from repro.core.table_sim import make_table
-from repro.core.tfidf import make_device_table
 
 SCHEMES = ["MB", "MDB", "MDB-L"]
 GEOM = TableGeometry(num_blocks=16, pages_per_block=2, entries_per_page=8)
@@ -31,16 +35,24 @@ def _same_block_keys(pair, block, n, lo=0):
     return np.asarray(out, dtype=np.int64)
 
 
-def _dev(scheme, **kw):
+def _dev(scheme, query_chunk=64, hot_capacity=4096, **kw):
     cfg = dict(q_log2=8, r_log2=4, log_capacity=64, cs_partitions=4,
                max_updates_per_block=32, overflow_capacity=128)
     cfg.update(kw)
-    t = make_device_table(scheme, **cfg)
-    # small fixed shapes: keep insert chunks within the tiny test logs
-    # (oversized chunks unroll statically) and compiles fast
-    t.chunk = 32
-    t.engine.chunk = 64
-    return t
+    # small fixed shapes: keep dispatch chunks within the tiny test logs
+    # (oversized chunks unroll statically) and compiles fast; the large
+    # flush threshold keeps writes buffered until an explicit drain/flush
+    return FlashStore.open(tj.FlashTableConfig(scheme=scheme, **cfg),
+                           backend="device", chunk=32,
+                           query_chunk=query_chunk,
+                           hot_capacity=hot_capacity, flush_threshold=8192)
+
+
+def _qstats(store):
+    """The engine's query-path ledger, through the store surface."""
+    s = store.stats()
+    return {k[len("query_"):]: v for k, v in s.items()
+            if k.startswith("query_")}
 
 
 @pytest.mark.parametrize("scheme", SCHEMES)
@@ -54,8 +66,8 @@ def test_query_batch_equals_per_key_equals_sim(scheme):
     hot = _same_block_keys(dev.cfg.pair, 3, 24)
     bulk = rng.integers(0, 400, size=256)
     merged = np.concatenate([hot, hot[:8], bulk])        # some counts of 2
-    dev.insert_batch(merged)
-    dev.finalize()
+    dev.update(merged)
+    dev.flush()
     assert dev.wear()["dropped"] == 0
     ov_resident = int(np.asarray(dev.state.ov_keys != -1).sum())
     assert ov_resident >= 8                               # spill really hit
@@ -63,17 +75,17 @@ def test_query_batch_equals_per_key_equals_sim(scheme):
     sim.finalize()
     # change segment / log: staged on device, never merged (MB merges at
     # once, which is that scheme's contract — no change segment to stage
-    # into). writer.flush() drains H_R to the device *without* a merge.
+    # into). store.drain() stages H_R on device *without* a merge.
     staged = np.arange(1000, 1020)
-    dev.insert_batch(staged)
-    dev.writer.flush()
+    dev.update(staged)
+    dev.drain()
     sim.insert_batch(staged)
     if scheme != "MB":
         assert int(np.ravel(dev.state.log_ptr).sum()) > 0
     # RAM buffer H_R: buffered in the write engine, never dispatched
     buffered = np.arange(5000, 5012)
-    dev.insert_batch(buffered)
-    assert dev.writer.buffered_entries == len(buffered)
+    dev.update(buffered)
+    assert dev.buffered_entries == len(buffered)
     sim.insert_batch(buffered)
     # the query set crosses every region + absent keys + duplicates
     absent = np.asarray([777777, 888888])
@@ -84,14 +96,15 @@ def test_query_batch_equals_per_key_equals_sim(scheme):
     np.testing.assert_array_equal(batched, per_key)
     np.testing.assert_array_equal(batched, oracle)
     # dedup happened: the duplicated hot[:5] keys cost no extra probes
-    st = dev.engine.stats
-    assert st.unique_keys < st.keys
+    st = _qstats(dev)
+    assert st["unique_keys"] < st["keys"]
+    dev.close()
 
 
 @pytest.mark.parametrize("scheme", SCHEMES)
 def test_empty_padding_keys_return_zero(scheme):
     dev = _dev(scheme)
-    dev.insert_batch(np.asarray([5, 5, 9]))
+    dev.update(np.asarray([5, 5, 9]))
     got = dev.query_batch(np.asarray([5, -1, 9, -1]))
     assert list(got) == [2, 0, 1, 0]
 
@@ -99,74 +112,72 @@ def test_empty_padding_keys_return_zero(scheme):
 def test_hot_cache_serves_repeats_and_invalidates_on_update():
     dev = _dev("MDB-L")
     keys = np.arange(50, 80)
-    dev.insert_batch(keys)
-    dev.finalize()
-    st = dev.engine.stats
+    dev.update(keys)
+    dev.flush()
     first = dev.query_batch(keys)
-    assert st.cache_hits == 0 and st.device_queries == len(keys)
-    dispatches = st.device_dispatches
+    st = _qstats(dev)
+    assert st["cache_hits"] == 0 and st["device_queries"] == len(keys)
+    dispatches = st["device_dispatches"]
     second = dev.query_batch(keys)                 # all from the hot cache
     np.testing.assert_array_equal(first, second)
-    assert st.cache_hits == len(keys)
-    assert st.device_dispatches == dispatches      # no device traffic
+    st = _qstats(dev)
+    assert st["cache_hits"] == len(keys)
+    assert st["device_dispatches"] == dispatches   # no device traffic
     # a buffered (unflushed) write must be visible immediately: the H_R
     # overlay serves it on top of the still-valid hot cache, with no new
     # device traffic
-    dev.insert_batch(np.asarray([50]))
-    inval_before = st.invalidations
+    dev.update(np.asarray([50]))
+    inval_before = st["invalidations"]
     assert dev.query(50) == 2
-    assert st.device_dispatches == dispatches
-    # the engine-driven flush invalidates the hot cache; the re-probe
+    assert _qstats(dev)["device_dispatches"] == dispatches
+    # the store-driven drain invalidates the hot cache; the re-probe
     # then sees the device-resident count
-    dev.writer.flush()
-    assert st.invalidations > inval_before
+    dev.drain()
+    assert _qstats(dev)["invalidations"] > inval_before
     assert dev.query(50) == 2
-    assert st.device_queries > len(keys)           # really went back
+    assert _qstats(dev)["device_queries"] > len(keys)  # really went back
 
 
 def test_probe_distance_batch_aggregation():
     dev = _dev("MDB-L")
     keys = np.arange(200, 232)
-    dev.insert_batch(keys)
-    dev.finalize()
+    dev.update(keys)
+    dev.flush()
     dev.query_batch(keys)
-    st = dev.engine.stats
+    st = _qstats(dev)
     # every resident key probes at least 1 slot (home, inclusive)
-    assert st.probe_total >= st.device_queries >= len(keys)
-    assert 1 <= st.probe_max <= dev.cfg.block_entries
+    assert st["probe_total"] >= st["device_queries"] >= len(keys)
+    assert 1 <= st["probe_max"] <= dev.cfg.block_entries
     # cache hits add nothing to the probe ledger
-    before = st.probe_total
     dev.query_batch(keys)
-    assert st.probe_total == before
+    assert _qstats(dev)["probe_total"] == st["probe_total"]
 
 
 def test_engine_chunking_single_compiled_shape():
-    dev = _dev("MDB-L")
-    dev.engine.chunk = 16                 # force multi-chunk dispatch
+    dev = _dev("MDB-L", query_chunk=16)   # force multi-chunk dispatch
     keys = np.arange(3000, 3100)          # 100 unique keys -> 7 chunks
-    dev.insert_batch(keys)
-    dev.finalize()
+    dev.update(keys)
+    dev.flush()
     got = dev.query_batch(keys)
     np.testing.assert_array_equal(got, np.ones(len(keys), np.int64))
-    assert dev.engine.stats.device_dispatches == -(-len(keys) // 16)
+    assert _qstats(dev)["device_dispatches"] == -(-len(keys) // 16)
 
 
 def test_engine_hot_capacity_zero_disables_cache():
     """hot_capacity=0 must mean 'no caching', not a crash on first miss."""
-    dev = _dev("MDB-L")
-    dev.engine.hot_capacity = 0
-    dev.insert_batch(np.arange(8))
+    dev = _dev("MDB-L", hot_capacity=0)
+    dev.update(np.arange(8))
     for _ in range(2):
         np.testing.assert_array_equal(dev.query_batch(np.arange(8)),
                                       np.ones(8, np.int64))
-    assert dev.engine.stats.cache_hits == 0
+    assert _qstats(dev)["cache_hits"] == 0
 
 
 def test_engine_state_free_reads():
     """query_batch must not mutate table state (reads are functional)."""
     dev = _dev("MDB")
-    dev.insert_batch(np.arange(10))
-    dev.writer.flush()              # drain H_R so the device has the counts
+    dev.update(np.arange(10))
+    dev.drain()                 # stage H_R so the device has the counts
     stats_before = dev.wear()
     eng = BatchedQueryEngine(dev.cfg, chunk=8)
     out = eng.query_batch(dev.state, np.arange(10))

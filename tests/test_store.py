@@ -4,8 +4,10 @@ The PR-4 acceptance property (ISSUE 4): the same token stream driven
 through ``FlashStore.open(backend=...)`` for ``sim``, ``device`` and
 ``sharded`` must produce identical counts — before a flush
 (read-your-writes through the H_R overlay), after increments/decrements
-(Δ-cancellation), and after the durability flush — plus the regression
-that the pre-PR4 manual engine-pair wiring surfaces now warn.
+(Δ-cancellation), and after the durability flush. Since PR 5 every
+backend drains through the async double-buffered dispatcher by default
+(DESIGN.md §9), so these properties now also prove the async path; the
+deprecated pre-PR4 engine shims are deleted (`test_engine_shims_are_gone`).
 """
 import os
 import subprocess
@@ -146,30 +148,30 @@ def test_sharded_shard_local_thresholds():
     st.close()
 
 
-def test_deprecated_manual_engine_wiring_warns():
-    """The pre-PR4 surfaces survive one PR behind a DeprecationWarning."""
-    from repro.core.tfidf import DeviceTableAdapter, make_device_table
+def test_engine_shims_are_gone():
+    """ROADMAP "Engine shim removal": the deprecated pre-PR4 surfaces
+    (`DeviceTableAdapter`, `make_device_table`, `CorpusStats(engine=/
+    writer=)`) were deleted in PR 5 — the store is the only way in. CI's
+    forbid-shims lint step greps the source tree for the same names."""
+    import inspect
+
+    from repro.core import tfidf
     from repro.data import CorpusStats
-    with pytest.warns(DeprecationWarning, match="FlashStore"):
-        DeviceTableAdapter(_cfg("MDB-L"))
-    with pytest.warns(DeprecationWarning, match="FlashStore"):
-        make_device_table("MDB-L", q_log2=10, r_log2=6)
-    from repro.core.query_engine import BatchedQueryEngine
-    with pytest.warns(DeprecationWarning, match="FlashStore"):
-        CorpusStats(_cfg("MDB-L"), engine=BatchedQueryEngine(_cfg("MDB-L")))
+    assert not hasattr(tfidf, "DeviceTableAdapter")
+    assert not hasattr(tfidf, "make_device_table")
+    params = inspect.signature(CorpusStats).parameters
+    assert "engine" not in params and "writer" not in params
 
 
-def test_deprecated_writer_adoption_drains_buffer():
-    """Adopting a hand-built writer must not lose its unflushed H_R
-    entries (they are the caller's data, not scratch)."""
-    from repro.core.write_engine import BatchedWriteEngine
+def test_state_adoption_still_works():
+    """Adopting a prebuilt device state (the surviving, non-shim half of
+    the old writer-adoption path) seeds the store's table."""
+    import jax.numpy as jnp
+
     from repro.data import CorpusStats
     cfg = _cfg("MDB-L")
-    w = BatchedWriteEngine(cfg, chunk=64, flush_threshold=1000)
-    w.update(np.asarray([1, 1, 2]))
-    assert w.buffered_entries > 0           # really unflushed
-    with pytest.warns(DeprecationWarning):
-        cs = CorpusStats(cfg, writer=w)
+    state = tj.update(cfg, tj.init(cfg), jnp.asarray([1, 1, 2], jnp.int32))
+    cs = CorpusStats(cfg, state=state)
     np.testing.assert_array_equal(cs.counts(np.asarray([1, 2])), [2, 1])
 
 
@@ -185,8 +187,7 @@ def test_sim_backend_implements_wear():
 
 
 def test_corpus_stats_sharded_backend():
-    """CorpusStats scales to the sharded store with zero caller changes;
-    the deprecated single-table .writer surface refuses clearly."""
+    """CorpusStats scales to the sharded store with zero caller changes."""
     from repro.data import CorpusStats
     st = CorpusStats.create(q_log2=10, r_log2=6, scheme="MDB-L",
                             log_capacity=1 << 9,
@@ -198,23 +199,7 @@ def test_corpus_stats_sharded_backend():
     st.flush()
     np.testing.assert_array_equal(st.counts(toks), np.ones(40))
     assert st.wear()["dropped"] == 0
-    assert not hasattr(st, "writer")        # explicit, not a crash
-    assert st.engine is not None            # consolidated read path
-
-
-def test_adapter_shim_still_works():
-    """The deprecated adapter delegates to the store: same counts, same
-    wear surface (so PR-2/3 tests keep their meaning for one PR)."""
-    with pytest.warns(DeprecationWarning):
-        from repro.core.tfidf import make_device_table
-        t = make_device_table("MDB-L", q_log2=10, r_log2=6,
-                              log_capacity=1 << 9,
-                              max_updates_per_block=1 << 6,
-                              overflow_capacity=1 << 9)
-    t.insert_batch(np.asarray([7, 7, 8]))
-    assert t.query(7) == 2 and t.query_batch([7, 8]).tolist() == [2, 1]
-    t.finalize()
-    assert t.wear()["dropped"] == 0
+    assert st.query_stats()["batches"] > 0  # consolidated read path
 
 
 def test_engine_pairing_lives_only_in_store():

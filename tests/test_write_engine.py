@@ -174,12 +174,12 @@ def test_no_stale_reads_after_unflushed_writer():
     first = st.counts(toks)                # populates the hot-key cache
     np.testing.assert_array_equal(first, np.ones(30))
     st.ingest(toks[:10])                   # buffered in H_R, no dispatch
-    assert st.writer.buffered_entries > 0
+    assert st.store.buffered_entries > 0
     got = st.counts(toks)                  # must not serve stale counts
     np.testing.assert_array_equal(got, [2] * 10 + [1] * 20)
     # after the device flush the same counts come from the table itself
     st.flush()
-    assert st.writer.buffered_entries == 0
+    assert st.store.buffered_entries == 0
     np.testing.assert_array_equal(st.counts(toks), got)
     # MoE accounting rides the same engine: deltas visible pre-flush
     st.ingest_expert_counts(layer=2, counts=np.asarray([4, 0, 1]))
