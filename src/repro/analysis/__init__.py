@@ -1,0 +1,19 @@
+"""Correctness tooling for the FlashStore concurrency contracts.
+
+Two halves (DESIGN.md §10):
+
+- :mod:`.flashlint` — AST-based static checker; named rules FL001–FL006
+  enforce engine-pairing, donation, flush→invalidate, threading, shim,
+  and lock-discipline contracts. CLI:
+  ``python -m repro.analysis.flashlint src tests benchmarks examples``.
+- :mod:`.race_harness` — opt-in runtime instrumentation: a vector-clock
+  tracer attached to a live store records seal/swap/drain/invalidate/
+  lookup events, and a replay checker flags unordered conflicting
+  accesses to the H_R buffers and the hot cache.
+
+Nothing here imports jax; the package is safe to use in lint-only CI
+jobs without an accelerator stack.
+"""
+from __future__ import annotations
+
+__all__ = ["flashlint", "race_harness"]

@@ -1,0 +1,99 @@
+"""Shared plumbing for flashlint rules: the ``Rule`` record and the AST
+helpers every rule leans on (dotted-name chains, import-alias maps,
+donation-keyword extraction)."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One named contract. ``check(ctx) -> list[Violation]`` runs over a
+    parsed :class:`~.flashlint.FileContext`; ``scope`` is ``"src"`` for
+    contracts about package code only (see the flashlint docstring) or
+    ``"all"``."""
+
+    id: str
+    summary: str
+    scope: str
+    check: Callable[[object], List]
+
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name of a ``Name``/``Attribute`` chain (``self.state``,
+    ``st.cfg``), or ``None`` when the base is not a plain name
+    (calls, subscripts, literals)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def callee_name(call: ast.Call) -> Optional[str]:
+    """Trailing identifier of a call's target: ``Foo(...)`` → ``Foo``,
+    ``mod.Foo(...)`` → ``Foo``."""
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def table_jax_aliases(tree: ast.Module) -> set:
+    """Names the module binds to :mod:`repro.core.table_jax` (``tj`` in
+    most of the tree): ``from ... import table_jax [as X]`` and
+    ``import ...table_jax as X``."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                if a.name == "table_jax":
+                    out.add(a.asname or a.name)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.split(".")[-1] == "table_jax" and a.asname:
+                    out.add(a.asname)
+    return out
+
+
+def donation_indices(value: ast.AST) -> Optional[tuple]:
+    """If ``value`` (an assignment RHS / decorator expression) carries a
+    donation marker, return the donated positional indices.
+
+    ``donate_argnums=<int|tuple>`` is read literally;
+    ``donate=True`` marks the repo's sharded-program factories
+    (:func:`repro.core.distributed.make_update_fn` and friends), whose
+    produced callables donate argument 0."""
+    for node in ast.walk(value):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg == "donate_argnums":
+                try:
+                    got = ast.literal_eval(kw.value)
+                except ValueError:
+                    # dynamic (e.g. ``(0,) if donate else ()``): assume
+                    # the donating branch — conservative for a linter
+                    return (0,)
+                if isinstance(got, int):
+                    return (got,)
+                return tuple(got)
+            if (kw.arg == "donate"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True):
+                return (0,)
+    return None
+
+
+def path_endswith(ctx, *suffixes: str) -> bool:
+    """True when the file's path ends with any of the given
+    ``/``-separated suffixes (``core/store.py``)."""
+    p = ctx.path.resolve().as_posix()
+    return any(p.endswith(s) for s in suffixes)

@@ -1,0 +1,292 @@
+"""Dataflow rules.
+
+FL002 — use-after-donation. JAX donation (``donate_argnums`` /
+``donate=True`` factory calls) consumes the argument's buffers: any
+later read of the same binding sees deleted arrays (at best a
+``RuntimeError`` from ``assert_live``, at worst garbage on a backend
+that skips the check). The rule runs a linear, statement-ordered scan of
+each function body: a name (or dotted ``self.x`` chain) passed in a
+donated position becomes *spent*; reading a spent binding — or any
+deeper attribute of it — flags, until an assignment rebinds it.
+
+The scan is deliberately shallow: only plain ``Name``/``Attribute``
+chains are tracked (a donated *expression* like ``f(state)`` has no
+binding to poison), and branches merge conservatively (spent in either
+arm ⇒ spent after).
+
+FL003 — flush→invalidate. Every function that rebinds a ``.state``
+attribute (the donated table state living on an engine/backend) must
+also invalidate the paired query engine, or stale cached counts survive
+the swap. ``__init__`` (first bind, nothing cached yet) is exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from .rules_base import Rule, attr_chain, donation_indices, table_jax_aliases
+
+#: ``table_jax`` entry points that donate their state argument
+#: (positional index 1, after ``cfg``). ``update_copying`` deliberately
+#: does not donate and is not listed.
+_TJ_DONATING = {"update": (1,), "flush": (1,)}
+
+_INVALIDATE_NAMES = frozenset({"invalidate", "_invalidate"})
+
+
+def _donating_map(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    """Trailing-name → donated indices, for callables *defined in this
+    file* with a donation marker: ``upd = jax.jit(f, donate_argnums=…)``,
+    ``self._upd = make_update_fn(…, donate=True)``, or a decorated
+    ``def``. Keyed on the trailing identifier so both ``upd(…)`` and
+    ``self._upd(…)`` call sites resolve."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            idx = donation_indices(node.value)
+            if idx is None:
+                continue
+            for t in node.targets:
+                chain = attr_chain(t)
+                if chain:
+                    out[chain.split(".")[-1]] = idx
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                idx = donation_indices(dec)
+                if idx is not None:
+                    out[node.name] = idx
+    return out
+
+
+class _DonationScan:
+    """Linear statement-order scan of one function body."""
+
+    def __init__(self, ctx, tj_aliases, donating):
+        self.ctx = ctx
+        self.tj_aliases = tj_aliases
+        self.donating = donating
+        self.spent: Dict[str, int] = {}        # chain -> donation lineno
+        self.out: List = []
+
+    # -- call-site donation resolution -------------------------------
+    def _donated_indices(self, call: ast.Call) -> Optional[Tuple[int, ...]]:
+        f = call.func
+        if isinstance(f, ast.Attribute):
+            base = attr_chain(f.value)
+            if base in self.tj_aliases and f.attr in _TJ_DONATING:
+                return _TJ_DONATING[f.attr]
+            if f.attr in self.donating:
+                return self.donating[f.attr]
+        elif isinstance(f, ast.Name) and f.id in self.donating:
+            return self.donating[f.id]
+        # an inline donating wrapper: (jax.jit(f, donate_argnums=…))(x)
+        idx = donation_indices(f) if not isinstance(f, ast.Name) else None
+        return idx
+
+    # -- spent-set bookkeeping ---------------------------------------
+    def _read(self, chain: str, node) -> None:
+        for key, line in self.spent.items():
+            if chain == key or chain.startswith(key + "."):
+                self.out.append(self.ctx.violation(
+                    "FL002", node,
+                    f"'{chain}' read after being donated on line {line} — "
+                    "donated buffers are spent; rebind the result instead"))
+                return
+
+    def _kill(self, chain: str) -> None:
+        for key in [k for k in self.spent
+                    if k == chain or k.startswith(chain + ".")]:
+            del self.spent[key]
+
+    # -- expression walk (reads + donations, in evaluation order) ----
+    def _expr(self, node) -> None:
+        if node is None:
+            return
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            chain = attr_chain(node)
+            if chain is not None:
+                self._read(chain, node)
+                return                      # chain fully handled
+            # fall through: complex base (subscript/call) — walk children
+        if isinstance(node, ast.Call):
+            for child in list(node.args) + [kw.value for kw in node.keywords]:
+                self._expr(child)
+            self._expr(node.func)
+            idx = self._donated_indices(node)
+            if idx:
+                for i in idx:
+                    if i < len(node.args):
+                        chain = attr_chain(node.args[i])
+                        if chain:
+                            self.spent[chain] = node.lineno
+            return
+        if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            return                          # separate scope, scanned apart
+        for child in ast.iter_child_nodes(node):
+            self._expr(child)
+
+    def _target(self, node) -> None:
+        """Assignment target: kill rebound chains (value side was already
+        scanned); subscript/starred targets still *read* their base."""
+        if isinstance(node, (ast.Tuple, ast.List)):
+            for elt in node.elts:
+                self._target(elt)
+        elif isinstance(node, ast.Starred):
+            self._target(node.value)
+        elif isinstance(node, (ast.Name, ast.Attribute)):
+            chain = attr_chain(node)
+            if chain:
+                self._kill(chain)
+            else:
+                self._expr(node.value)      # e.g. ``f(x).attr = v``
+        elif isinstance(node, ast.Subscript):
+            self._expr(node.value)          # ``spent[i] = v`` reads spent
+            self._expr(node.slice)
+
+    # -- statement walk ----------------------------------------------
+    def _merge(self, *snapshots: Dict[str, int]) -> None:
+        merged: Dict[str, int] = {}
+        for snap in snapshots:
+            merged.update(snap)
+        self.spent = merged
+
+    def _branch(self, body) -> Dict[str, int]:
+        saved = dict(self.spent)
+        self._stmts(body)
+        result = self.spent
+        self.spent = saved
+        return result
+
+    def _stmts(self, body) -> None:
+        for st in body:
+            self._stmt(st)
+
+    def _stmt(self, st) -> None:
+        if isinstance(st, ast.Assign):
+            self._expr(st.value)
+            for t in st.targets:
+                self._target(t)
+        elif isinstance(st, ast.AnnAssign):
+            self._expr(st.value)
+            self._target(st.target)
+        elif isinstance(st, ast.AugAssign):
+            self._expr(st.value)
+            chain = attr_chain(st.target)
+            if chain:
+                self._read(chain, st.target)  # x += v reads then rebinds
+                self._kill(chain)
+        elif isinstance(st, (ast.Expr, ast.Return)):
+            self._expr(st.value)
+        elif isinstance(st, ast.Delete):
+            for t in st.targets:
+                chain = attr_chain(t)
+                if chain:
+                    self._kill(chain)
+        elif isinstance(st, ast.If):
+            self._expr(st.test)
+            a = self._branch(st.body)
+            b = self._branch(st.orelse)
+            self._merge(a, b)
+        elif isinstance(st, (ast.For, ast.AsyncFor)):
+            self._expr(st.iter)
+            self._target(st.target)
+            a = self._branch(st.body)
+            b = self._branch(st.orelse)
+            self._merge(self.spent, a, b)
+        elif isinstance(st, ast.While):
+            self._expr(st.test)
+            a = self._branch(st.body)
+            b = self._branch(st.orelse)
+            self._merge(self.spent, a, b)
+        elif isinstance(st, (ast.With, ast.AsyncWith)):
+            for item in st.items:
+                self._expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self._target(item.optional_vars)
+            self._stmts(st.body)
+        elif isinstance(st, ast.Try):
+            snaps = [self._branch(st.body)]
+            for h in st.handlers:
+                snaps.append(self._branch(h.body))
+            snaps.append(self._branch(st.orelse))
+            self._merge(*snaps)
+            self._stmts(st.finalbody)
+        elif isinstance(st, (ast.Raise, ast.Assert)):
+            self._expr(getattr(st, "exc", None) or getattr(st, "test", None))
+            self._expr(getattr(st, "cause", None) or getattr(st, "msg", None))
+        elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            pass                            # separate scope, scanned apart
+        else:
+            for child in ast.iter_child_nodes(st):
+                if isinstance(child, ast.expr):
+                    self._expr(child)
+
+
+def _check_fl002(ctx) -> List:
+    tj_aliases = table_jax_aliases(ctx.tree)
+    donating = _donating_map(ctx.tree)
+    out: List = []
+    scopes = [n for n in ast.walk(ctx.tree)
+              if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in scopes:
+        scan = _DonationScan(ctx, tj_aliases, donating)
+        scan._stmts(fn.body)
+        out.extend(scan.out)
+    # module level (rare but real: scripts donating at top level)
+    scan = _DonationScan(ctx, tj_aliases, donating)
+    scan._stmts([s for s in ctx.tree.body
+                 if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                       ast.ClassDef))])
+    out.extend(scan.out)
+    return out
+
+
+def _check_fl003(ctx) -> List:
+    out: List = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn.name == "__init__":
+            continue                        # first bind: nothing cached yet
+        rebinds = []
+        invalidates = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    for sub in ast.walk(t):
+                        if (isinstance(sub, ast.Attribute)
+                                and sub.attr == "state"
+                                and isinstance(sub.ctx, ast.Store)):
+                            rebinds.append(sub)
+            elif isinstance(node, ast.Call):
+                f = node.func
+                if (isinstance(f, ast.Attribute)
+                        and f.attr in _INVALIDATE_NAMES):
+                    invalidates = True
+                elif isinstance(f, ast.Name) and f.id in _INVALIDATE_NAMES:
+                    invalidates = True
+        if rebinds and not invalidates:
+            for r in rebinds:
+                out.append(ctx.violation(
+                    "FL003", r,
+                    f"'{fn.name}' rebinds a .state attribute without "
+                    "calling query_engine.invalidate() — stale cached "
+                    "counts survive the swap (flush→invalidate contract)"))
+    return out
+
+
+FL002 = Rule(
+    id="FL002",
+    summary="no read of a binding after it was passed to a donating call",
+    scope="all",
+    check=_check_fl002,
+)
+
+FL003 = Rule(
+    id="FL003",
+    summary="every .state rebind must invalidate the paired query engine",
+    scope="src",
+    check=_check_fl003,
+)

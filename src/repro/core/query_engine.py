@@ -84,7 +84,13 @@ class BatchedQueryEngine:
         # their cache inserts on it so a count probed against a pre-drain
         # state is never remembered after the drain invalidated.
         self._epoch = 0
+        # opt-in happens-before recorder (analysis.race_harness.attach)
+        self.tracer = None
         self.stats = QueryEngineStats()
+
+    def _trace(self, kind: str, resource=None, rw=None, **meta) -> None:
+        if self.tracer is not None:
+            self.tracer.record(kind, resource=resource, rw=rw, **meta)
 
     # -- cache maintenance --------------------------------------------------
     def invalidate(self) -> None:
@@ -93,6 +99,7 @@ class BatchedQueryEngine:
         bumps the epoch fence — a lookup racing this call will drop its
         (now possibly stale) cache inserts."""
         self._epoch += 1
+        self._trace("invalidate", "cache", "w", epoch=self._epoch)
         if self._hot:
             self._hot.clear()
             self.stats.invalidations += 1
@@ -127,6 +134,7 @@ class BatchedQueryEngine:
             # skip the per-key probe loop entirely
             miss_idx = np.flatnonzero(uniq != tj.EMPTY).tolist()
         else:
+            self._trace("cache_read", "cache", "r")
             miss_idx = []
             for i, k in enumerate(uniq):
                 if k == tj.EMPTY:
@@ -139,6 +147,7 @@ class BatchedQueryEngine:
                     self.stats.cache_hits += 1
         if miss_idx:
             epoch = self._epoch          # fence: inserts only if unchanged
+            self._trace("lookup_begin", "state", "r", epoch=epoch)
             miss = uniq[miss_idx]
             self.stats.device_queries += miss.size
             got = np.empty(miss.size, np.int64)
@@ -161,11 +170,13 @@ class BatchedQueryEngine:
                                                int(dist.max()))
             ucnt[miss_idx] = got
             if epoch == self._epoch:
+                self._trace("cache_insert", "cache", "w", epoch=epoch)
                 for k, c in zip(miss, got):
                     self._remember(int(k), int(c))
             else:
                 # a drain invalidated mid-lookup: these counts may predate
                 # it, so they must not outlive the invalidation
+                self._trace("lookup_fenced", epoch=self._epoch)
                 self.stats.fenced += miss.size
         return ucnt[inv]
 

@@ -59,6 +59,13 @@ def _flat_i64(x) -> np.ndarray:
     return np.asarray(x).reshape(-1).astype(np.int64)
 
 
+class DrainError(RuntimeError):
+    """A background drain job died. Raised at the durability barrier
+    (``flush(wait=True)`` / ``stats()`` / ``close()``), naming the
+    failing job and chunk; the worker's original exception rides along
+    as ``__cause__`` with its full traceback."""
+
+
 # ---------------------------------------------------------------------------
 # the drain dispatcher: one worker thread + state lock per store
 # ---------------------------------------------------------------------------
@@ -91,10 +98,15 @@ class FlushDispatcher:
         self.enabled = bool(enabled)
         self.lock = threading.RLock()
         self.ledger = None            # WriteEngineStats sink (set by owner)
+        # opt-in happens-before recorder (analysis.race_harness.attach):
+        # when set, submit/wait emit fork/join edges and job markers
+        self.tracer = None
         self._pool = (ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="flashstore-drain")
             if self.enabled else None)
         self._future = None
+        self._job_info = None         # (done-snapshot holder, job#, label)
+        self._jobs = 0
         self._closed = False
 
     def _charge(self, field: str, t0: float) -> None:
@@ -102,45 +114,81 @@ class FlushDispatcher:
             us = int((time.perf_counter() - t0) * 1e6)
             setattr(self.ledger, field, getattr(self.ledger, field) + us)
 
+    def trace(self, kind: str, resource=None, rw=None, **meta) -> None:
+        """Record one harness event; free no-op when no tracer attached."""
+        if self.tracer is not None:
+            self.tracer.record(kind, resource=resource, rw=rw, **meta)
+
     @property
     def pending(self) -> bool:
         """A submitted job has not been waited out yet (it may still be
         running, or be finished holding an un-raised exception)."""
         return self._future is not None
 
-    def submit(self, fn) -> None:
+    def submit(self, fn, label: Optional[str] = None) -> None:
         """Run one sealed-buffer drain under the state lock: on the
         worker when async, inline when not. Any previous in-flight drain
-        is waited out first (there are exactly two buffers)."""
+        is waited out first (there are exactly two buffers). ``label``
+        names the chunk in the :class:`DrainError` should the job die."""
         if self._closed:
             raise ValueError("dispatcher is closed")
         self.wait()
+        job = self._jobs
+        self._jobs += 1
         if not self.enabled:
+            self.trace("job_start", job=job, label=label)
             t0 = time.perf_counter()
-            with self.lock:
-                fn()
-            self._charge("stall_us", t0)
+            try:
+                with self.lock:
+                    fn()
+            finally:
+                self.trace("job_end", job=job)
+                self._charge("stall_us", t0)
             return
 
+        tr = self.tracer
+        snap = tr.fork() if tr is not None else None
+        done = {}
+
         def run():
+            if tr is not None:        # submit → job-start edge
+                tr.join(snap)
+                tr.record("job_start", job=job, label=label)
             t0 = time.perf_counter()
-            with self.lock:
-                fn()
+            try:
+                with self.lock:
+                    fn()
+            finally:
+                if tr is not None:
+                    tr.record("job_end", job=job)
+                    done["snap"] = tr.fork()
             self._charge("overlap_us", t0)
 
+        self._job_info = (done, job, label)
         self._future = self._pool.submit(run)
 
     def wait(self) -> None:
         """Durability barrier: block until the in-flight drain (if any)
-        lands, re-raising its exception in the caller."""
+        lands. A worker exception re-raises here as a :class:`DrainError`
+        naming the job and its sealed chunk, chained (``from exc``) to
+        the original so the worker-side traceback survives."""
         f, self._future = self._future, None
+        info, self._job_info = self._job_info, None
         if f is None:
             return
         t0 = time.perf_counter()
         try:
             f.result()
+        except Exception as exc:
+            done, job, label = info if info else ({}, "?", None)
+            chunk = f" ({label})" if label else ""
+            raise DrainError(
+                f"background drain job #{job}{chunk} failed: {exc}"
+            ) from exc
         finally:
             self._charge("stall_us", t0)
+        if self.tracer is not None and info:
+            self.tracer.join(info[0].get("snap"))  # job-end → barrier edge
 
     def close(self) -> None:
         """Join the worker (completing any in-flight drain). Idempotent;
@@ -170,6 +218,9 @@ class SimBackend:
     top."""
 
     name = "sim"
+    # shared with the drain worker; flashlint FL006 holds every access
+    # to the state lock (or an audited under-lock/quiescent method)
+    _fl_guarded = ("_inflight", "_dirty")
 
     def __init__(self, geom=None, scheme: str = "MDB-L",
                  ram_buffer_pct: float = 5.0,
@@ -193,6 +244,7 @@ class SimBackend:
         self._buf: Dict[int, int] = {}
         self._inflight: Optional[Dict[int, int]] = None
         self._dirty = False          # sim holds undrained/unmerged entries
+        self._seals = 0
         self.stats_ledger = WriteEngineStats()
         self._disp.ledger = self.stats_ledger
 
@@ -214,14 +266,17 @@ class SimBackend:
                 led.cancelled += 1
         led.buffered += n_new
         led.deduped += n_valid - n_new
+        self._disp.trace("hr_write", "hr:active", "w")
         if len(self._buf) >= self.flush_threshold:
             led.auto_flushes += 1
             self.drain(wait=False)
 
     def _settle(self) -> None:
-        if self._inflight is not None or self._disp.pending:
+        # benign unlocked probe: worst case we barrier redundantly
+        if (self._inflight is not None        # flashlint: disable=FL006
+                or self._disp.pending):
             self._disp.wait()
-        if self._inflight is not None:
+        if self._inflight is not None:        # flashlint: disable=FL006
             # still sealed after the barrier: its replay died (the worker
             # clears it on success; the barrier re-raised the error once)
             raise RuntimeError(
@@ -229,7 +284,7 @@ class SimBackend:
                 "chunk was never delivered — reopen from the last "
                 "durable state")
 
-    def _seal(self) -> Optional[tuple]:
+    def _seal(self) -> Optional[tuple]:  # flashlint: quiescent (post-settle)
         if not self._buf:
             return None
         if self._inflight is not None:
@@ -242,9 +297,12 @@ class SimBackend:
         order = np.argsort(keys, kind="stable")
         self._inflight = self._buf
         self._buf = {}
+        self._seals += 1
+        self._disp.trace("swap", "hr:active", "w")
+        self._disp.trace("seal", "hr:inflight", "w", entries=keys.size)
         return keys[order], dels[order]
 
-    def _replay(self, keys, dels, merge: bool) -> None:
+    def _replay(self, keys, dels, merge: bool) -> None:  # flashlint: under-lock
         # worker side, under the dispatcher lock
         led = self.stats_ledger
         if keys is not None:
@@ -253,6 +311,7 @@ class SimBackend:
             led.dispatched_entries += keys.size
             self._dirty = True
             self._inflight = None
+            self._disp.trace("inflight_clear", "hr:inflight", "w")
             led.flushes += 1
         if merge:
             self.table.finalize()
@@ -266,26 +325,33 @@ class SimBackend:
         sealed = self._seal()
         if sealed is not None:
             k, d = sealed
-            self._disp.submit(lambda: self._replay(k, d, merge=False))
+            self._disp.submit(lambda: self._replay(k, d, merge=False),
+                              label=f"sim-drain#{self._seals}:{k.size}e")
         if wait:
             self._disp.wait()
 
-    def flush(self, wait: bool = True) -> None:       # durability point
+    def flush(self, wait: bool = True) -> None:  # durability point
         self._settle()
         sealed = self._seal()
-        if sealed is None and not self._dirty:
+        # post-settle probe: no job in flight, the flag is stable
+        if sealed is None and not self._dirty:  # flashlint: disable=FL006
             if wait:
                 self._disp.wait()
             return                    # complete no-op
         k, d = sealed if sealed is not None else (None, None)
-        self._disp.submit(lambda: self._replay(k, d, merge=True))
+        n = 0 if k is None else k.size
+        self._disp.submit(lambda: self._replay(k, d, merge=True),
+                          label=f"sim-flush#{self._seals}:{n}e")
         if wait:
             self._disp.wait()
 
     # -- read-your-writes ---------------------------------------------------
-    def pending(self, keys) -> np.ndarray:
+    def pending(self, keys) -> np.ndarray:  # flashlint: under-lock
         flat = _flat_i64(keys)
         buf, inf = self._buf, self._inflight
+        self._disp.trace("hr_read", "hr:active", "r")
+        if inf:
+            self._disp.trace("hr_read", "hr:inflight", "r")
         if not buf and not inf:
             return np.zeros(flat.size, np.int64)
         return np.fromiter(
@@ -299,7 +365,9 @@ class SimBackend:
         return base + pend
 
     def pending_entries(self) -> int:
-        inf = self._inflight
+        # benign unlocked snapshot (monitoring only, may be momentarily
+        # stale); never used for control flow
+        inf = self._inflight                  # flashlint: disable=FL006
         return (len(self._buf) + (len(inf) if inf else 0)
                 + len(self.table.ram.items))
 
@@ -346,6 +414,9 @@ class DeviceBackend:
     wear-aware eviction policies (`serving/prefix_cache`)."""
 
     name = "device"
+    # wear ledgers are mutated by _on_drain on the drain worker; FL006
+    # holds every access to the state lock or an audited method
+    _fl_guarded = ("_heat", "_staged_parts")
 
     def __init__(self, cfg=None, state=None, chunk: int = 4096,
                  query_chunk: int = 1024,
@@ -381,7 +452,7 @@ class DeviceBackend:
             return np.asarray(s) // self.cfg.blocks_per_partition
         return np.asarray(s)
 
-    def _on_drain(self, keys: Optional[np.ndarray], wear_delta: int) -> None:
+    def _on_drain(self, keys, wear_delta: int) -> None:  # flashlint: under-lock
         if keys is not None:                 # H_R drain: staged entries
             parts, counts = np.unique(self._partition_of(keys),
                                       return_counts=True)
@@ -497,6 +568,9 @@ class ShardedBackend:
     """
 
     name = "sharded"
+    # shared with the drain worker; flashlint FL006 holds every access
+    # to the state lock (or an audited under-lock/quiescent method)
+    _fl_guarded = ("state", "_inflight", "_staged_dirty")
 
     def __init__(self, cfg=None, mesh=None, axis: str = "table",
                  num_shards: Optional[int] = None,
@@ -555,6 +629,7 @@ class ShardedBackend:
         # slot (under the dispatcher lock) once its entries are on device
         self._inflight: List[Optional[Dict[int, int]]] = [None] * n
         self._staged_dirty = False    # staged entries since last merge
+        self._seals = 0
         self._disp = FlushDispatcher(enabled=async_flush)
         self.stats_ledger = WriteEngineStats()
         self._disp.ledger = self.stats_ledger
@@ -586,6 +661,7 @@ class ShardedBackend:
                 led.cancelled += 1
         led.buffered += n_new
         led.deduped += n_valid - n_new
+        self._disp.trace("hr_write", "hr:active", "w")
         hot = [i for i, b in enumerate(self._buf)
                if len(b) >= self.flush_threshold]
         if hot:
@@ -596,10 +672,11 @@ class ShardedBackend:
             self.piggybacked += len(ride)
             self.drain(shards=hot + ride, wait=False)
 
-    def _seal(self, shards: Optional[List[int]]) -> Optional[Dict]:
+    def _seal(self, shards=None) -> Optional[Dict]:  # flashlint: quiescent
         """Seal the selected shards' H_R partitions: each sealed dict
         becomes that shard's in-flight overlay and a fresh dict takes its
-        place. Returns {shard: (sorted keys, deltas)} or None."""
+        place. Returns {shard: (sorted keys, deltas)} or None. Callers
+        run it post-settle (no drain in flight)."""
         n = self.cfg.num_shards
         sel = [s for s in (range(n) if shards is None else shards)
                if self._buf[s]]
@@ -620,8 +697,12 @@ class ShardedBackend:
                     f"wait out the previous drain first")
             self._inflight[s] = b
             self._buf[s] = dict()
+            self._disp.trace("seal", f"hr:inflight[{s}]", "w",
+                             entries=len(b))
+        self._seals += 1
         return per_shard
 
+    # flashlint: under-lock (drain-worker body, submitted via dispatcher)
     def _drain_sealed(self, per_shard: Dict) -> None:
         """Dispatch sealed shard partitions to their owners' change
         segments (no forced merge) — worker side, under the dispatcher
@@ -652,14 +733,17 @@ class ShardedBackend:
             self.carried += int(np.asarray(n_carry).sum())
         import jax
         jax.block_until_ready(self.state)   # durable, not merely queued (§9)
+        self._disp.trace("state_rebind", "state", "w")
         self._staged_dirty = True
         for s, (ks, _vs) in per_shard.items():
             led.dispatched_entries += ks.size
             self._inflight[s] = None
+            self._disp.trace("inflight_clear", f"hr:inflight[{s}]", "w")
         led.flushes += 1
         self.query_engine.invalidate()
         led.invalidations += 1
 
+    # flashlint: under-lock (drain-worker body, submitted via dispatcher)
     def _merge_device(self) -> None:
         """Force the device merge of all staged change segments — worker
         side, under the dispatcher lock."""
@@ -669,6 +753,7 @@ class ShardedBackend:
         assert_live(self.state)
         self.state = self._mrg(self.state)
         jax.block_until_ready(self.state)
+        self._disp.trace("state_rebind", "state", "w")
         self.stats_ledger.merges += 1
         self._staged_dirty = False
         self.query_engine.invalidate()
@@ -677,10 +762,16 @@ class ShardedBackend:
     def _stall_if_inflight(self) -> None:
         """Wait out in-flight work before sealing or a no-op decision:
         undrained sealed partitions (both buffers busy) or a running job
-        whose merge phase has yet to settle ``_staged_dirty``."""
-        if any(b is not None for b in self._inflight) or self._disp.pending:
+        whose merge phase has yet to settle ``_staged_dirty``.
+
+        The pre-barrier probes are benign unlocked reads: worst case a
+        redundant barrier."""
+        if (any(b is not None
+                for b in self._inflight)      # flashlint: disable=FL006
+                or self._disp.pending):
             self._disp.wait()
-        if any(b is not None for b in self._inflight):
+        if any(b is not None
+               for b in self._inflight):      # flashlint: disable=FL006
             # still sealed after the barrier: the drain died (the worker
             # clears every drained slot; the barrier re-raised the error)
             raise RuntimeError(
@@ -695,7 +786,9 @@ class ShardedBackend:
         self._stall_if_inflight()
         per_shard = self._seal(shards)
         if per_shard is not None:
-            self._disp.submit(lambda: self._drain_sealed(per_shard))
+            self._disp.submit(lambda: self._drain_sealed(per_shard),
+                              label=f"shard-drain#{self._seals}:"
+                                    f"shards{sorted(per_shard)}")
         if wait:
             self._disp.wait()
 
@@ -706,7 +799,10 @@ class ShardedBackend:
         device nor the hot cache."""
         self._stall_if_inflight()
         per_shard = self._seal(None)
-        if per_shard is None and not self._staged_dirty:
+        # post-settle probe: no job is in flight here, so the flag is
+        # stable until we submit below
+        if (per_shard is None
+                and not self._staged_dirty):  # flashlint: disable=FL006
             if wait:
                 self._disp.wait()
             return
@@ -716,21 +812,30 @@ class ShardedBackend:
                 self._drain_sealed(per_shard)
             self._merge_device()
 
-        self._disp.submit(job)
+        shards = sorted(per_shard) if per_shard else []
+        self._disp.submit(job, label=f"shard-flush#{self._seals}:"
+                                     f"shards{shards}")
         if wait:
             self._disp.wait()
 
     # -- read-your-writes ---------------------------------------------------
     def pending_entries(self) -> int:
+        # benign unlocked snapshot (monitoring only, may be momentarily
+        # stale); never used for control flow
         return (sum(len(b) for b in self._buf)
-                + sum(len(b) for b in self._inflight if b))
+                + sum(len(b)
+                      for b in self._inflight if b))  # flashlint: disable=FL006
 
-    def pending(self, keys) -> np.ndarray:
+    def pending(self, keys) -> np.ndarray:  # flashlint: under-lock
         """Not-yet-durable Δ per key: active + in-flight partition of the
         key's owner shard. Call under the dispatcher lock (the worker
         clears in-flight slots under it, atomically with the state
         rebind)."""
         flat = _flat_i64(keys)
+        self._disp.trace("hr_read", "hr:active", "r")
+        for s, b in enumerate(self._inflight):
+            if b:
+                self._disp.trace("hr_read", f"hr:inflight[{s}]", "r")
         if not any(self._buf) and not any(self._inflight):
             return np.zeros(flat.size, np.int64)
         owners = self.owner_of(flat)
@@ -750,7 +855,7 @@ class ShardedBackend:
     def partition_heat(self, keys) -> np.ndarray:
         return np.zeros(_flat_i64(keys).size)     # not tracked per shard yet
 
-    def wear(self) -> Dict[str, int]:
+    def wear(self) -> Dict[str, int]:  # flashlint: quiescent
         """Device wear counters summed across shards."""
         self._disp.wait()             # quiesce: device counters settled
         s = self.state.stats
@@ -941,5 +1046,5 @@ class FlashStore:
         return self._b.partition_heat(keys)
 
 
-__all__ = ["FlashStore", "FlushDispatcher", "SimBackend", "DeviceBackend",
-           "ShardedBackend", "EMPTY"]
+__all__ = ["FlashStore", "FlushDispatcher", "DrainError", "SimBackend",
+           "DeviceBackend", "ShardedBackend", "EMPTY"]

@@ -133,6 +133,10 @@ class BatchedWriteEngine:
     ``table_jax.update``; double-buffered async drains with a dispatcher
     attached (DESIGN.md §9)."""
 
+    # shared with the drain worker; flashlint FL006 holds every access
+    # to the state lock (or an audited under-lock/quiescent method)
+    _fl_guarded = ("state", "_inflight", "_staged_dirty")
+
     def __init__(self, cfg, state=None, chunk: int = 4096,
                  flush_threshold: Optional[int] = None,
                  query_engine=None,
@@ -174,6 +178,7 @@ class BatchedWriteEngine:
         # the first merge() must really run (the pre-PR5 unconditional
         # behaviour), not take the no-op path.
         self._staged_dirty = state is not None
+        self._seals = 0
         self.stats = WriteEngineStats()
         if dispatcher is not None:
             dispatcher.ledger = self.stats
@@ -182,15 +187,22 @@ class BatchedWriteEngine:
         return (self.dispatcher.lock if self.dispatcher is not None
                 else contextlib.nullcontext())
 
-    def _submit(self, fn) -> None:
+    def _submit(self, fn, label: Optional[str] = None) -> None:
         if self.dispatcher is None:
             fn()
         else:
-            self.dispatcher.submit(fn)
+            self.dispatcher.submit(fn, label=label)
 
     def _barrier(self) -> None:
         if self.dispatcher is not None:
             self.dispatcher.wait()
+
+    def _trace(self, kind: str, resource=None, rw=None, **meta) -> None:
+        """Happens-before harness event; free no-op unless a tracer is
+        attached to the dispatcher (analysis.race_harness)."""
+        d = self.dispatcher
+        if d is not None and getattr(d, "tracer", None) is not None:
+            d.tracer.record(kind, resource=resource, rw=rw, **meta)
 
     def _settle(self) -> None:
         """Wait out any in-flight work before sealing or taking a no-op
@@ -206,17 +218,21 @@ class BatchedWriteEngine:
         poisoned — fail every subsequent write path loudly rather than
         silently dropping the chunk (reads keep overlaying it).
         ``close()`` still releases the worker (`FlashStore.close` shuts
-        the dispatcher down in a ``finally``)."""
-        if self._inflight is not None or (
-                self.dispatcher is not None and self.dispatcher.pending):
+        the dispatcher down in a ``finally``).
+
+        The pre-barrier probes are benign unlocked reads: worst case a
+        redundant barrier."""
+        if (self._inflight is not None        # flashlint: disable=FL006
+                or (self.dispatcher is not None
+                    and self.dispatcher.pending)):
             self._barrier()
-        if self._inflight is not None:
+        if self._inflight is not None:        # flashlint: disable=FL006
             raise RuntimeError(
                 "store is poisoned: a drain failed and its sealed H_R "
                 "chunk was never delivered — reopen from the last durable "
                 "state")
 
-    def _tile_stores(self) -> int:
+    def _tile_stores(self) -> int:  # flashlint: under-lock
         return int(np.asarray(self.state.stats.tile_stores))
 
     # -- the buffered write path --------------------------------------------
@@ -238,10 +254,12 @@ class BatchedWriteEngine:
                 self.stats.cancelled += 1
         self.stats.buffered += n_new
         self.stats.deduped += n_valid - n_new
+        self._trace("hr_write", "hr:active", "w")
         if len(buf) >= self.flush_threshold:
             self.stats.auto_flushes += 1
             self.flush(wait=False)
 
+    # flashlint: quiescent (callers seal post-settle; see the docstring)
     def seal(self) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         """Swap H_R: the active buffer becomes the sealed in-flight chunk
         (read-only from here; reads keep overlaying it until its drain
@@ -263,8 +281,12 @@ class BatchedWriteEngine:
         order = np.argsort(keys, kind="stable")   # deterministic dispatch
         self._inflight = self._buf
         self._buf = {}
+        self._seals += 1
+        self._trace("swap", "hr:active", "w")
+        self._trace("seal", "hr:inflight", "w", entries=keys.size)
         return keys[order], dels[order]
 
+    # flashlint: under-lock (drain-worker body, submitted via dispatcher)
     def _dispatch(self, keys: np.ndarray, dels: np.ndarray) -> None:
         """Drain one sealed chunk to the device change segment (stage, no
         forced merge): EMPTY-padded fixed-shape chunks, donated
@@ -298,13 +320,16 @@ class BatchedWriteEngine:
             # dispatcher keep the bare pre-PR5 dispatch-and-go.
             self._jax.block_until_ready(self.state)
         self.stats.dispatched_entries += keys.size
+        self._trace("state_rebind", "state", "w")
         self._staged_dirty = True
         self._inflight = None
+        self._trace("inflight_clear", "hr:inflight", "w")
         self.stats.flushes += 1
         self._invalidate()
         if self.on_flush:
             self.on_flush(keys, self._tile_stores() - wear_before)
 
+    # flashlint: under-lock (drain-worker body, submitted via dispatcher)
     def _merge_device(self) -> None:
         """Force the device merge of the staged change segment (runs on
         the drain worker under the dispatcher lock, or inline)."""
@@ -314,6 +339,7 @@ class BatchedWriteEngine:
         self.state = tj.flush(self.cfg, self.state)
         if self.dispatcher is not None:
             self._jax.block_until_ready(self.state)   # durable, not queued
+        self._trace("state_rebind", "state", "w")
         self.stats.merges += 1
         self._staged_dirty = False
         # conservative: the merge moves placement, not counts, but clear
@@ -331,10 +357,14 @@ class BatchedWriteEngine:
         sealed = self.seal()
         if sealed is not None:
             keys, dels = sealed
-            self._submit(lambda: self._dispatch(keys, dels))
+            self._submit(lambda: self._dispatch(keys, dels),
+                         label=f"hr-drain#{self._seals}:{keys.size}e")
         if wait:
             self._barrier()
-        return self.state
+        # with wait=False a drain may still be rebinding the state: take
+        # the lock so callers never observe a half-donated snapshot
+        with self._lock():
+            return self.state
 
     def merge(self, wait: bool = True):
         """Flush H_R, then force the device merge of any staged change
@@ -343,22 +373,27 @@ class BatchedWriteEngine:
         — touches neither the device nor the hot cache."""
         self._settle()
         sealed = self.seal()
-        if sealed is None and not self._staged_dirty:
-            # no-op path: crucially, no cache invalidation (a flush of an
-            # empty engine must not evict every hot key)
+        # post-settle probe: no job is in flight here, so the flag and
+        # the state are stable until we submit below
+        if (sealed is None
+                and not self._staged_dirty):  # flashlint: disable=FL006
             if wait:
                 self._barrier()
-            return self.state
+            # no-op path: crucially, no cache invalidation (a flush of
+            # an empty engine must not evict every hot key)
+            return self.state                 # flashlint: disable=FL006
 
         def job():
             if sealed is not None:
                 self._dispatch(*sealed)
             self._merge_device()
 
-        self._submit(job)
+        n = 0 if sealed is None else sealed[0].size
+        self._submit(job, label=f"hr-merge#{self._seals}:{n}e")
         if wait:
             self._barrier()
-        return self.state
+        with self._lock():
+            return self.state
 
     # finalize is the adapter-facing spelling of the same operation
     finalize = merge
@@ -373,11 +408,12 @@ class BatchedWriteEngine:
     def buffered_entries(self) -> int:
         """Unique (token, Δ) entries not yet durable on device: the
         active H_R buffer plus the sealed in-flight chunk (if a drain is
-        running)."""
-        inf = self._inflight
+        running). Benign unlocked snapshot (monitoring only, may be
+        momentarily stale); never used for control flow."""
+        inf = self._inflight                  # flashlint: disable=FL006
         return len(self._buf) + (len(inf) if inf else 0)
 
-    def pending(self, keys) -> np.ndarray:
+    def pending(self, keys) -> np.ndarray:  # flashlint: under-lock
         """Not-yet-durable Δ per key — the overlay a consolidated read
         must add on top of the device count: the active H_R buffer plus
         the sealed in-flight chunk. Call under the dispatcher lock when
@@ -385,6 +421,9 @@ class BatchedWriteEngine:
         under that lock, atomically with the device state rebind)."""
         flat = np.asarray(keys).reshape(-1)
         buf, inf = self._buf, self._inflight
+        self._trace("hr_read", "hr:active", "r")
+        if inf:
+            self._trace("hr_read", "hr:inflight", "r")
         if not buf and not inf:
             return np.zeros(flat.size, np.int64)
         if inf:

@@ -1,0 +1,8 @@
+"""flashlint fixture: FL002 — reading a binding after donating it."""
+from repro.core import table_jax as tj
+
+
+def drain_once(cfg, state, toks):
+    new_state = tj.update(cfg, state, toks)   # donates ``state``
+    stale = state.keys                        # read of the spent binding
+    return new_state, stale

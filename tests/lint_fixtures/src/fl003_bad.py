@@ -1,0 +1,10 @@
+"""flashlint fixture: FL003 — a .state rebind with no invalidation."""
+
+
+class ForgetfulBackend:
+    def __init__(self, state, query_engine):
+        self.state = state                    # first bind: exempt
+        self.query_engine = query_engine
+
+    def drain(self, new_state):
+        self.state = new_state                # stale cache survives this

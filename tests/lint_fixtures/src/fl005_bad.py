@@ -1,0 +1,7 @@
+"""flashlint fixture: FL005 — an *aliased* deprecated-shim import, the
+case the old ``forbid-shims`` CI grep could not see through."""
+from repro.core.tfidf import DeviceTableAdapter as DTA
+
+
+def open_table(cfg):
+    return DTA(cfg)

@@ -1,0 +1,20 @@
+"""flashlint fixture: FL006 — guarded field touched outside the lock."""
+
+
+class LeakyEngine:
+    _fl_guarded = ("state", "_inflight")
+
+    def __init__(self, dispatcher, state):
+        self.dispatcher = dispatcher
+        self.state = state                    # __init__: exempt
+        self._inflight = None
+
+    def _lock(self):
+        return self.dispatcher.lock
+
+    def peek(self):
+        return self.state                     # unlocked guarded read
+
+    def snapshot(self):
+        with self._lock():
+            return self.state                 # correctly locked

@@ -219,13 +219,19 @@ def test_drain_error_surfaces_at_barrier_and_poisons():
     after which the store is poisoned: the undelivered sealed chunk is
     never silently dropped (reads keep overlaying it, writes fail
     loudly), and close() still joins the worker and ends closed."""
+    from repro.core.store import DrainError
     st = _open("device", flush_threshold=10_000)
     st.update(np.arange(10))
     # poison the dispatch: donate the state out from under the engine
     tj.flush(st.cfg, st.state)
     st.drain(wait=False)
-    with pytest.raises(RuntimeError, match="donated"):
+    with pytest.raises(DrainError, match="donated") as ei:
         st.flush(wait=True)
+    # the barrier error names the sealed chunk (regression: it used to
+    # re-raise the bare worker exception, losing which drain died) and
+    # chains the worker-side traceback
+    assert "hr-drain#1:10e" in str(ei.value)
+    assert isinstance(ei.value.__cause__, RuntimeError)
     # the sealed chunk is still the read overlay, not silently dropped
     assert st.buffered_entries == 10
     with pytest.raises(RuntimeError, match="poisoned"):
@@ -247,7 +253,7 @@ def test_assert_live_guard_rejects_stale_state():
     state = tj.init(cfg)
     state2 = tj.update(cfg, state, np.arange(8, dtype=np.int32))
     with pytest.raises(RuntimeError, match="donated"):
-        tj.assert_live(state)
+        tj.assert_live(state)            # flashlint: disable=FL002 (the point)
     tj.assert_live(state2)               # live state passes
 
 
@@ -347,7 +353,9 @@ def test_overlap_and_stall_ledgers():
 
 def test_dispatcher_serializes_and_propagates():
     """FlushDispatcher unit contract: jobs run in order on one worker,
-    wait() re-raises, close() is idempotent."""
+    wait() re-raises as a DrainError naming the failing chunk and
+    chaining the worker's original exception, close() is idempotent."""
+    from repro.core.store import DrainError
     d = FlushDispatcher(enabled=True)
     order = []
     d.submit(lambda: order.append(1))
@@ -358,9 +366,15 @@ def test_dispatcher_serializes_and_propagates():
     def boom():
         raise ValueError("drain died")
 
-    d.submit(boom)
-    with pytest.raises(ValueError, match="drain died"):
+    d.submit(boom, label="hr-drain#3:17e")
+    with pytest.raises(DrainError, match="drain died") as ei:
         d.wait()
+    # the barrier error names the job and its sealed chunk, and chains
+    # the worker's original exception with its traceback (raise ... from)
+    assert "job #2" in str(ei.value)
+    assert "hr-drain#3:17e" in str(ei.value)
+    assert type(ei.value.__cause__) is ValueError
+    assert ei.value.__cause__.__traceback__ is not None
     d.close()
     d.close()
     with pytest.raises(ValueError):

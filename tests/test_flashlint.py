@@ -1,0 +1,95 @@
+"""flashlint: the contract checker (ISSUE 6 tentpole).
+
+Acceptance: every seeded fixture violation (one file per rule, under
+``tests/lint_fixtures/src``) is flagged with its rule id and file:line,
+the real tree lints clean, the CLI fails closed on empty input, and
+suppression comments work."""
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import flashlint
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "lint_fixtures" / "src"
+TREE = [REPO / "src", REPO / "tests", REPO / "benchmarks",
+        REPO / "examples"]
+
+
+@pytest.mark.parametrize("rule", ["FL001", "FL002", "FL003", "FL004",
+                                  "FL005", "FL006"])
+def test_each_fixture_trips_exactly_its_rule(rule):
+    fixture = FIXTURES / f"{rule.lower()}_bad.py"
+    vs = flashlint.lint_file(fixture)
+    assert vs, f"{fixture.name} should trip {rule}"
+    assert {v.rule for v in vs} == {rule}
+    assert all(v.line > 0 for v in vs)
+    # the formatted line carries file:line:col + the rule id
+    assert re.match(rf".*{rule.lower()}_bad\.py:\d+:\d+: {rule} ",
+                    vs[0].format())
+
+
+def test_cli_nonzero_on_fixtures_zero_on_tree(capsys):
+    rc = flashlint.main([str(FIXTURES)])
+    out = capsys.readouterr()
+    assert rc == 1
+    for rule in ["FL001", "FL002", "FL003", "FL004", "FL005", "FL006"]:
+        assert rule in out.out, f"{rule} missing from CLI output"
+    assert re.search(r"fl001_bad\.py:\d+:\d+: FL001", out.out)
+
+
+def test_tree_is_clean():
+    """The ISSUE-6 acceptance gate, callable from pytest as well as the
+    CI lint-contracts job."""
+    violations, n_files = flashlint.lint_paths(TREE)
+    assert n_files > 50
+    assert violations == [], "\n".join(v.format() for v in violations)
+
+
+def test_recursive_walk_skips_fixture_trees():
+    files = list(flashlint.iter_py_files([REPO / "tests"]))
+    assert files, "walk found no test files"
+    assert not [f for f in files if "lint_fixtures" in f.parts]
+
+
+def test_fail_closed_on_empty_input(tmp_path, capsys):
+    assert flashlint.main([str(tmp_path)]) == 2
+    assert "no Python files" in capsys.readouterr().err
+
+
+def test_unknown_rule_select_rejected():
+    with pytest.raises(ValueError, match="FL999"):
+        flashlint.lint_file(FIXTURES / "fl001_bad.py", select=["FL999"])
+
+
+def test_line_and_file_suppressions(tmp_path):
+    mod = tmp_path / "src" / "mod.py"
+    mod.parent.mkdir()
+    mod.write_text(
+        "import threading  # flashlint: disable=FL004\n"
+        "import _thread\n")
+    vs = flashlint.lint_file(mod)
+    assert [v.rule for v in vs] == ["FL004"]
+    assert vs[0].line == 2                    # only the unsuppressed one
+    mod.write_text(
+        "# flashlint: disable-file=FL004\n"
+        "import threading\n"
+        "import _thread\n")
+    assert flashlint.lint_file(mod) == []
+
+
+def test_src_scoping(tmp_path):
+    """src-scoped rules stay quiet outside a src tree (tests and
+    benchmarks legitimately construct engines and threads)."""
+    mod = tmp_path / "helpers.py"
+    mod.write_text("import threading\n")
+    assert flashlint.lint_file(mod) == []
+
+
+def test_syntax_error_is_a_violation(tmp_path):
+    bad = tmp_path / "src" / "broken.py"
+    bad.parent.mkdir()
+    bad.write_text("def oops(:\n")
+    vs = flashlint.lint_file(bad)
+    assert [v.rule for v in vs] == ["FL000"]

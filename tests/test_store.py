@@ -151,8 +151,9 @@ def test_sharded_shard_local_thresholds():
 def test_engine_shims_are_gone():
     """ROADMAP "Engine shim removal": the deprecated pre-PR4 surfaces
     (`DeviceTableAdapter`, `make_device_table`, `CorpusStats(engine=/
-    writer=)`) were deleted in PR 5 — the store is the only way in. CI's
-    forbid-shims lint step greps the source tree for the same names."""
+    writer=)`) were deleted in PR 5 — the store is the only way in.
+    flashlint rule FL005 (CI's lint-contracts job) keeps them deleted —
+    import-aware, so aliased reintroductions are caught too."""
     import inspect
 
     from repro.core import tfidf
@@ -204,21 +205,15 @@ def test_corpus_stats_sharded_backend():
 
 def test_engine_pairing_lives_only_in_store():
     """Acceptance guard: no consumer module constructs the engine pair
-    by hand anymore — the store is the only wiring point."""
-    import ast
-    root = Path(__file__).resolve().parent.parent / "src" / "repro"
-    offenders = []
-    for py in root.rglob("*.py"):
-        if py.name in ("store.py", "write_engine.py", "query_engine.py"):
-            continue
-        tree = ast.parse(py.read_text())
-        for node in ast.walk(tree):
-            if (isinstance(node, ast.Call)
-                    and isinstance(node.func, ast.Name)
-                    and node.func.id in ("BatchedWriteEngine",
-                                         "BatchedQueryEngine")):
-                offenders.append(f"{py}:{node.lineno}")
-    assert not offenders, f"manual engine wiring: {offenders}"
+    by hand anymore — the store is the only wiring point. The AST walk
+    that used to live here is now flashlint rule FL001 (ISSUE 6); this
+    thin check keeps the property pinned to this suite."""
+    from repro.analysis import flashlint
+    src = Path(__file__).resolve().parent.parent / "src"
+    violations, n_files = flashlint.lint_paths([src], select=["FL001"])
+    assert n_files > 0
+    assert violations == [], "manual engine wiring:\n" + "\n".join(
+        v.format() for v in violations)
 
 
 def _run(script, *args, timeout=1200):
