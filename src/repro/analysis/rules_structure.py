@@ -12,7 +12,7 @@ from .rules_base import Rule, callee_name, path_endswith
 #: only ``core/store.py`` is allowed to assemble.
 ENGINE_NAMES = frozenset({
     "BatchedWriteEngine", "BatchedQueryEngine", "FlushDispatcher",
-    "SimBackend", "DeviceBackend", "ShardedBackend",
+    "SimBackend", "DeviceBackend", "ShardedBackend", "SealedFront",
 })
 
 #: modules that hand out threads or executors. ``core/store.py`` owns the
@@ -31,7 +31,8 @@ SHIM_KEYWORDS = frozenset({"engine", "writer"})
 
 _FL001_ALLOWED = ("core/store.py", "core/write_engine.py",
                   "core/query_engine.py")
-_FL004_ALLOWED = ("core/store.py", "analysis/race_harness.py")
+_FL004_ALLOWED = ("core/store.py", "core/wal.py",
+                  "analysis/race_harness.py")
 
 
 def _check_fl001(ctx) -> List:

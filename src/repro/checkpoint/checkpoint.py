@@ -121,15 +121,35 @@ def restore_checkpoint(ckpt_dir: str | Path, target_tree,
 
 
 class CheckpointManager:
-    """Async periodic checkpointing + retention + emergency saves."""
+    """Async periodic checkpointing + retention + emergency saves.
+
+    ``quiesce`` callables (e.g. ``FlashStore.quiesce``) run before every
+    serialization, so a checkpoint never captures a state that a
+    background drain is mid-donating — the store-side barrier joins the
+    in-flight drain first (DESIGN.md §11)."""
 
     def __init__(self, ckpt_dir: str | Path, every_steps: int = 100,
-                 keep: int = 3):
+                 keep: int = 3, quiesce=()):
         self.dir = Path(ckpt_dir)
         self.every = every_steps
         self.keep = keep
+        self._quiesce = list(quiesce)
         self._thread: Optional[threading.Thread] = None
         self.last_saved: Optional[int] = None
+
+    def register_quiesce(self, fn) -> None:
+        """Add a barrier to run before every save (idempotent per fn)."""
+        if fn not in self._quiesce:
+            self._quiesce.append(fn)
+
+    def _join_quiesce(self, best_effort: bool = False) -> None:
+        for fn in self._quiesce:
+            try:
+                fn()
+            except Exception:
+                if not best_effort:
+                    raise             # emergency saves swallow (the store
+                                      # may be poisoned mid-crash)
 
     def maybe_save(self, step: int, tree, blocking: bool = False,
                    extra_meta: Optional[dict] = None) -> bool:
@@ -141,6 +161,7 @@ class CheckpointManager:
     def save(self, step: int, tree, blocking: bool = False,
              extra_meta: Optional[dict] = None) -> None:
         self.wait()
+        self._join_quiesce()          # no mid-donation state in the copy
         # device→host copy happens here (so the step can't race the write)
         host_tree = jax.tree.map(np.asarray, tree)
 
@@ -156,9 +177,13 @@ class CheckpointManager:
             self._thread.start()
 
     def emergency(self, step: int, tree) -> None:
-        """Blocking best-effort save on failure paths."""
+        """Blocking best-effort save on failure paths. Joins registered
+        quiesce barriers first (best-effort: a poisoned store must not
+        veto saving everything else) so even an emergency snapshot never
+        serializes a mid-donation state."""
         try:
             self.wait()
+            self._join_quiesce(best_effort=True)
             save_checkpoint(self.dir, step, jax.tree.map(np.asarray, tree),
                             {"emergency": True})
         except Exception:

@@ -45,10 +45,12 @@ the dispatcher so the ``stall_us`` ledger measures what async buys).
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -57,6 +59,18 @@ from .table_sim import EMPTY
 
 def _flat_i64(x) -> np.ndarray:
     return np.asarray(x).reshape(-1).astype(np.int64)
+
+
+def _latest_step(path) -> Optional[int]:
+    """Latest ``step_<N>`` snapshot directory under ``path`` (the
+    checkpoint layout, scanned without importing jax so sim-only users
+    stay jax-free)."""
+    path = Path(path)
+    if not path.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in path.glob("step_*")
+             if p.is_dir() and not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
 
 
 class DrainError(RuntimeError):
@@ -204,6 +218,221 @@ class FlushDispatcher:
 
 
 # ---------------------------------------------------------------------------
+# the sealed front: one seal/settle/poison lifecycle for every backend
+# ---------------------------------------------------------------------------
+class SealedFront:
+    """The double-buffered H_R lifecycle (DESIGN.md §9/§11), written
+    once. Before ISSUE 7 each backend (`BatchedWriteEngine`,
+    `SimBackend`, `ShardedBackend`) reimplemented the same machine:
+
+    * **fold** — (token, Δ) pairs accumulate in the *active* buffer of
+      their partition (one partition for single-table fronts, one per
+      owner shard for the sharded store);
+    * **settle** — wait out the in-flight drain; a sealed chunk still
+      present *after* the barrier means its drain died (the worker
+      clears delivered slots), so the front is **poisoned**: writes
+      fail loudly rather than silently dropping the chunk, reads keep
+      overlaying it, and ``FlashStore.restore()`` is the way back;
+    * **seal** — post-settle, the active buffer swaps for a fresh one
+      and becomes the read-only *in-flight* overlay; the sealed
+      ``(keys, Δs)`` arrays (sorted, deterministic dispatch order) go
+      to the caller for dispatch. With a WAL attached, every sealed
+      part is appended and fsync'd here — **before** the drain is
+      submitted — so a crash mid-drain loses nothing that was sealed;
+    * **mark_drained** — worker side, under the dispatcher lock: the
+      delivered parts' overlays clear (atomically with the device
+      state rebind) and drain completions are logged.
+
+    Owning the lifecycle here means the WAL hook is written once, and
+    the flashlint FL006 lock discipline audits one class instead of
+    three."""
+
+    # shared with the drain worker; flashlint FL006 holds every access
+    # to the state lock (or an audited under-lock/quiescent method)
+    _fl_guarded = ("_inflight",)
+
+    def __init__(self, dispatcher: Optional[FlushDispatcher] = None,
+                 parts: int = 1, wal=None):
+        self.dispatcher = dispatcher
+        self.parts = int(parts)
+        self.wal = wal
+        self._buf: List[Dict[int, int]] = [dict() for _ in range(self.parts)]
+        # sealed-but-draining chunks: the worker clears a part's slot
+        # (under the dispatcher lock) once its entries are on device
+        self._inflight: List[Optional[Dict[int, int]]] = [None] * self.parts
+        self._wal_seqs: List[Optional[int]] = [None] * self.parts
+        self.seals = 0
+
+    def _trace(self, kind: str, resource=None, rw=None, **meta) -> None:
+        d = self.dispatcher
+        if d is not None and getattr(d, "tracer", None) is not None:
+            d.tracer.record(kind, resource=resource, rw=rw, **meta)
+
+    def _res(self, part: int) -> str:
+        return ("hr:inflight" if self.parts == 1
+                else f"hr:inflight[{part}]")
+
+    # -- ingest side ---------------------------------------------------------
+    def fold(self, uniq: np.ndarray, sums: np.ndarray,
+             owners: Optional[np.ndarray] = None) -> Tuple[int, int]:
+        """Fold pre-deduped (token, Δ-sum) pairs into the active buffers
+        (partitioned by ``owners`` when given). Returns
+        ``(n_new_slots, n_cancelled)`` for the caller's ledger."""
+        from .write_engine import fold_entry
+        n_new = cancelled = 0
+        if owners is None:
+            buf = self._buf[0]
+            for k, s in zip(uniq.tolist(), sums.tolist()):
+                opened = fold_entry(buf, k, s)
+                if opened > 0:
+                    n_new += 1
+                elif opened < 0:
+                    cancelled += 1
+        else:
+            bufs = self._buf
+            for k, s, o in zip(uniq.tolist(), sums.tolist(),
+                               owners.tolist()):
+                opened = fold_entry(bufs[o], k, s)
+                if opened > 0:
+                    n_new += 1
+                elif opened < 0:
+                    cancelled += 1
+        self._trace("hr_write", "hr:active", "w")
+        return n_new, cancelled
+
+    def part_len(self, part: int = 0) -> int:
+        """Active-buffer size of one partition (threshold decisions)."""
+        return len(self._buf[part])
+
+    def part_lens(self) -> List[int]:
+        return [len(b) for b in self._buf]
+
+    # -- lifecycle -----------------------------------------------------------
+    def settle(self) -> None:
+        """Barrier the in-flight drain, then fail loudly if it died.
+
+        The pre-barrier probes are benign unlocked reads: worst case a
+        redundant barrier. A sealed chunk still present *after* the
+        barrier is the poison state — its drain failed (the worker
+        clears delivered slots, and the barrier re-raised the worker's
+        exception exactly once already): the entries are undelivered
+        and the donated state is suspect."""
+        d = self.dispatcher
+        if (any(b is not None
+                for b in self._inflight)      # flashlint: disable=FL006
+                or (d is not None and d.pending)):
+            if d is not None:
+                d.wait()
+        if any(b is not None
+               for b in self._inflight):      # flashlint: disable=FL006
+            raise RuntimeError(
+                "store is poisoned: a drain failed and its sealed H_R "
+                "chunk was never delivered — reopen from the last durable "
+                "state (FlashStore.restore() clears the poison and "
+                "replays the WAL)")
+
+    # flashlint: quiescent (callers settle first; see the class docstring)
+    def seal(self, parts: Optional[List[int]] = None
+             ) -> Optional[Dict[int, Tuple[np.ndarray, np.ndarray]]]:
+        """Swap the selected partitions' active buffers into the
+        in-flight overlay; returns ``{part: (sorted keys, deltas)}`` or
+        ``None`` when nothing is buffered. With a WAL, every sealed
+        part is logged and one fsync lands before this returns."""
+        sel = [p for p in (range(self.parts) if parts is None else parts)
+               if self._buf[p]]
+        if not sel:
+            return None
+        out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for p in sel:
+            if self._inflight[p] is not None:
+                # never clobber a sealed chunk (a failed drain leaves
+                # its entries here — they are still the read overlay)
+                raise RuntimeError(
+                    f"sealed H_R part {p} over an in-flight chunk; wait "
+                    f"out the previous drain first")
+            b = self._buf[p]
+            keys = np.fromiter(b.keys(), np.int64, len(b))
+            dels = np.fromiter(b.values(), np.int64, len(b))
+            order = np.argsort(keys, kind="stable")  # deterministic
+            keys, dels = keys[order], dels[order]
+            out[p] = (keys, dels)
+            self._inflight[p] = b
+            self._buf[p] = dict()
+            self._trace("swap", "hr:active", "w")
+            self._trace("seal", self._res(p), "w", entries=keys.size)
+            if self.wal is not None:
+                self._wal_seqs[p] = self.wal.append_seal(p, keys, dels)
+        self.seals += 1
+        if self.wal is not None:
+            self.wal.sync()           # durable before the drain dispatches
+        return out
+
+    def mark_drained(self, parts=None) -> None:  # flashlint: under-lock
+        """Worker side, under the dispatcher lock: the sealed chunks are
+        really on device — clear their overlays (atomically with the
+        state rebind the worker just traced) and log the completions."""
+        for p in (range(self.parts) if parts is None else parts):
+            self._inflight[p] = None
+            self._trace("inflight_clear", self._res(p), "w")
+            if self.wal is not None and self._wal_seqs[p] is not None:
+                self.wal.append_commit(p, self._wal_seqs[p])
+                self._wal_seqs[p] = None
+
+    # -- read-your-writes ----------------------------------------------------
+    def pending(self, flat: np.ndarray,
+                owners: Optional[np.ndarray] = None) -> np.ndarray:
+        # flashlint: under-lock
+        """Not-yet-durable Δ per key: active + in-flight buffers of each
+        key's partition. Call under the dispatcher lock (the worker
+        clears in-flight slots under it)."""
+        self._trace("hr_read", "hr:active", "r")
+        inf = self._inflight
+        for p, b in enumerate(inf):
+            if b:
+                self._trace("hr_read", self._res(p), "r")
+        if owners is None:
+            buf, i0 = self._buf[0], inf[0]
+            if not buf and not i0:
+                return np.zeros(flat.size, np.int64)
+            if i0:
+                return np.fromiter(
+                    (buf.get(int(k), 0) + i0.get(int(k), 0) for k in flat),
+                    np.int64, flat.size)
+            return np.fromiter((buf.get(int(k), 0) for k in flat),
+                               np.int64, flat.size)
+        if not any(self._buf) and not any(inf):
+            return np.zeros(flat.size, np.int64)
+        bufs = self._buf
+        return np.fromiter(
+            (bufs[o].get(int(k), 0)
+             + (inf[o].get(int(k), 0) if inf[o] else 0)
+             for k, o in zip(flat, owners)), np.int64, flat.size)
+
+    def entries(self) -> int:
+        # benign unlocked snapshot (monitoring only, may be momentarily
+        # stale); never used for control flow
+        return (sum(len(b) for b in self._buf)
+                + sum(len(b)
+                      for b in self._inflight if b))  # flashlint: disable=FL006
+
+    @property
+    def poisoned(self) -> bool:
+        """An undelivered sealed chunk survives the barrier (benign
+        unlocked probe: only consulted on quiesced paths)."""
+        return any(b is not None
+                   for b in self._inflight)           # flashlint: disable=FL006
+
+    def clear(self) -> None:  # flashlint: quiescent (restore path, re-armed)
+        """Drop every buffer — active and in-flight — clearing any
+        poison. Only the restore path calls this, after re-arming the
+        dispatcher: the dropped entries are exactly what the WAL replay
+        re-delivers."""
+        self._buf = [dict() for _ in range(self.parts)]
+        self._inflight = [None] * self.parts
+        self._wal_seqs = [None] * self.parts
+
+
+# ---------------------------------------------------------------------------
 # sim backend: the event-level SSD simulation
 # ---------------------------------------------------------------------------
 class SimBackend:
@@ -219,20 +448,25 @@ class SimBackend:
 
     name = "sim"
     # shared with the drain worker; flashlint FL006 holds every access
-    # to the state lock (or an audited under-lock/quiescent method)
-    _fl_guarded = ("_inflight", "_dirty")
+    # to the state lock (or an audited under-lock/quiescent method). The
+    # double-buffer itself now lives in the SealedFront.
+    _fl_guarded = ("_dirty",)
 
     def __init__(self, geom=None, scheme: str = "MDB-L",
                  ram_buffer_pct: float = 5.0,
                  change_segment_pct: float = 12.5,
                  flush_threshold: Optional[int] = None,
-                 async_flush: bool = True, **table_kw):
+                 async_flush: bool = True, wal=None, **table_kw):
         from .flash_model import TableGeometry
         from .table_sim import make_table
         from .write_engine import WriteEngineStats
         self.geom = geom if geom is not None else TableGeometry(
             num_blocks=16, pages_per_block=64, entries_per_page=64)
         self.scheme = scheme
+        # ctor args kept for restore-from-scratch (no snapshot on disk)
+        self._ram_pct = ram_buffer_pct
+        self._cs_pct = change_segment_pct
+        self._table_kw = dict(table_kw)
         self.table = make_table(scheme, self.geom, ram_buffer_pct,
                                 change_segment_pct, **table_kw)
         # the front H_R seals at the costed RAM buffer's own capacity by
@@ -241,66 +475,31 @@ class SimBackend:
                                    if flush_threshold is None
                                    else flush_threshold)
         self._disp = FlushDispatcher(enabled=async_flush)
-        self._buf: Dict[int, int] = {}
-        self._inflight: Optional[Dict[int, int]] = None
+        self.front = SealedFront(dispatcher=self._disp, parts=1, wal=wal)
         self._dirty = False          # sim holds undrained/unmerged entries
-        self._seals = 0
         self.stats_ledger = WriteEngineStats()
         self._disp.ledger = self.stats_ledger
 
     # -- the buffered write path -------------------------------------------
     def update(self, tokens, deltas=None) -> None:
-        from .write_engine import dedup_batch, fold_entry
+        from .write_engine import dedup_batch
         led = self.stats_ledger
         led.updates += 1
         uniq, sums, n_valid = dedup_batch(tokens, deltas, EMPTY)
         if n_valid == 0:
             return
         led.entries += n_valid
-        n_new = 0
-        for k, s in zip(uniq.tolist(), sums.tolist()):
-            opened = fold_entry(self._buf, k, s)
-            if opened > 0:
-                n_new += 1
-            elif opened < 0:
-                led.cancelled += 1
+        n_new, cancelled = self.front.fold(uniq, sums)
+        led.cancelled += cancelled
         led.buffered += n_new
         led.deduped += n_valid - n_new
-        self._disp.trace("hr_write", "hr:active", "w")
-        if len(self._buf) >= self.flush_threshold:
+        if self.front.part_len() >= self.flush_threshold:
             led.auto_flushes += 1
             self.drain(wait=False)
 
-    def _settle(self) -> None:
-        # benign unlocked probe: worst case we barrier redundantly
-        if (self._inflight is not None        # flashlint: disable=FL006
-                or self._disp.pending):
-            self._disp.wait()
-        if self._inflight is not None:        # flashlint: disable=FL006
-            # still sealed after the barrier: its replay died (the worker
-            # clears it on success; the barrier re-raised the error once)
-            raise RuntimeError(
-                "store is poisoned: a drain failed and its sealed H_R "
-                "chunk was never delivered — reopen from the last "
-                "durable state")
-
     def _seal(self) -> Optional[tuple]:  # flashlint: quiescent (post-settle)
-        if not self._buf:
-            return None
-        if self._inflight is not None:
-            # never clobber a sealed chunk (a failed drain leaves its
-            # entries here — they are still the read overlay)
-            raise RuntimeError("sealed H_R over an in-flight chunk; wait "
-                               "out the previous drain first")
-        keys = np.fromiter(self._buf.keys(), np.int64, len(self._buf))
-        dels = np.fromiter(self._buf.values(), np.int64, len(self._buf))
-        order = np.argsort(keys, kind="stable")
-        self._inflight = self._buf
-        self._buf = {}
-        self._seals += 1
-        self._disp.trace("swap", "hr:active", "w")
-        self._disp.trace("seal", "hr:inflight", "w", entries=keys.size)
-        return keys[order], dels[order]
+        out = self.front.seal()
+        return None if out is None else out[0]
 
     def _replay(self, keys, dels, merge: bool) -> None:  # flashlint: under-lock
         # worker side, under the dispatcher lock
@@ -310,8 +509,7 @@ class SimBackend:
             led.dispatches += 1
             led.dispatched_entries += keys.size
             self._dirty = True
-            self._inflight = None
-            self._disp.trace("inflight_clear", "hr:inflight", "w")
+            self.front.mark_drained()
             led.flushes += 1
         if merge:
             self.table.finalize()
@@ -321,17 +519,18 @@ class SimBackend:
             self.table.flush()       # stage, no forced merge
 
     def drain(self, wait: bool = True) -> None:
-        self._settle()
+        self.front.settle()
         sealed = self._seal()
         if sealed is not None:
             k, d = sealed
             self._disp.submit(lambda: self._replay(k, d, merge=False),
-                              label=f"sim-drain#{self._seals}:{k.size}e")
+                              label=f"sim-drain#{self.front.seals}:"
+                                    f"{k.size}e")
         if wait:
             self._disp.wait()
 
     def flush(self, wait: bool = True) -> None:  # durability point
-        self._settle()
+        self.front.settle()
         sealed = self._seal()
         # post-settle probe: no job in flight, the flag is stable
         if sealed is None and not self._dirty:  # flashlint: disable=FL006
@@ -341,22 +540,13 @@ class SimBackend:
         k, d = sealed if sealed is not None else (None, None)
         n = 0 if k is None else k.size
         self._disp.submit(lambda: self._replay(k, d, merge=True),
-                          label=f"sim-flush#{self._seals}:{n}e")
+                          label=f"sim-flush#{self.front.seals}:{n}e")
         if wait:
             self._disp.wait()
 
     # -- read-your-writes ---------------------------------------------------
     def pending(self, keys) -> np.ndarray:  # flashlint: under-lock
-        flat = _flat_i64(keys)
-        buf, inf = self._buf, self._inflight
-        self._disp.trace("hr_read", "hr:active", "r")
-        if inf:
-            self._disp.trace("hr_read", "hr:inflight", "r")
-        if not buf and not inf:
-            return np.zeros(flat.size, np.int64)
-        return np.fromiter(
-            (buf.get(int(k), 0) + (inf.get(int(k), 0) if inf else 0)
-             for k in flat), np.int64, flat.size)
+        return self.front.pending(_flat_i64(keys))
 
     def query_batch(self, keys) -> np.ndarray:
         with self._disp.lock:
@@ -365,11 +555,71 @@ class SimBackend:
         return base + pend
 
     def pending_entries(self) -> int:
-        # benign unlocked snapshot (monitoring only, may be momentarily
-        # stale); never used for control flow
-        inf = self._inflight                  # flashlint: disable=FL006
-        return (len(self._buf) + (len(inf) if inf else 0)
-                + len(self.table.ram.items))
+        return self.front.entries() + len(self.table.ram.items)
+
+    # -- durability (DESIGN.md §11) -----------------------------------------
+    # flashlint: quiescent (facade snapshots post-flush; nothing in flight)
+    def snapshot_state(self, path, step: int, meta: Dict,
+                       manager=None) -> Path:
+        """Capture the whole costed simulator (table + its own RAM buffer
+        + ledgers) with the checkpoint layout's atomic tmp+rename, as a
+        pickle — the sim is a plain NumPy/host object graph, so pickling
+        round-trips it exactly. ``manager`` is accepted for signature
+        parity with the device backends (unused: no arrays to shard)."""
+        import json
+        import pickle
+        path = Path(path)
+        final = path / f"step_{step:08d}"
+        tmp = path / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            import shutil
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        with self._disp.lock:
+            blob = pickle.dumps(self.table)
+        (tmp / "sim_table.pkl").write_bytes(blob)
+        (tmp / "meta.json").write_text(json.dumps(meta))
+        if final.exists():
+            import shutil
+            shutil.rmtree(final)
+        tmp.rename(final)
+        return final
+
+    # flashlint: quiescent (restore path: dispatcher re-armed, no worker)
+    def restore_state(self, path, step: Optional[int] = None):
+        """Load the pickled simulator from ``path`` (latest ``step_*`` or
+        an explicit ``step``); with no snapshot on disk, rebuild a fresh
+        table so the WAL replay starts from zero. Returns
+        ``(step | None, meta)``."""
+        import json
+        import pickle
+        from .table_sim import make_table
+        if path is not None and step is None:
+            step = _latest_step(path)
+        if path is None or step is None:
+            self.table = make_table(self.scheme, self.geom, self._ram_pct,
+                                    self._cs_pct, **self._table_kw)
+            self._dirty = False
+            return None, {}
+        d = Path(path) / f"step_{step:08d}"
+        self.table = pickle.loads((d / "sim_table.pkl").read_bytes())
+        self._dirty = False
+        meta = json.loads((d / "meta.json").read_text())
+        return step, meta
+
+    def rearm(self) -> None:
+        """Replace a (possibly wedged/poisoned) dispatcher with a fresh
+        worker of the same sync/async flavour; the restore path calls
+        this before clearing the front."""
+        old = self._disp
+        self._disp = FlushDispatcher(enabled=old.enabled)
+        self._disp.ledger = self.stats_ledger
+        self._disp.tracer = old.tracer
+        self.front.dispatcher = self._disp
+        try:
+            old.close()
+        except Exception:
+            pass                      # the poison already surfaced once
 
     def partition_heat(self, keys) -> np.ndarray:
         return np.zeros(_flat_i64(keys).size)     # no device wear feed
@@ -423,7 +673,7 @@ class DeviceBackend:
                  flush_threshold: Optional[int] = None,
                  hot_capacity: int = 4096, track_wear: bool = False,
                  record: Optional[list] = None, async_flush: bool = True,
-                 **table_kw):
+                 wal=None, **table_kw):
         from . import table_jax as tj
         from .query_engine import BatchedQueryEngine
         from .write_engine import BatchedWriteEngine
@@ -437,7 +687,7 @@ class DeviceBackend:
             self.cfg, state=state, chunk=chunk,
             flush_threshold=flush_threshold, query_engine=self.query_engine,
             record=record, on_flush=self._on_drain if track_wear else None,
-            dispatcher=self._disp)
+            dispatcher=self._disp, wal=wal)
         # wear attribution: partition -> accumulated Δtile_stores share,
         # plus the staged-since-last-merge histogram merges are charged to
         self._heat: Dict[int, float] = {}
@@ -484,7 +734,8 @@ class DeviceBackend:
         with self._disp.lock:
             pending = dict(self._staged_parts)
             heat = dict(self._heat)
-            for b in (self.writer._buf, self.writer._inflight):
+            for b in (self.writer.front._buf[0],
+                      self.writer.front._inflight[0]):
                 if not b:
                     continue
                 bk = np.fromiter(b.keys(), np.int64, len(b))
@@ -502,6 +753,12 @@ class DeviceBackend:
     @property
     def state(self):
         return self.writer.state
+
+    @property
+    def front(self) -> SealedFront:
+        """The engine's sealed front (the store facade's lifecycle
+        handle: quiesce / poison probe / WAL)."""
+        return self.writer.front
 
     def update(self, tokens, deltas=None) -> None:
         self.writer.update(tokens, deltas)
@@ -532,6 +789,62 @@ class DeviceBackend:
                     for k, v in self.query_engine.stats.as_dict().items()})
         out["buffered_entries"] = self.pending_entries()
         return out
+
+    # -- durability (DESIGN.md §11) -----------------------------------------
+    # flashlint: quiescent (facade snapshots post-flush; nothing in flight)
+    def snapshot_state(self, path, step: int, meta: Dict,
+                       manager=None) -> Path:
+        """Capture the device table state through the checkpoint layout
+        (atomic tmp+rename ``step_<N>/{meta.json,arrays.npz}``)."""
+        from ..checkpoint.checkpoint import CheckpointManager
+        if manager is None:
+            # keep=huge: snapshot GC policy belongs to the caller, not
+            # the durability path
+            manager = CheckpointManager(path, every_steps=1, keep=1_000_000)
+        manager.save(step, self.state, blocking=True, extra_meta=meta)
+        return Path(path) / f"step_{step:08d}"
+
+    # flashlint: quiescent (restore path: dispatcher re-armed, no worker)
+    def restore_state(self, path, step: Optional[int] = None):
+        """Load the device state from the latest (or given) snapshot
+        under ``path``; with no snapshot, re-init a fresh table so the
+        WAL replay starts from zero. Returns ``(step | None, meta)``."""
+        import jax
+        import jax.numpy as jnp
+
+        from . import table_jax as tj
+        if path is not None and step is None:
+            step = _latest_step(path)
+        if path is None or step is None:
+            self.writer.state = tj.init(self.cfg)
+            meta = {}
+            step = None
+        else:
+            from ..checkpoint.checkpoint import restore_checkpoint
+            restored, meta = restore_checkpoint(path, tj.init(self.cfg),
+                                                step=step)
+            # npz leaves come back as numpy; the donated update programs
+            # (and assert_live) need real jax arrays
+            self.writer.state = jax.tree.map(jnp.asarray, restored)
+        self.writer._staged_dirty = True  # snapshot may hold staged segments
+        self._heat.clear()
+        self._staged_parts.clear()
+        self.query_engine.invalidate()
+        return step, meta
+
+    def rearm(self) -> None:
+        """Replace a (possibly wedged/poisoned) dispatcher with a fresh
+        worker; restore calls this before clearing the front."""
+        old = self._disp
+        self._disp = FlushDispatcher(enabled=old.enabled)
+        self._disp.ledger = self.writer.stats
+        self._disp.tracer = old.tracer
+        self.writer.dispatcher = self._disp
+        self.writer.front.dispatcher = self._disp
+        try:
+            old.close()
+        except Exception:
+            pass                      # the poison already surfaced once
 
     def close(self) -> None:
         self._disp.close()
@@ -569,8 +882,9 @@ class ShardedBackend:
 
     name = "sharded"
     # shared with the drain worker; flashlint FL006 holds every access
-    # to the state lock (or an audited under-lock/quiescent method)
-    _fl_guarded = ("state", "_inflight", "_staged_dirty")
+    # to the state lock (or an audited under-lock/quiescent method). The
+    # per-shard H_R double-buffer itself lives in the SealedFront.
+    _fl_guarded = ("state", "_staged_dirty")
 
     def __init__(self, cfg=None, mesh=None, axis: str = "table",
                  num_shards: Optional[int] = None,
@@ -578,7 +892,7 @@ class ShardedBackend:
                  flush_threshold: Optional[int] = None,
                  query_chunk: int = 1024, hot_capacity: int = 4096,
                  piggyback_frac: float = 0.5, async_flush: bool = True,
-                 **table_kw):
+                 wal=None, **table_kw):
         import jax
         from jax.sharding import NamedSharding
 
@@ -622,19 +936,23 @@ class ShardedBackend:
                             D.state_pspec(axis),
                             is_leaf=lambda s: type(s).__name__
                             == "PartitionSpec")
+        self._spec = spec             # restore reshard target
         self.state = jax.device_put(D.init_global(cfg), spec)
         self._shard_bits = cfg.local.q_log2 - cfg.local.r_log2
-        self._buf: List[Dict[int, int]] = [dict() for _ in range(n)]
-        # sealed-but-draining H_R partitions: the worker clears a shard's
-        # slot (under the dispatcher lock) once its entries are on device
-        self._inflight: List[Optional[Dict[int, int]]] = [None] * n
         self._staged_dirty = False    # staged entries since last merge
-        self._seals = 0
         self._disp = FlushDispatcher(enabled=async_flush)
+        # per-shard H_R partitions behind the one sealed-front lifecycle
+        self.front = SealedFront(dispatcher=self._disp, parts=n, wal=wal)
         self.stats_ledger = WriteEngineStats()
         self._disp.ledger = self.stats_ledger
         self.piggybacked = 0
         self.carried = 0
+
+    @property
+    def _inflight(self) -> List[Optional[Dict[int, int]]]:
+        """Read-only view of the sealed per-shard overlays (tests probe
+        it; the front owns the real slots)."""
+        return self.front._inflight
 
     # -- owner routing ------------------------------------------------------
     def owner_of(self, keys) -> np.ndarray:
@@ -644,7 +962,7 @@ class ShardedBackend:
 
     # -- the buffered write path -------------------------------------------
     def update(self, tokens, deltas=None) -> None:
-        from .write_engine import dedup_batch, fold_entry
+        from .write_engine import dedup_batch
         led = self.stats_ledger
         led.updates += 1
         uniq, sums, n_valid = dedup_batch(tokens, deltas, EMPTY)
@@ -652,55 +970,27 @@ class ShardedBackend:
             return
         led.entries += n_valid
         owners = self.owner_of(uniq)
-        n_new = 0
-        for k, s, o in zip(uniq.tolist(), sums.tolist(), owners.tolist()):
-            opened = fold_entry(self._buf[o], k, s)
-            if opened > 0:
-                n_new += 1
-            elif opened < 0:
-                led.cancelled += 1
+        n_new, cancelled = self.front.fold(uniq, sums, owners)
+        led.cancelled += cancelled
         led.buffered += n_new
         led.deduped += n_valid - n_new
-        self._disp.trace("hr_write", "hr:active", "w")
-        hot = [i for i, b in enumerate(self._buf)
-               if len(b) >= self.flush_threshold]
+        lens = self.front.part_lens()
+        hot = [i for i, ln in enumerate(lens)
+               if ln >= self.flush_threshold]
         if hot:
             led.auto_flushes += 1
-            ride = [i for i, b in enumerate(self._buf)
+            ride = [i for i, ln in enumerate(lens)
                     if i not in hot
-                    and len(b) >= self.piggyback_frac * self.flush_threshold]
+                    and ln >= self.piggyback_frac * self.flush_threshold]
             self.piggybacked += len(ride)
             self.drain(shards=hot + ride, wait=False)
 
     def _seal(self, shards=None) -> Optional[Dict]:  # flashlint: quiescent
-        """Seal the selected shards' H_R partitions: each sealed dict
-        becomes that shard's in-flight overlay and a fresh dict takes its
-        place. Returns {shard: (sorted keys, deltas)} or None. Callers
-        run it post-settle (no drain in flight)."""
-        n = self.cfg.num_shards
-        sel = [s for s in (range(n) if shards is None else shards)
-               if self._buf[s]]
-        if not sel:
-            return None
-        per_shard = {}
-        for s in sel:
-            b = self._buf[s]
-            ks = np.fromiter(b.keys(), np.int64, len(b))
-            vs = np.fromiter(b.values(), np.int64, len(b))
-            order = np.argsort(ks, kind="stable")   # deterministic dispatch
-            per_shard[s] = (ks[order], vs[order])
-            if self._inflight[s] is not None:
-                # never clobber a sealed partition (a failed drain leaves
-                # its entries here — they are still the read overlay)
-                raise RuntimeError(
-                    f"sealed shard {s}'s H_R over an in-flight partition; "
-                    f"wait out the previous drain first")
-            self._inflight[s] = b
-            self._buf[s] = dict()
-            self._disp.trace("seal", f"hr:inflight[{s}]", "w",
-                             entries=len(b))
-        self._seals += 1
-        return per_shard
+        """Seal the selected shards' H_R partitions via the front (each
+        sealed dict becomes that shard's in-flight overlay). Returns
+        {shard: (sorted keys, deltas)} or None. Callers run it
+        post-settle (no drain in flight)."""
+        return self.front.seal(parts=shards)
 
     # flashlint: under-lock (drain-worker body, submitted via dispatcher)
     def _drain_sealed(self, per_shard: Dict) -> None:
@@ -735,10 +1025,9 @@ class ShardedBackend:
         jax.block_until_ready(self.state)   # durable, not merely queued (§9)
         self._disp.trace("state_rebind", "state", "w")
         self._staged_dirty = True
-        for s, (ks, _vs) in per_shard.items():
+        for _s, (ks, _vs) in per_shard.items():
             led.dispatched_entries += ks.size
-            self._inflight[s] = None
-            self._disp.trace("inflight_clear", f"hr:inflight[{s}]", "w")
+        self.front.mark_drained(sorted(per_shard))
         led.flushes += 1
         self.query_engine.invalidate()
         led.invalidations += 1
@@ -760,24 +1049,11 @@ class ShardedBackend:
         self.stats_ledger.invalidations += 1
 
     def _stall_if_inflight(self) -> None:
-        """Wait out in-flight work before sealing or a no-op decision:
-        undrained sealed partitions (both buffers busy) or a running job
-        whose merge phase has yet to settle ``_staged_dirty``.
-
-        The pre-barrier probes are benign unlocked reads: worst case a
-        redundant barrier."""
-        if (any(b is not None
-                for b in self._inflight)      # flashlint: disable=FL006
-                or self._disp.pending):
-            self._disp.wait()
-        if any(b is not None
-               for b in self._inflight):      # flashlint: disable=FL006
-            # still sealed after the barrier: the drain died (the worker
-            # clears every drained slot; the barrier re-raised the error)
-            raise RuntimeError(
-                "store is poisoned: a drain failed and sealed H_R "
-                "partitions were never delivered — reopen from the last "
-                "durable state")
+        """Wait out in-flight work before sealing or a no-op decision
+        (the double-buffer stall + poison check live in
+        :meth:`SealedFront.settle`); a running job whose merge phase has
+        yet to settle ``_staged_dirty`` also barriers here."""
+        self.front.settle()
 
     def drain(self, shards: Optional[List[int]] = None,
               wait: bool = True) -> None:
@@ -787,7 +1063,7 @@ class ShardedBackend:
         per_shard = self._seal(shards)
         if per_shard is not None:
             self._disp.submit(lambda: self._drain_sealed(per_shard),
-                              label=f"shard-drain#{self._seals}:"
+                              label=f"shard-drain#{self.front.seals}:"
                                     f"shards{sorted(per_shard)}")
         if wait:
             self._disp.wait()
@@ -813,7 +1089,7 @@ class ShardedBackend:
             self._merge_device()
 
         shards = sorted(per_shard) if per_shard else []
-        self._disp.submit(job, label=f"shard-flush#{self._seals}:"
+        self._disp.submit(job, label=f"shard-flush#{self.front.seals}:"
                                      f"shards{shards}")
         if wait:
             self._disp.wait()
@@ -822,9 +1098,7 @@ class ShardedBackend:
     def pending_entries(self) -> int:
         # benign unlocked snapshot (monitoring only, may be momentarily
         # stale); never used for control flow
-        return (sum(len(b) for b in self._buf)
-                + sum(len(b)
-                      for b in self._inflight if b))  # flashlint: disable=FL006
+        return self.front.entries()
 
     def pending(self, keys) -> np.ndarray:  # flashlint: under-lock
         """Not-yet-durable Δ per key: active + in-flight partition of the
@@ -832,19 +1106,7 @@ class ShardedBackend:
         clears in-flight slots under it, atomically with the state
         rebind)."""
         flat = _flat_i64(keys)
-        self._disp.trace("hr_read", "hr:active", "r")
-        for s, b in enumerate(self._inflight):
-            if b:
-                self._disp.trace("hr_read", f"hr:inflight[{s}]", "r")
-        if not any(self._buf) and not any(self._inflight):
-            return np.zeros(flat.size, np.int64)
-        owners = self.owner_of(flat)
-        inf = self._inflight
-        return np.fromiter(
-            (self._buf[o].get(int(k), 0)
-             + (inf[o].get(int(k), 0) if inf[o] else 0)
-             for k, o in zip(flat, owners)),
-            np.int64, flat.size)
+        return self.front.pending(flat, self.owner_of(flat))
 
     def query_batch(self, keys) -> np.ndarray:
         with self._disp.lock:
@@ -873,8 +1135,59 @@ class ShardedBackend:
         out["write_piggybacked"] = self.piggybacked
         out["write_carried"] = self.carried
         out["buffered_per_shard_max"] = max(
-            (len(b) for b in self._buf), default=0)
+            self.front.part_lens(), default=0)
         return out
+
+    # -- durability (DESIGN.md §11) -----------------------------------------
+    # flashlint: quiescent (facade snapshots post-flush; nothing in flight)
+    def snapshot_state(self, path, step: int, meta: Dict,
+                       manager=None) -> Path:
+        """Capture the global sharded state through the checkpoint layout
+        (full arrays per the single-process writer; restore reshards
+        against the current mesh)."""
+        from ..checkpoint.checkpoint import CheckpointManager
+        if manager is None:
+            manager = CheckpointManager(path, every_steps=1, keep=1_000_000)
+        manager.save(step, self.state, blocking=True, extra_meta=meta)
+        return Path(path) / f"step_{step:08d}"
+
+    # flashlint: quiescent (restore path: dispatcher re-armed, no worker)
+    def restore_state(self, path, step: Optional[int] = None):
+        """Load the global state from the latest (or given) snapshot and
+        device_put it against the current mesh's shardings (the elastic
+        reshard); with no snapshot, re-init fresh. Returns
+        ``(step | None, meta)``."""
+        import jax
+
+        from . import distributed as D
+        if path is not None and step is None:
+            step = _latest_step(path)
+        if path is None or step is None:
+            self.state = jax.device_put(D.init_global(self.cfg), self._spec)
+            meta = {}
+            step = None
+        else:
+            from ..checkpoint.checkpoint import restore_checkpoint
+            restored, meta = restore_checkpoint(
+                path, D.init_global(self.cfg), step=step,
+                shardings=self._spec)
+            self.state = restored
+        self._staged_dirty = True     # snapshot may hold staged segments
+        self.query_engine.invalidate()
+        return step, meta
+
+    def rearm(self) -> None:
+        """Replace a (possibly wedged/poisoned) dispatcher with a fresh
+        worker; restore calls this before clearing the front."""
+        old = self._disp
+        self._disp = FlushDispatcher(enabled=old.enabled)
+        self._disp.ledger = self.stats_ledger
+        self._disp.tracer = old.tracer
+        self.front.dispatcher = self._disp
+        try:
+            old.close()
+        except Exception:
+            pass                      # the poison already surfaced once
 
     def close(self) -> None:
         self._disp.close()
@@ -887,6 +1200,20 @@ _BACKENDS = {"sim": SimBackend, "device": DeviceBackend,
 # ---------------------------------------------------------------------------
 # the facade
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RestoreReport:
+    """What :meth:`FlashStore.restore` actually did — the recovery
+    audit trail (tests assert on it; operators log it)."""
+
+    snapshot_step: Optional[int]  # step restored from (None: fresh init)
+    base_seq: int                 # WAL seqs <= this were pre-rotation
+    records_replayed: int         # sealed WAL chunks re-applied
+    entries_replayed: int         # (token, Δ) pairs re-applied
+    tail_discarded_bytes: int     # torn WAL tail dropped (warned loudly)
+    poison_cleared: bool          # the store was poisoned going in
+    meta: Dict                    # snapshot meta.json (includes extras)
+
+
 class FlashStore:
     """Backend-agnostic counting hash table with the paper's deferred-
     update discipline built in. Construct with :meth:`open`; use as a
@@ -909,12 +1236,24 @@ class FlashStore:
         ``hot_capacity``, ``async_flush``, ...) pass through as keywords;
         ``async_flush=False`` opts out of the background drain worker
         (DESIGN.md §9) for a synchronous store.
+
+        ``wal=`` (a path, or a :class:`~.wal.WriteAheadLog`) attaches a
+        chunk-granular write-ahead log: every sealed H_R chunk is
+        appended and fsync'd *before* its drain dispatches, so a crash
+        mid-drain loses nothing that was sealed — :meth:`restore` replays
+        the log (DESIGN.md §11). Default off: the paper's numbers carry
+        no WAL cost unless asked for.
         """
         try:
             impl = _BACKENDS[backend]
         except KeyError:
             raise ValueError(f"unknown backend {backend!r}; expected one "
                              f"of {tuple(_BACKENDS)}") from None
+        wal = kw.pop("wal", None)
+        if wal is not None and not hasattr(wal, "append_seal"):
+            from .wal import WriteAheadLog
+            wal = WriteAheadLog(wal)
+        kw["wal"] = wal
         if config is None:
             return cls(impl(**kw))
         if backend == "sim":
@@ -940,6 +1279,8 @@ class FlashStore:
             self._b.flush(wait=True)
         finally:
             self._b.close()
+            if self._b.front.wal is not None:
+                self._b.front.wal.close()
             self._closed = True
 
     def __enter__(self) -> "FlashStore":
@@ -1045,6 +1386,101 @@ class FlashStore:
         wear-aware eviction: re-dirtying a hot partition is nearly free."""
         return self._b.partition_heat(keys)
 
+    # -- durability: snapshot / restore (DESIGN.md §11) ----------------------
+    @property
+    def wal(self):
+        """The attached :class:`~.wal.WriteAheadLog` (None without one)."""
+        return self._b.front.wal
 
-__all__ = ["FlashStore", "FlushDispatcher", "DrainError", "SimBackend",
-           "DeviceBackend", "ShardedBackend", "EMPTY"]
+    def quiesce(self) -> None:
+        """Join any in-flight drain without forcing new device traffic —
+        the barrier ``CheckpointManager`` takes before serializing, so a
+        checkpoint never captures a mid-donation state. Raises if the
+        store is poisoned (the snapshot would be missing a sealed
+        chunk)."""
+        self._check_open()
+        self._b.front.settle()
+
+    def snapshot(self, path, step: Optional[int] = None,
+                 extra_meta: Optional[Dict] = None, manager=None) -> Path:
+        """Durability capture: flush everything (drain + device merge,
+        the barrier), write the device/sim state through the checkpoint
+        layout under ``path``, then **rotate** the WAL — every logged
+        chunk is now redundant with the snapshot. Returns the snapshot
+        directory.
+
+        ``step`` defaults to one past the latest snapshot under ``path``
+        (0 for the first). ``extra_meta`` rides along in ``meta.json``
+        (e.g. ``CorpusStats`` counters)."""
+        self._check_open()
+        self._b.flush(wait=True)
+        wal = self._b.front.wal
+        base = wal.last_seq if wal is not None else 0
+        if step is None:
+            latest = _latest_step(path)
+            step = 0 if latest is None else latest + 1
+        meta = {"wal_base_seq": base, "store_backend": self.backend,
+                "store_scheme": self.scheme}
+        meta.update(extra_meta or {})
+        out = self._b.snapshot_state(path, step, meta, manager=manager)
+        if wal is not None:
+            wal.rotate()
+        return out
+
+    def restore(self, path=None, step: Optional[int] = None
+                ) -> RestoreReport:
+        """Recover to the last durable state: drop every buffer (clearing
+        any poison), re-arm the drain worker, load the latest snapshot
+        under ``path`` (fresh-init when ``path`` is None or holds no
+        snapshot), then replay sealed-but-uncovered WAL records — seqs
+        after the snapshot's ``wal_base_seq`` — through the normal update
+        path (appends suppressed, so restoring twice is idempotent).
+
+        The recovery contract (DESIGN.md §11): after ``restore()``, the
+        store holds exactly the deltas that were sealed before the crash
+        — no lost chunks (seal fsyncs before dispatch), no double-applied
+        chunks (the snapshot rotates the log; replay reapplies onto the
+        snapshot, or onto a fresh table covering seq 0). Entries that
+        were still in the *active* buffer (never sealed) are the one
+        permissible loss — exactly the paper's H_R volatility window."""
+        b = self._b
+        try:
+            b._disp.wait()            # settle what can settle; poison is
+        except Exception:
+            pass                      # cleared below, not re-raised here
+        poisoned = b.front.poisoned
+        b.rearm()
+        b.front.clear()
+        self._closed = False          # restore reopens a closed store
+        snap_step, snap_meta = b.restore_state(path, step)
+        base = int(snap_meta.get("wal_base_seq", 0))
+        records_replayed = entries_replayed = 0
+        discarded = 0
+        wal = b.front.wal
+        if wal is not None:
+            from .wal import SEAL, WriteAheadLog, read_wal
+            if wal._f.closed:         # restoring a closed store: reopen
+                wal = WriteAheadLog(wal.path, fsync=wal._do_fsync)
+                b.front.wal = wal
+            records, discarded = read_wal(wal.path)
+            seals = sorted((r for r in records
+                            if r.kind == SEAL and r.seq > base),
+                           key=lambda r: r.seq)
+            with wal.suppressed():
+                for r in seals:
+                    b.update(r.keys, r.deltas)
+                    records_replayed += 1
+                    entries_replayed += int(r.keys.size)
+                if seals:
+                    b.drain(wait=True)
+        return RestoreReport(
+            snapshot_step=snap_step, base_seq=base,
+            records_replayed=records_replayed,
+            entries_replayed=entries_replayed,
+            tail_discarded_bytes=discarded, poison_cleared=poisoned,
+            meta=snap_meta)
+
+
+__all__ = ["FlashStore", "FlushDispatcher", "DrainError", "SealedFront",
+           "RestoreReport", "SimBackend", "DeviceBackend", "ShardedBackend",
+           "EMPTY"]

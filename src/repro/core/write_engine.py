@@ -134,18 +134,20 @@ class BatchedWriteEngine:
     attached (DESIGN.md §9)."""
 
     # shared with the drain worker; flashlint FL006 holds every access
-    # to the state lock (or an audited under-lock/quiescent method)
-    _fl_guarded = ("state", "_inflight", "_staged_dirty")
+    # to the state lock (or an audited under-lock/quiescent method). The
+    # H_R double-buffer itself lives in the store's SealedFront.
+    _fl_guarded = ("state", "_staged_dirty")
 
     def __init__(self, cfg, state=None, chunk: int = 4096,
                  flush_threshold: Optional[int] = None,
                  query_engine=None,
                  record: Optional[List[Tuple[np.ndarray, np.ndarray]]] = None,
-                 on_flush=None, dispatcher=None):
+                 on_flush=None, dispatcher=None, wal=None):
         import jax  # deferred: sim-only users stay jax-free
         import jax.numpy as jnp
 
         from . import table_jax as tj
+        from .store import SealedFront
         self._jax = jax
         self._jnp = jnp
         self._tj = tj
@@ -171,17 +173,28 @@ class BatchedWriteEngine:
         # consistent snapshot. Without one, drains run inline — the
         # single-threaded pre-PR5 engine needs no locking at all.
         self.dispatcher = dispatcher
-        self._buf: Dict[int, int] = {}       # active H_R (caller-owned)
-        self._inflight: Optional[Dict[int, int]] = None  # sealed, draining
+        # the seal/settle/poison double-buffer lifecycle (DESIGN.md §9),
+        # now owned by one SealedFront shared across backends; ``wal``
+        # makes every sealed chunk durable before its drain dispatches
+        self.front = SealedFront(dispatcher=dispatcher, parts=1, wal=wal)
         # device entries staged since the last merge. An adopted state may
         # arrive with a non-empty change segment, so it counts as dirty —
         # the first merge() must really run (the pre-PR5 unconditional
         # behaviour), not take the no-op path.
         self._staged_dirty = state is not None
-        self._seals = 0
         self.stats = WriteEngineStats()
         if dispatcher is not None:
             dispatcher.ledger = self.stats
+
+    @property
+    def _inflight(self):
+        """Sealed in-flight chunk (compat alias for ``front._inflight[0]``;
+        the race-harness seeded tests poke it directly)."""
+        return self.front._inflight[0]
+
+    @_inflight.setter
+    def _inflight(self, value):
+        self.front._inflight[0] = value
 
     def _lock(self):
         return (self.dispatcher.lock if self.dispatcher is not None
@@ -206,31 +219,11 @@ class BatchedWriteEngine:
 
     def _settle(self) -> None:
         """Wait out any in-flight work before sealing or taking a no-op
-        decision: an undrained sealed buffer (both buffers busy — the
-        double-buffer stall) or a still-running job whose merge phase has
-        yet to clear ``_staged_dirty`` (deciding on a stale flag would
-        schedule a redundant merge + cache invalidation).
-
-        A sealed chunk still present *after* the barrier means its drain
-        died (the worker clears it on success, and the barrier re-raised
-        the worker's exception exactly once already): the chunk's entries
-        are undelivered and the donated state is suspect, so the store is
-        poisoned — fail every subsequent write path loudly rather than
-        silently dropping the chunk (reads keep overlaying it).
-        ``close()`` still releases the worker (`FlashStore.close` shuts
-        the dispatcher down in a ``finally``).
-
-        The pre-barrier probes are benign unlocked reads: worst case a
-        redundant barrier."""
-        if (self._inflight is not None        # flashlint: disable=FL006
-                or (self.dispatcher is not None
-                    and self.dispatcher.pending)):
-            self._barrier()
-        if self._inflight is not None:        # flashlint: disable=FL006
-            raise RuntimeError(
-                "store is poisoned: a drain failed and its sealed H_R "
-                "chunk was never delivered — reopen from the last durable "
-                "state")
+        decision (the double-buffer stall + poison check both live in
+        :meth:`SealedFront.settle` now); a still-running job whose merge
+        phase has yet to clear ``_staged_dirty`` also barriers here —
+        deciding on a stale flag would schedule a redundant merge."""
+        self.front.settle()
 
     def _tile_stores(self) -> int:  # flashlint: under-lock
         return int(np.asarray(self.state.stats.tile_stores))
@@ -244,18 +237,11 @@ class BatchedWriteEngine:
         if n_valid == 0:
             return
         self.stats.entries += n_valid
-        buf = self._buf
-        n_new = 0
-        for k, s in zip(uniq.tolist(), sums.tolist()):
-            opened = fold_entry(buf, k, s)
-            if opened > 0:
-                n_new += 1                # a slot really opened
-            elif opened < 0:
-                self.stats.cancelled += 1
+        n_new, cancelled = self.front.fold(uniq, sums)
+        self.stats.cancelled += cancelled
         self.stats.buffered += n_new
         self.stats.deduped += n_valid - n_new
-        self._trace("hr_write", "hr:active", "w")
-        if len(buf) >= self.flush_threshold:
+        if self.front.part_len() >= self.flush_threshold:
             self.stats.auto_flushes += 1
             self.flush(wait=False)
 
@@ -265,26 +251,13 @@ class BatchedWriteEngine:
         (read-only from here; reads keep overlaying it until its drain
         lands) and a fresh active buffer takes its place. Returns the
         sealed ``(keys, deltas)`` in sorted, deterministic dispatch
-        order, or ``None`` when H_R is empty.
+        order, or ``None`` when H_R is empty. With a WAL attached the
+        sealed chunk is fsync'd before this returns.
 
         Callers must wait out any previous in-flight drain first — there
         are exactly two buffers (:meth:`flush` does this)."""
-        if not self._buf:
-            return None
-        if self._inflight is not None:
-            # never clobber a sealed chunk (it may hold entries a failed
-            # drain left undelivered — they are still the read overlay)
-            raise RuntimeError("sealed H_R over an in-flight chunk; wait "
-                               "out the previous drain first")
-        keys = np.fromiter(self._buf.keys(), np.int64, len(self._buf))
-        dels = np.fromiter(self._buf.values(), np.int64, len(self._buf))
-        order = np.argsort(keys, kind="stable")   # deterministic dispatch
-        self._inflight = self._buf
-        self._buf = {}
-        self._seals += 1
-        self._trace("swap", "hr:active", "w")
-        self._trace("seal", "hr:inflight", "w", entries=keys.size)
-        return keys[order], dels[order]
+        out = self.front.seal()
+        return None if out is None else out[0]
 
     # flashlint: under-lock (drain-worker body, submitted via dispatcher)
     def _dispatch(self, keys: np.ndarray, dels: np.ndarray) -> None:
@@ -322,8 +295,7 @@ class BatchedWriteEngine:
         self.stats.dispatched_entries += keys.size
         self._trace("state_rebind", "state", "w")
         self._staged_dirty = True
-        self._inflight = None
-        self._trace("inflight_clear", "hr:inflight", "w")
+        self.front.mark_drained()
         self.stats.flushes += 1
         self._invalidate()
         if self.on_flush:
@@ -358,7 +330,7 @@ class BatchedWriteEngine:
         if sealed is not None:
             keys, dels = sealed
             self._submit(lambda: self._dispatch(keys, dels),
-                         label=f"hr-drain#{self._seals}:{keys.size}e")
+                         label=f"hr-drain#{self.front.seals}:{keys.size}e")
         if wait:
             self._barrier()
         # with wait=False a drain may still be rebinding the state: take
@@ -389,7 +361,7 @@ class BatchedWriteEngine:
             self._merge_device()
 
         n = 0 if sealed is None else sealed[0].size
-        self._submit(job, label=f"hr-merge#{self._seals}:{n}e")
+        self._submit(job, label=f"hr-merge#{self.front.seals}:{n}e")
         if wait:
             self._barrier()
         with self._lock():
@@ -410,8 +382,7 @@ class BatchedWriteEngine:
         active H_R buffer plus the sealed in-flight chunk (if a drain is
         running). Benign unlocked snapshot (monitoring only, may be
         momentarily stale); never used for control flow."""
-        inf = self._inflight                  # flashlint: disable=FL006
-        return len(self._buf) + (len(inf) if inf else 0)
+        return self.front.entries()
 
     def pending(self, keys) -> np.ndarray:  # flashlint: under-lock
         """Not-yet-durable Δ per key — the overlay a consolidated read
@@ -419,19 +390,7 @@ class BatchedWriteEngine:
         the sealed in-flight chunk. Call under the dispatcher lock when
         one is attached (the drain worker clears the in-flight chunk
         under that lock, atomically with the device state rebind)."""
-        flat = np.asarray(keys).reshape(-1)
-        buf, inf = self._buf, self._inflight
-        self._trace("hr_read", "hr:active", "r")
-        if inf:
-            self._trace("hr_read", "hr:inflight", "r")
-        if not buf and not inf:
-            return np.zeros(flat.size, np.int64)
-        if inf:
-            return np.fromiter(
-                (buf.get(int(k), 0) + inf.get(int(k), 0) for k in flat),
-                np.int64, flat.size)
-        return np.fromiter((buf.get(int(k), 0) for k in flat),
-                           np.int64, flat.size)
+        return self.front.pending(np.asarray(keys).reshape(-1))
 
     def query_batch(self, keys) -> np.ndarray:
         """Consolidated batched read: device counts through the paired

@@ -30,7 +30,7 @@ class CorpusStats:
     def __init__(self, cfg: tj.FlashTableConfig,
                  state: Optional[tj.DeviceTableState] = None,
                  docs_seen: int = 0, tokens_seen: int = 0,
-                 backend: str = "device"):
+                 backend: str = "device", wal=None):
         self.cfg = cfg
         self.docs_seen = docs_seen
         self.tokens_seen = tokens_seen
@@ -38,7 +38,7 @@ class CorpusStats:
             raise ValueError("sharded backend cannot adopt a single-table "
                              "state")
         kw = {"state": state} if backend == "device" else {}
-        self.store = FlashStore.open(cfg, backend=backend, **kw)
+        self.store = FlashStore.open(cfg, backend=backend, wal=wal, **kw)
 
     @classmethod
     def create(cls, q_log2: int = 18, r_log2: int = 10,
@@ -85,6 +85,23 @@ class CorpusStats:
     def flush(self) -> None:
         """Drain H_R and force the device merge (checkpoint boundary)."""
         self.store.flush()
+
+    # -- durability (unified snapshot surface, DESIGN.md §11) ---------------
+    def snapshot(self, path) -> None:
+        """Persist through the store's own snapshot machinery (no
+        parallel save path): the ``docs_seen``/``tokens_seen`` counters
+        ride in the snapshot's ``meta.json``."""
+        self.store.snapshot(path, extra_meta={
+            "docs_seen": self.docs_seen, "tokens_seen": self.tokens_seen})
+
+    def restore(self, path=None):
+        """Counterpart of :meth:`snapshot`: restores the table (and
+        replays any WAL tail), then the counters from the snapshot meta.
+        Returns the store's ``RestoreReport``."""
+        rep = self.store.restore(path)
+        self.docs_seen = int(rep.meta.get("docs_seen", 0))
+        self.tokens_seen = int(rep.meta.get("tokens_seen", 0))
+        return rep
 
     # -- queries ------------------------------------------------------------
     def counts(self, tokens: np.ndarray) -> np.ndarray:

@@ -34,3 +34,35 @@ def remesh_shardings(old_shardings, new_mesh: Mesh):
         lambda s: NamedSharding(new_mesh, s.spec),
         old_shardings,
         is_leaf=lambda s: isinstance(s, NamedSharding))
+
+
+def handoff_hr_partitions(wal_path, survivor, shards=None,
+                          base_seq: int = 0) -> Tuple[int, int]:
+    """Re-own a departing store's sealed H_R partitions via its WAL.
+
+    When a node leaves, its store's *sealed-but-undrained* chunks are
+    exactly the records in its write-ahead log after the last snapshot
+    (``base_seq``; see ``FlashStore.snapshot``). Replaying them into a
+    ``survivor`` store re-owns the deltas: the survivor's own owner
+    routing re-partitions every entry against the surviving mesh, so no
+    partition math is needed here. ``shards`` optionally filters to the
+    departing node's WAL partitions (the chunk-granular log records the
+    H_R partition per seal precisely to make this filter possible);
+    ``None`` takes everything — the safe default when the whole store
+    moved.
+
+    Returns ``(records_replayed, entries_replayed)``. The survivor's own
+    WAL (if any) logs the re-owned chunks as fresh seals — they are new
+    writes from its point of view."""
+    from ..core.wal import SEAL, read_wal
+    records, _ = read_wal(wal_path)
+    keep = None if shards is None else set(shards)
+    n_rec = n_ent = 0
+    for r in sorted((r for r in records if r.kind == SEAL
+                     and r.seq > base_seq
+                     and (keep is None or r.part in keep)),
+                    key=lambda r: r.seq):
+        survivor.update(r.keys, r.deltas)
+        n_rec += 1
+        n_ent += int(r.keys.size)
+    return n_rec, n_ent

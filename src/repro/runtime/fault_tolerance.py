@@ -94,13 +94,21 @@ class ResilientTrainer:
     def __init__(self, step_fn, ckpt: CheckpointManager,
                  guard: Optional[NaNGuard] = None,
                  watchdog: Optional[StepWatchdog] = None,
-                 inject_failure_at: Optional[int] = None):
+                 inject_failure_at: Optional[int] = None,
+                 stores=()):
         self.step_fn = step_fn
         self.ckpt = ckpt
         self.guard = guard or NaNGuard()
         self.watchdog = watchdog or StepWatchdog()
         self.inject_failure_at = inject_failure_at  # for tests
         self._injected = False
+        # side-table stores (corpus stats, prefix caches): their in-flight
+        # drains are joined before every checkpoint — including the
+        # emergency path — so a save never serializes alongside a store
+        # state that a background drain is still donating
+        self.stores = tuple(stores)
+        for s in self.stores:
+            ckpt.register_quiesce(s.quiesce)
 
     def run(self, state, num_steps: int, start_step: int = 0,
             shardings=None) -> tuple:

@@ -183,6 +183,36 @@ class PrefixKVCache:
         del self.store[victim]
         self.evictions += 1
 
+    # -- durability (unified snapshot surface, DESIGN.md §11) ---------------
+    def snapshot(self, path) -> None:
+        """Persist the cache through the store's own snapshot machinery:
+        the refcount table goes through ``FlashStore.snapshot()`` (no
+        parallel save path), the host block map + hit/miss counters ride
+        in a pickle sidecar next to it."""
+        import pickle
+        from pathlib import Path
+        path = Path(path)
+        self._refs.snapshot(path / "refs")
+        blob = pickle.dumps({"blocks": self.store, "hits": self.hits,
+                             "misses": self.misses,
+                             "evictions": self.evictions})
+        tmp = path / "cache.pkl.tmp"
+        tmp.write_bytes(blob)
+        tmp.rename(path / "cache.pkl")   # atomic publish
+
+    def restore(self, path) -> None:
+        """Counterpart of :meth:`snapshot`; the refcount store replays
+        its WAL tail (if one is attached) via ``FlashStore.restore``."""
+        import pickle
+        from pathlib import Path
+        path = Path(path)
+        self._refs.restore(path / "refs")
+        side = pickle.loads((path / "cache.pkl").read_bytes())
+        self.store = side["blocks"]
+        self.hits = side["hits"]
+        self.misses = side["misses"]
+        self.evictions = side["evictions"]
+
     def stats(self) -> dict:
         s = self._refs.stats()
         return {"hits": self.hits, "misses": self.misses,

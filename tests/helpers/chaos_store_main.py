@@ -1,0 +1,91 @@
+"""Chaos subprocess: SIGKILL a FlashStore between seal and settle.
+
+Usage: ``python chaos_store_main.py <backend> <scheme> <wal_path>
+<kill_after> [snapshot_path <snap_after>]``
+
+Ingests a fixed seeded stream of ±Δ batches, draining after each with
+``wait=False`` (the async path). The WAL's ``after_sync`` hook — which
+fires once per seal *event*, immediately after the seal records are
+fsync'd and strictly before the drain dispatches — SIGKILLs this process
+at seal event ``kill_after``. The parent (tests/test_chaos.py) then
+knows the log holds exactly batches 1..kill_after: batch ``kill_after``
+was sealed and logged but its drain never ran, the harshest recoverable
+point. With ``snapshot_path``, a snapshot is taken after batch
+``snap_after`` (rotating the WAL mid-stream) so restore must combine
+snapshot + replay.
+
+The parent imports this module for ``make_batches``/``open_store`` so
+the truth it computes is bit-identical to what the killed process saw.
+"""
+import os
+import signal
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[2] / "src"))
+
+import numpy as np  # noqa: E402
+
+BATCHES = 6
+BATCH = 200
+KEYSPACE = 300
+
+
+def make_batches():
+    """The seeded stream, identical in child and parent: skewed tokens,
+    ±Δ deltas (so cancellation is exercised inside the sealed chunks)."""
+    rng = np.random.default_rng(7)
+    out = []
+    for _ in range(BATCHES):
+        toks = rng.integers(0, KEYSPACE, size=BATCH).astype(np.int64)
+        dels = rng.choice(np.array([1, 1, 2, -1], np.int64), size=BATCH)
+        out.append((toks, dels))
+    return out
+
+
+def open_store(backend, scheme, wal_path):
+    from repro.core import table_jax as tj
+    from repro.core.store import FlashStore
+    # threshold high enough that only the explicit per-batch drains seal:
+    # the kill-point accounting is 1 seal event per batch
+    if backend == "sim":
+        return FlashStore.open(backend="sim", scheme=scheme, wal=wal_path,
+                               flush_threshold=10_000)
+    cfg = tj.FlashTableConfig(q_log2=10, r_log2=6, scheme=scheme,
+                              log_capacity=1 << 9, cs_partitions=4,
+                              max_updates_per_block=1 << 6,
+                              overflow_capacity=1 << 9)
+    if backend == "device":
+        return FlashStore.open(cfg, backend="device", chunk=128,
+                               wal=wal_path, flush_threshold=10_000)
+    import jax
+    n = jax.device_count()
+    n = n if n & (n - 1) == 0 else 1
+    return FlashStore.open(cfg, backend="sharded", num_shards=n,
+                           shard_chunk=128, wal=wal_path,
+                           flush_threshold=10_000)
+
+
+def main():
+    backend, scheme, wal_path, kill_after = sys.argv[1:5]
+    kill_after = int(kill_after)
+    snap_path = sys.argv[5] if len(sys.argv) > 5 else None
+    snap_after = int(sys.argv[6]) if len(sys.argv) > 6 else 0
+    st = open_store(backend, scheme, wal_path)
+
+    def maybe_kill(seal_events):
+        if seal_events == kill_after:
+            # no atexit, no cleanup, no flush: the real failure mode
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    st.wal.after_sync = maybe_kill
+    for i, (toks, dels) in enumerate(make_batches(), start=1):
+        st.update(toks, dels)
+        st.drain(wait=False)             # seals (fsync, hook) then drains
+        if snap_path is not None and i == snap_after:
+            st.snapshot(snap_path)       # rotates the WAL mid-stream
+    print("NEVER_KILLED", flush=True)    # parent asserts we died instead
+
+
+if __name__ == "__main__":
+    main()

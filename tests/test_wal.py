@@ -1,0 +1,330 @@
+"""Crash-recoverable FlashStore (ISSUE 7): WAL format + replay,
+snapshot/restore across every backend, poison recovery, and the unified
+snapshot surfaces (CorpusStats, PrefixKVCache, CheckpointManager
+quiesce, elastic WAL handoff).
+
+The recovery contract under test (DESIGN.md §11): everything sealed
+before a crash is recoverable — seal records are fsync'd before the
+drain dispatches — and replay is idempotent (restore twice, restore
+after a clean close, restore over a snapshot all agree)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import table_jax as tj
+from repro.core.store import FlashStore
+from repro.core.wal import MAGIC, SEAL, WriteAheadLog, read_wal
+
+SCHEMES = {"sim": ["MB", "MDB", "MDB-L"],
+           "device": ["MB", "MDB", "MDB-L"],
+           "sharded": ["MB", "MDB-L"]}
+
+
+def _cfg(scheme, **kw):
+    base = dict(q_log2=10, r_log2=6, scheme=scheme, log_capacity=1 << 9,
+                cs_partitions=4, max_updates_per_block=1 << 6,
+                overflow_capacity=1 << 9)
+    base.update(kw)
+    return tj.FlashTableConfig(**base)
+
+
+def _shard_count() -> int:
+    import jax
+    n = jax.device_count()
+    return n if n & (n - 1) == 0 else 1
+
+
+def _open(backend, scheme="MDB-L", **kw):
+    kw.setdefault("flush_threshold", 10_000)   # no surprise auto-drains
+    if backend == "sim":
+        return FlashStore.open(backend="sim", scheme=scheme, **kw)
+    if backend == "device":
+        kw.setdefault("chunk", 128)
+        return FlashStore.open(_cfg(scheme), backend="device", **kw)
+    kw.setdefault("shard_chunk", 128)
+    return FlashStore.open(_cfg(scheme), backend="sharded",
+                           num_shards=_shard_count(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# the log itself
+# ---------------------------------------------------------------------------
+def test_wal_roundtrip_and_watermarks(tmp_path):
+    p = tmp_path / "w.wal"
+    w = WriteAheadLog(p)
+    s1 = w.append_seal(0, np.array([3, 1, 2]), np.array([1, 1, -1]))
+    s2 = w.append_seal(1, np.array([9]), np.array([5]))
+    w.sync()
+    assert (s1, s2) == (1, 2)
+    assert w.last_seq == 2 and w.committed_seq == 0
+    w.append_commit(0, s1)
+    assert w.committed_seq == 1          # s2 uncommitted blocks the prefix
+    w.append_commit(1, s2)
+    assert w.committed_seq == 2
+    w.close()
+
+    records, discarded = read_wal(p)
+    assert discarded == 0
+    kinds = [r.kind for r in records]
+    assert kinds == [SEAL, SEAL, 2, 2]
+    np.testing.assert_array_equal(records[0].keys, [3, 1, 2])
+    np.testing.assert_array_equal(records[0].deltas, [1, 1, -1])
+    assert records[1].part == 1
+
+    # reopen resumes sequencing after the last intact record
+    w2 = WriteAheadLog(p)
+    assert w2.last_seq == 2 and w2.committed_seq == 2
+    assert w2.append_seal(0, np.array([7]), np.array([1])) == 3
+    w2.close()
+
+
+def test_wal_missing_file_reads_empty_and_bad_magic_raises(tmp_path):
+    assert read_wal(tmp_path / "nope.wal") == ([], 0)
+    bad = tmp_path / "bad.wal"
+    bad.write_bytes(b"NOTAWAL!" + b"\x00" * 32)
+    with pytest.raises(ValueError, match="magic"):
+        read_wal(bad)
+
+
+def test_wal_torn_tail_discarded_loudly(tmp_path):
+    """A crash mid-append leaves a non-record-aligned tail: the intact
+    prefix survives, the tail is dropped with a warning, and reopening
+    truncates so new appends land on a clean boundary."""
+    p = tmp_path / "torn.wal"
+    w = WriteAheadLog(p)
+    w.append_seal(0, np.array([1, 2]), np.array([1, 1]))
+    w.append_seal(0, np.array([3, 4, 5]), np.array([1, 1, 1]))
+    w.sync()
+    w.close()
+    whole = p.read_bytes()
+    p.write_bytes(whole[:-7])            # tear the last record's payload
+
+    with pytest.warns(UserWarning, match="torn WAL tail"):
+        records, discarded = read_wal(p)
+    assert discarded > 0
+    assert [r.seq for r in records] == [1]
+
+    with pytest.warns(UserWarning, match="torn WAL tail"):
+        w2 = WriteAheadLog(p)
+    assert w2.last_seq == 1
+    assert w2.append_seal(0, np.array([9]), np.array([1])) == 2
+    w2.close()
+    records, discarded = read_wal(p)     # clean again after truncation
+    assert discarded == 0 and [r.seq for r in records] == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# restore: replay semantics + idempotence (ISSUE-7 satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["sim", "device", "sharded"])
+def test_restore_without_snapshot_replays_wal(tmp_path, backend):
+    wal = tmp_path / "s.wal"
+    st = _open(backend, wal=wal)
+    st.update(np.arange(100), np.ones(100, np.int64))
+    st.drain(wait=True)
+    st.update(np.arange(50), np.full(50, 2, np.int64))
+    st.drain(wait=True)
+    assert st.wal.last_seq >= 2
+    st.close()                           # WAL survives a clean close
+
+    st2 = _open(backend, wal=wal)
+    rep = st2.restore()                  # no snapshot: fresh init + replay
+    assert rep.snapshot_step is None
+    assert rep.records_replayed >= 2
+    assert rep.entries_replayed == 150
+    assert int(st2.query(5)) == 3 and int(st2.query(75)) == 1
+
+    rep2 = st2.restore()                 # idempotent: replays the same log
+    assert rep2.entries_replayed == rep.entries_replayed
+    assert int(st2.query(5)) == 3 and int(st2.query(75)) == 1
+    st2.close()
+
+
+@pytest.mark.parametrize("backend,scheme",
+                         [(b, s) for b in SCHEMES for s in SCHEMES[b]])
+def test_snapshot_restore_with_post_snapshot_wal(tmp_path, backend, scheme):
+    """Snapshot rotates the WAL; deltas sealed afterwards replay on top
+    of the restored snapshot — no lost and no double-applied chunks."""
+    wal = tmp_path / "s.wal"
+    snap = tmp_path / "snap"
+    st = _open(backend, scheme=scheme, wal=wal)
+    st.update(np.arange(100), np.ones(100, np.int64))
+    st.drain(wait=True)
+    st.snapshot(snap)
+    assert os.path.getsize(wal) == len(MAGIC)    # rotated
+    st.update(np.arange(30), np.full(30, 4, np.int64))
+    st.drain(wait=True)
+    st.close()
+
+    st2 = _open(backend, scheme=scheme, wal=wal)
+    rep = st2.restore(snap)
+    assert rep.snapshot_step == 0
+    assert rep.records_replayed >= 1 and rep.entries_replayed == 30
+    assert int(st2.query(5)) == 5        # 1 from snapshot + 4 replayed
+    assert int(st2.query(60)) == 1       # snapshot only
+    st2.close()
+
+
+def test_restore_after_clean_close_is_noop_replay(tmp_path):
+    """snapshot() then close(): the WAL is empty, restore is a pure
+    snapshot load — zero records replayed."""
+    wal = tmp_path / "s.wal"
+    snap = tmp_path / "snap"
+    st = _open("sim", wal=wal)
+    st.update(np.arange(40))
+    st.snapshot(snap)
+    st.close()
+
+    st2 = _open("sim", wal=wal)
+    rep = st2.restore(snap)
+    assert rep.records_replayed == 0 and rep.entries_replayed == 0
+    assert int(st2.query(7)) == 1
+    st2.close()
+
+
+def test_restore_clears_poison_and_rearms(tmp_path):
+    """ISSUE-7 fix: a poisoned store (worker DrainError) used to stay
+    wedged — every flush/close re-raised. restore() clears the poison,
+    re-arms the dispatcher, and recovers the sealed chunk from the WAL
+    (zero lost deltas), leaving the store fully usable."""
+    from repro.core.store import DrainError
+    wal = tmp_path / "s.wal"
+    st = _open("device", wal=wal)
+    st.update(np.arange(10))
+    tj.flush(st.cfg, st.state)           # donate the state out: drain dies
+    st.drain(wait=False)
+    with pytest.raises(DrainError, match="donated"):
+        st.flush(wait=True)
+    with pytest.raises(RuntimeError, match="poisoned"):
+        st.flush()                       # wedged: every drain path raises
+    assert st._b.front.poisoned
+
+    rep = st.restore()                   # same store object, in place
+    assert rep.poison_cleared
+    assert rep.entries_replayed == 10    # the poisoned chunk was logged
+    assert not st._b.front.poisoned
+    np.testing.assert_array_equal(st.query(np.arange(10)), np.ones(10))
+    st.update(np.asarray([3]))           # usable again
+    st.flush(wait=True)                  # fresh worker drains fine
+    assert int(st.query(3)) == 2
+    st.close()                           # clean close, no re-raise
+
+
+def test_restore_reopens_a_closed_store(tmp_path):
+    wal = tmp_path / "s.wal"
+    st = _open("sim", wal=wal)
+    st.update(np.arange(20))
+    st.drain(wait=True)
+    st.close()
+    with pytest.raises(ValueError):
+        st.update(np.asarray([1]))
+    st.restore()                         # reopen + replay in place
+    assert int(st.query(3)) == 1
+    st.update(np.asarray([3]))           # WAL reopened: new seals log again
+    st.drain(wait=True)
+    assert st.wal.last_seq >= 2
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# unified snapshot surface (ISSUE-7 satellite)
+# ---------------------------------------------------------------------------
+def test_corpus_stats_snapshot_roundtrip(tmp_path):
+    from repro.data.stats import CorpusStats
+    cs = CorpusStats(_cfg("MDB-L"), wal=tmp_path / "cs.wal")
+    cs.ingest(np.arange(64))
+    cs.ingest(np.arange(32))
+    cs.snapshot(tmp_path / "snap")
+    cs.store.close()
+
+    cs2 = CorpusStats(_cfg("MDB-L"), wal=tmp_path / "cs.wal")
+    rep = cs2.restore(tmp_path / "snap")
+    assert (cs2.docs_seen, cs2.tokens_seen) == (2, 96)
+    assert rep.meta["docs_seen"] == 2
+    np.testing.assert_array_equal(cs2.counts(np.arange(32)), np.full(32, 2))
+    np.testing.assert_array_equal(cs2.counts(np.arange(32, 64)), np.ones(32))
+    cs2.store.close()
+
+
+def test_prefix_cache_snapshot_roundtrip(tmp_path):
+    from repro.serving.prefix_cache import PrefixKVCache
+    c = PrefixKVCache(block_tokens=4, capacity_blocks=16)
+    toks = list(range(12))
+    keys = c.insert(toks, value={"kv": np.arange(3)},
+                    slicer=lambda v, n: {"kv": v["kv"][: n // 4]})
+    n, _val, pinned = c.acquire(toks)
+    assert n == 12
+    c.snapshot(tmp_path)
+    c._refs.close()
+
+    c2 = PrefixKVCache(block_tokens=4, capacity_blocks=16)
+    c2.restore(tmp_path)
+    assert set(c2.store) == set(keys)
+    assert (c2.hits, c2.misses) == (c.hits, c.misses)
+    n2, val2, _ = c2.acquire(toks)       # refcounts restored through store
+    assert n2 == 12
+    np.testing.assert_array_equal(val2["kv"], np.arange(3))
+    counts = c2._refs.query_batch(np.asarray(keys, np.int64))
+    assert (counts >= 1).all()           # insert+acquire pins survived
+    c2._refs.close()
+
+
+def test_checkpoint_manager_quiesce_joins_inflight_drain(tmp_path):
+    """A registered store quiesce barrier means save()/emergency() never
+    serialize while a background drain is mid-donation."""
+    from repro.checkpoint.checkpoint import CheckpointManager
+    st = _open("device")
+    train_state = {"w": np.zeros(3)}     # the trainer's own pytree
+    ck = CheckpointManager(tmp_path / "ck", every_steps=1, keep=2)
+    ck.register_quiesce(st.quiesce)
+    ck.register_quiesce(st.quiesce)      # idempotent registration
+    assert len(ck._quiesce) == 1
+    st.update(np.arange(200))
+    st.drain(wait=False)                 # in flight on the worker
+    ck.save(0, train_state, blocking=True)
+    assert not st._b._disp.pending       # the save joined the drain
+    st.update(np.arange(50))
+    st.drain(wait=False)
+    ck.emergency(1, train_state)         # best-effort path joins too
+    assert not st._b._disp.pending
+    assert (tmp_path / "ck" / "step_00000001").exists()
+    st.close()
+
+
+def test_resilient_trainer_registers_store_quiesce(tmp_path):
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.runtime.fault_tolerance import ResilientTrainer
+    st = _open("sim")
+    ck = CheckpointManager(tmp_path / "ck", every_steps=1)
+    tr = ResilientTrainer(lambda s, i: (s, {"loss": 1.0}), ck, stores=(st,))
+    assert st.quiesce in ck._quiesce and tr.stores == (st,)
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# elastic WAL handoff (ISSUE-7 tentpole: departing shard re-owned)
+# ---------------------------------------------------------------------------
+def test_elastic_wal_handoff_reowns_departing_partitions(tmp_path):
+    from repro.runtime.elastic import handoff_hr_partitions
+    wal = tmp_path / "depart.wal"
+    a = _open("sharded", wal=wal)
+    toks = np.arange(200)
+    a.update(toks, np.ones(200, np.int64))
+    a.drain(wait=True)                   # sealed (logged) + drained
+    a.close()                            # node "departs"; its WAL survives
+
+    b = _open("sharded")                 # survivor: no snapshot of A
+    n_rec, n_ent = handoff_hr_partitions(wal, b)
+    assert n_rec >= 1 and n_ent == 200
+    np.testing.assert_array_equal(b.query(toks), np.ones(200))
+
+    # partition filter: replaying only shard 0's records yields exactly
+    # the keys shard 0 owned in A's front
+    c = _open("sharded")
+    n_rec0, n_ent0 = handoff_hr_partitions(wal, c, shards=[0])
+    owned0 = int((a._b.owner_of(toks) == 0).sum())
+    assert n_ent0 == owned0
+    assert int(c.query_batch(toks).sum()) == owned0
+    b.close()
+    c.close()
