@@ -15,7 +15,7 @@ from .common import emit
 
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core.hashing import Pow2Hash  # noqa: E402
+from repro.core.hashing import Pow2Hash, filter_words_for  # noqa: E402
 from repro.kernels.flash_hash import ops, ref  # noqa: E402
 
 
@@ -38,12 +38,13 @@ def run(rows):
     toks = jnp.asarray(rng.integers(0, 1 << 20, size=1 << 14), jnp.int32)
     keys, cnts = ops.accumulate(toks)
     uk, uc, *_ = ops.bucket_updates(pair, keys, cnts, 512)
+    tf = jnp.zeros((n_b, filter_words_for(r)), jnp.uint32)
 
     t_acc = _bench(ops.accumulate, toks)
     rows.append(("kernel/accumulate_16k", t_acc * 1e6,
                  "tokens=16384;dedup=sort+segsum"))
     t_ref = _bench(lambda: ref.merge_ref(pair, tk, tc, uk, uc))
-    t_k = _bench(lambda: ops.merge(pair, tk, tc, uk, uc))
+    t_k = _bench(lambda: ops.merge(pair, tk, tc, tf, uk, uc))
     tile_bytes = r * 8  # keys+counts int32
     upd_bytes = 512 * 8
     rows.append(("kernel/merge_ref_jnp", t_ref * 1e6,
@@ -56,11 +57,12 @@ def run(rows):
     for n_d in (1, n_b // 8, n_b):
         dirty = jnp.arange(n_d, dtype=jnp.int32)
         duk, duc = uk[:n_d], uc[:n_d]
-        t_d = _bench(lambda: ops.merge_dirty(pair, tk, tc, dirty, duk, duc))
+        t_d = _bench(lambda: ops.merge_dirty(pair, tk, tc, tf, dirty,
+                                             duk, duc))
         rows.append((f"kernel/merge_dirty_{n_d}of{n_b}", t_d * 1e6,
                      f"dirty={n_d};blocks={n_b};"
                      f"hbm_per_merge_B={n_d * (2 * tile_bytes + upd_bytes)}"))
-    mk, mc, *_ = ops.merge(pair, tk, tc, uk, uc)
+    mk, mc, *_ = ops.merge(pair, tk, tc, tf, uk, uc)
     q = jnp.asarray(rng.integers(0, 1 << 20, size=2048), jnp.int32)
     t_q = _bench(lambda: ops.query_sorted(pair, mk, mc, q))
     rows.append(("kernel/query_2048_pallas_interpret", t_q * 1e6,

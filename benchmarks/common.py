@@ -146,7 +146,11 @@ def rows_to_json(rows, meta: dict | None = None) -> dict:
 # ingest ≥1× the synchronous engine) — ``run.py --baseline`` fails the
 # run if any current row drops below a floor.
 ACCEPTANCE_FLOORS = {
-    "fig3dev": (("speedup_vs_per_key", 10.0),),
+    "fig3dev": (("speedup_vs_per_key", 10.0),
+                # ISSUE 8: 100%-miss batches ride the Bloom fast path...
+                ("miss_speedup_vs_filterless", 5.0),
+                # ...and 0%-miss batches pay at most 2× for the pre-pass
+                ("present_speedup_vs_filterless", 0.5)),
     "fig4dev": (("speedup_vs_per_call", 5.0),
                 ("speedup_vs_sync", 1.0)),
 }

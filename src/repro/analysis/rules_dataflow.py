@@ -18,6 +18,14 @@ FL003 — flush→invalidate. Every function that rebinds a ``.state``
 attribute (the donated table state living on an engine/backend) must
 also invalidate the paired query engine, or stale cached counts survive
 the swap. ``__init__`` (first bind, nothing cached yet) is exempt.
+
+FL003 additionally guards the Bloom-filter contract (DESIGN.md §12):
+a ``DeviceTableState(...)`` rebuild that lists fields by keyword but
+drops ``filter_words`` silently zombifies the filter (the pytree
+re-shapes and the no-false-negatives invariant dies at the next probe),
+and a device ``merge``/``merge_dirty`` call that passes table arrays but
+no filter argument skips the in-kernel maintenance that keeps merged
+keys covered. Both are flagged at the call site.
 """
 from __future__ import annotations
 
@@ -274,6 +282,58 @@ def _check_fl003(ctx) -> List:
                     f"'{fn.name}' rebinds a .state attribute without "
                     "calling query_engine.invalidate() — stale cached "
                     "counts survive the swap (flush→invalidate contract)"))
+    out.extend(_check_filter_contract(ctx))
+    return out
+
+
+#: DeviceTableState field count (segments.py); a keyword-style rebuild
+#: naming fewer fields than this while omitting filter_words is dropping
+#: the filter arrays, not renaming them.
+_STATE_FIELDS = 10
+
+_MERGE_NAMES = frozenset({"merge", "merge_dirty"})
+
+
+def _mentions_filter(node: ast.expr) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and "filter" in sub.id:
+            return True
+        if isinstance(sub, ast.Attribute) and "filter" in sub.attr:
+            return True
+    return False
+
+
+def _check_filter_contract(ctx) -> List:
+    """Bloom-filter lifecycle (DESIGN.md §12): state rebuilds must carry
+    ``filter_words``; device merges must pass the filter through."""
+    out: List = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        name = (f.id if isinstance(f, ast.Name)
+                else f.attr if isinstance(f, ast.Attribute) else None)
+        if name == "DeviceTableState" and node.keywords:
+            kw_names = {kw.arg for kw in node.keywords}
+            if (None not in kw_names            # **kwargs may carry it
+                    and "filter_words" not in kw_names
+                    and len(node.args) + len(node.keywords) < _STATE_FIELDS):
+                out.append(ctx.violation(
+                    "FL003", node,
+                    "DeviceTableState(...) rebuilt without filter_words — "
+                    "dropping the Bloom filter arrays breaks the "
+                    "no-false-negatives invariant (DESIGN.md §12)"))
+        elif (name in _MERGE_NAMES and len(node.args) >= 4
+                and not any(_mentions_filter(a) for a in node.args)
+                and not any(_mentions_filter(kw.value)
+                            for kw in node.keywords)):
+            # ≥4 positional args = the kernel/ops merge signature (pair,
+            # keys, counts, …), not an engine-level merge(wait=...)
+            out.append(ctx.violation(
+                "FL003", node,
+                f"'{name}' called without a filter argument — merges must "
+                "thread filter_words so inserted keys stay covered "
+                "(DESIGN.md §12)"))
     return out
 
 

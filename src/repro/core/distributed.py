@@ -173,7 +173,7 @@ def make_update_fn(cfg: ShardedTableConfig, mesh, axis: str,
 
 
 def make_lookup_fn(cfg: ShardedTableConfig, mesh, axis: str,
-                   with_dist: bool = False):
+                   with_dist: bool = False, with_tiles: bool = False):
     """Build a shard_map'd lookup: every shard queries the full batch
     against its local blocks; non-owned keys contribute 0; one psum
     combines. (Read path = the paper's fast random reads.)
@@ -182,6 +182,9 @@ def make_lookup_fn(cfg: ShardedTableConfig, mesh, axis: str,
     (the owner shard's device probe; non-owners contribute 0), matching
     the ``(counts, distances)`` contract of :func:`table_jax.lookup` so a
     :class:`~.query_engine.BatchedQueryEngine` can front this path.
+    ``with_tiles=True`` (requires ``with_dist``) appends the per-shard
+    tile-load counts as an ``(n_shards,)`` vector — the engine sums it
+    into its ``tile_loads`` counter.
     """
     local_cfg = cfg.local
     spec = state_pspec(axis)
@@ -193,18 +196,55 @@ def make_lookup_fn(cfg: ShardedTableConfig, mesh, axis: str,
         me = jax.lax.axis_index(axis)
         mine = owner == me
         masked_q = jnp.where(mine, q, EMPTY)
-        cnt, dist = tj.lookup(local_cfg, state, masked_q)
+        cnt, dist, tiles = tj.lookup_ex(local_cfg, state, masked_q)
         cnt = jax.lax.psum(jnp.where(mine, cnt, 0), axis)
         if not with_dist:
             return cnt
-        return cnt, jax.lax.psum(jnp.where(mine, dist, 0), axis)
+        dist = jax.lax.psum(jnp.where(mine, dist, 0), axis)
+        if not with_tiles:
+            return cnt, dist
+        return cnt, dist, tiles[None]  # (1,) per shard -> (n_shards,)
 
     from jax.experimental.shard_map import shard_map
+    if with_tiles and not with_dist:
+        raise ValueError("with_tiles requires with_dist")
+    out_specs = (P() if not with_dist
+                 else (P(), P(), P(axis)) if with_tiles
+                 else (P(), P()))
     look = shard_map(local_lookup, mesh=mesh,
                      in_specs=(spec, P()),
-                     out_specs=(P(), P()) if with_dist else P(),
+                     out_specs=out_specs,
                      check_rep=False)
     return jax.jit(look)
+
+
+def make_filter_fn(cfg: ShardedTableConfig, mesh, axis: str):
+    """Build a shard_map'd Bloom pre-filter (DESIGN.md §12): every shard
+    tests the full batch against its local per-block filters; non-owned
+    keys contribute 0; one psum combines. Returns an int32 may-contain
+    mask (0 ⇒ definitively absent from every shard) with the
+    ``(state, keys) -> mask`` contract the query engine's ``filter_fn``
+    expects."""
+    local_cfg = cfg.local
+    spec = state_pspec(axis)
+
+    def local_filter(state: tj.DeviceTableState, q):
+        state = _squeeze(state)
+        blocks_per_shard_log2 = cfg.local.q_log2 - cfg.local.r_log2
+        owner = cfg.global_pair.s(q) >> blocks_per_shard_log2
+        me = jax.lax.axis_index(axis)
+        mine = owner == me
+        masked_q = jnp.where(mine, q, EMPTY)
+        may = tj.filter_probe(local_cfg, state, masked_q)
+        return jax.lax.psum(
+            jnp.where(mine, may, False).astype(jnp.int32), axis)
+
+    from jax.experimental.shard_map import shard_map
+    filt = shard_map(local_filter, mesh=mesh,
+                     in_specs=(spec, P()),
+                     out_specs=P(),
+                     check_rep=False)
+    return jax.jit(filt)
 
 
 def make_flush_fn(cfg: ShardedTableConfig, mesh, axis: str,

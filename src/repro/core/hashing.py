@@ -27,6 +27,41 @@ import dataclasses
 _DEFAULT_A = 2_654_435_761
 _DEFAULT_B = 1_013_904_223
 
+def bloom_positions(x, bits_log2: int):
+    """k=2 Bloom bit positions in ``[0, 2**bits_log2)`` for keys ``x``.
+
+    One murmur3-finalizer mix (xor-shift + odd multiplies, all uint32 —
+    the same mask/shift-only discipline as :class:`Pow2Hash`), then both
+    positions sliced from disjoint bit ranges of the mixed word. A single
+    multiplicative hash per probe is *not* enough here: for the dense
+    small-integer key populations the table serves (token ids), two
+    linear probes stay correlated and the measured false-positive rate
+    lands ~3× above the independent-probe prediction; the finalizer's
+    avalanche restores it. Requires ``bits_log2 <= 16``; identical math
+    runs in numpy (sim twin), XLA (engine pre-filter) and inside Pallas
+    kernels (merge / probe). Returns a tuple of uint32 position arrays.
+    """
+    import numpy as _np
+    h = x.astype("uint32")
+    h = h ^ (h >> _np.uint32(16))
+    h = h * _np.uint32(0x85EBCA6B)
+    h = h ^ (h >> _np.uint32(13))
+    h = h * _np.uint32(0xC2B2AE35)
+    h = h ^ (h >> _np.uint32(16))
+    m = _np.uint32((1 << bits_log2) - 1)
+    return (h & m, (h >> _np.uint32(bits_log2)) & m)
+
+
+def filter_words_for(block_entries: int) -> int:
+    """uint32 lanes per block-filter row: smallest power of two giving
+    ≥4 bits per entry of block capacity (≈8 bits/key at 50% load →
+    ~5% false-positive rate with k=2; DESIGN.md §12)."""
+    words = 4
+    while words * 32 < block_entries * 4 and words < 2048:
+        words *= 2
+    return words  # capped at 2**16 bits: bloom_positions slices two
+                  # disjoint 16-bit ranges from one mixed uint32
+
 
 @dataclasses.dataclass(frozen=True)
 class HashPair:

@@ -23,6 +23,13 @@ stats, the serving prefix cache) goes through instead:
   is still current, so a count probed against a pre-drain state can
   never be cached after the drain's invalidation (it would be served
   stale forever);
+* **filter-backed negative verdicts** (DESIGN.md §12) — when the table
+  carries blocked-Bloom filters, one cheap ``filter_fn`` dispatch tests
+  the whole miss set first: definite misses answer 0 with *no* lookup
+  dispatch at all (skipping the tile probe *and* the change-segment /
+  overflow scans) and enter the hot cache as negative entries under the
+  same epoch fence, so a concurrent drain evicts them exactly like
+  positive entries;
 * **probe-distance aggregation** — per-key probe distances from the
   device are folded into batch-level wear/latency stats (sum + max +
   served-query count); cache hits do not re-probe and add nothing.
@@ -55,6 +62,11 @@ class QueryEngineStats:
                                 # flight (epoch fence, DESIGN.md §9)
     probe_total: int = 0        # sum of device probe distances
     probe_max: int = 0          # worst single probe in any batch
+    filter_negatives: int = 0   # unique keys answered 0 by the Bloom
+                                # pre-filter with no lookup dispatch (§12)
+    tile_loads: int = 0         # data-segment tiles fetched by dispatched
+                                # lookups (when the lookup_fn reports them;
+                                # true negatives contribute 0)
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -64,7 +76,7 @@ class BatchedQueryEngine:
     """Dedup + chunk + hot-cache front end over ``table_jax.lookup``."""
 
     def __init__(self, cfg, chunk: int = 1024, hot_capacity: int = 4096,
-                 lookup_fn=None):
+                 lookup_fn=None, filter_fn=None):
         import jax.numpy as jnp  # deferred: sim-only users stay jax-free
 
         from . import table_jax as tj
@@ -74,11 +86,18 @@ class BatchedQueryEngine:
         self.chunk = int(chunk)
         self.hot_capacity = int(hot_capacity)
         # pluggable device dispatch: any (state, keys) -> (counts, dists)
-        # with table_jax.lookup's contract (EMPTY -> (0, 0)). The sharded
-        # backend passes its shard_map'd consolidated lookup here; the
-        # default is the single-table path.
+        # or (counts, dists, tile_loads) with table_jax.lookup's contract
+        # (EMPTY -> (0, 0)). The sharded backend passes its shard_map'd
+        # consolidated lookup here; the default is the single-table path,
+        # which reports tile loads.
         self._lookup = (lookup_fn if lookup_fn is not None
-                        else lambda state, q: tj.lookup(self.cfg, state, q))
+                        else lambda state, q: tj.lookup_ex(self.cfg,
+                                                           state, q))
+        # optional Bloom pre-filter: (state, keys) -> bool/int may-contain
+        # mask (False ⇒ definitively absent from the whole device table).
+        # The store wires table_jax.filter_probe (or the sharded psum'd
+        # twin) here when cfg.filters is on.
+        self._filter = filter_fn
         self._hot: Dict[int, int] = {}
         # invalidation epoch: bumped on every invalidate(). Lookups fence
         # their cache inserts on it so a count probed against a pre-drain
@@ -149,6 +168,38 @@ class BatchedQueryEngine:
             epoch = self._epoch          # fence: inserts only if unchanged
             self._trace("lookup_begin", "state", "r", epoch=epoch)
             miss = uniq[miss_idx]
+            if self._filter is not None and miss.size:
+                # Bloom pre-pass (DESIGN.md §12): one cheap dispatch over
+                # the whole miss set. False ⇒ the key is in none of data /
+                # change / overflow, so the entire lookup is skipped —
+                # ucnt already holds 0 for those positions.
+                step = self.chunk
+                may = np.empty(miss.size, bool)
+                for lo in range(0, miss.size, step):
+                    part = miss[lo:lo + step]
+                    pad = step - part.size
+                    if pad:
+                        part = np.concatenate(
+                            [part, np.full(pad, tj.EMPTY, np.int64)])
+                    m = np.asarray(
+                        self._filter(state, jnp.asarray(part, jnp.int32)))
+                    may[lo:lo + step - pad] = m[:step - pad].astype(bool)
+                neg = miss[~may]
+                if neg.size:
+                    self.stats.filter_negatives += neg.size
+                    if epoch == self._epoch:
+                        # negative entries are ordinary count-0 entries:
+                        # the next invalidate() evicts them wholesale
+                        self._trace("cache_insert", "cache", "w",
+                                    epoch=epoch)
+                        for k in neg:
+                            self._remember(int(k), 0)
+                    else:
+                        self._trace("lookup_fenced", epoch=self._epoch)
+                        self.stats.fenced += neg.size
+                    keep = np.flatnonzero(may)
+                    miss_idx = [miss_idx[i] for i in keep]
+                    miss = miss[may]
             self.stats.device_queries += miss.size
             got = np.empty(miss.size, np.int64)
             step = self.chunk
@@ -158,7 +209,11 @@ class BatchedQueryEngine:
                 if pad:  # fixed shapes → one compiled program per table
                     part = np.concatenate(
                         [part, np.full(pad, tj.EMPTY, np.int64)])
-                cnt, dist = self._lookup(state, jnp.asarray(part, jnp.int32))
+                res = self._lookup(state, jnp.asarray(part, jnp.int32))
+                cnt, dist = res[0], res[1]
+                if len(res) == 3:
+                    # scalar (single table) or per-shard vector (sharded)
+                    self.stats.tile_loads += int(np.asarray(res[2]).sum())
                 n_real = step - pad
                 cnt = np.asarray(cnt)[:n_real]
                 dist = np.asarray(dist)[:n_real]

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.flash_hash import ops as hops
+from .hashing import bloom_positions
 
 EMPTY = hops.EMPTY
 
@@ -62,6 +63,11 @@ class DeviceTableState(NamedTuple):
     ov_keys: jax.Array     # (ov_cap,) int32 — overflow region
     ov_counts: jax.Array   # (ov_cap,) int32
     ov_ptr: jax.Array      # () int32
+    filter_words: jax.Array  # (n_b, fw) uint32 — per-block blocked-Bloom
+                             # filter rows (DESIGN.md §12). Monotone: bits
+                             # are only ever OR'd in, covering every key in
+                             # the data/change/overflow segments, so a
+                             # filter-negative is a definitive miss.
     stats: TableStats
 
 
@@ -72,7 +78,8 @@ def zero_stats() -> TableStats:
 
 
 def init_state(num_blocks: int, block_entries: int, log_shape,
-               log_ptr_shape, overflow_capacity: int) -> DeviceTableState:
+               log_ptr_shape, overflow_capacity: int,
+               filter_words: int) -> DeviceTableState:
     """Fresh segment state: EMPTY data/change/overflow regions."""
     return DeviceTableState(
         keys=jnp.full((num_blocks, block_entries), EMPTY, jnp.int32),
@@ -83,8 +90,82 @@ def init_state(num_blocks: int, block_entries: int, log_shape,
         ov_keys=jnp.full((overflow_capacity,), EMPTY, jnp.int32),
         ov_counts=jnp.zeros((overflow_capacity,), jnp.int32),
         ov_ptr=jnp.zeros((), jnp.int32),
+        filter_words=jnp.zeros((num_blocks, filter_words), jnp.uint32),
         stats=zero_stats(),
     )
+
+
+# ---------------------------------------------------------------------------
+# per-block blocked-Bloom filter (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def filter_or_keys(pair, filt, keys):
+    """OR the Bloom bits of ``keys`` into their home blocks' filter rows.
+
+    Maintenance is *monotone*: the device table never removes keys
+    (counting semantics — deletion is a −Δ on the count), so filter bits
+    are only ever set. Every staging and merge path can therefore OR its
+    keys in independently, in any order, without coordination, and the
+    no-false-negative invariant holds by induction over key entry points
+    (DESIGN.md §12). ``EMPTY`` keys are padding and contribute nothing.
+
+    JAX has no ``.at[].or_``, so the scatter-OR is: flatten each
+    (key, probe) to a global bit id, sort, drop duplicate heads, then
+    ``.at[].add`` the single-bit masks — after dedup all bits are
+    distinct, so add ≡ or.
+    """
+    n_b, fw = filt.shape
+    bits_log2 = (fw * 32).bit_length() - 1
+    valid = keys != EMPTY
+    blk = jnp.where(valid, pair.s(keys), n_b).astype(jnp.int32)
+    base = blk * (fw * 32)
+    fids = jnp.concatenate(
+        [base + p.astype(jnp.int32) for p in bloom_positions(keys, bits_log2)])
+    fids = jnp.sort(fids)
+    is_head = jnp.concatenate([jnp.ones((1,), bool), fids[1:] != fids[:-1]])
+    is_head &= fids < n_b * fw * 32
+    word = jnp.where(is_head, fids >> 5, n_b * fw)
+    mask = jnp.where(
+        is_head,
+        jnp.left_shift(jnp.int32(1), fids & 31).astype(jnp.uint32),
+        jnp.uint32(0))
+    new = jnp.zeros((n_b * fw,), jnp.uint32).at[word].add(mask, mode="drop")
+    return filt | new.reshape(n_b, fw)
+
+
+def filter_may_contain(pair, filt, q):
+    """Test a query batch against the per-block filters (plain XLA).
+
+    Returns a bool ``(Q,)`` mask: False ⇒ the key is definitively absent
+    from the data, change and overflow segments (the filter covers all
+    three); True ⇒ maybe present (~5% false positives at design load).
+    ``EMPTY`` keys test False. This is the engine-level pre-filter; the
+    in-kernel twin is :func:`kernel.filter_probe_grid`.
+    """
+    n_b, fw = filt.shape
+    bits_log2 = (fw * 32).bit_length() - 1
+    valid = q != EMPTY
+    blk = jnp.where(valid, pair.s(q), 0).astype(jnp.int32)
+    may = valid
+    for p in bloom_positions(q, bits_log2):
+        word = filt[blk, (p >> jnp.uint32(5)).astype(jnp.int32)]
+        may &= ((word >> (p & jnp.uint32(31))) & jnp.uint32(1)) != 0
+    return may
+
+
+def rebuild_filters(pair, state: DeviceTableState) -> DeviceTableState:
+    """Recompute every filter row from the live segments.
+
+    Normal operation never needs this (maintenance is incremental and
+    monotone); it exists for filter-width migrations and as the oracle
+    the property tests compare incremental maintenance against. The
+    result is a *superset* of the minimal bit set only through overflow
+    keys whose home tile later compacted — same conservative direction
+    as incremental maintenance."""
+    filt = jnp.zeros_like(state.filter_words)
+    for keys in (state.keys.reshape(-1), state.log_keys.reshape(-1),
+                 state.ov_keys):
+        filt = filter_or_keys(pair, filt, keys)
+    return state._replace(filter_words=filt)
 
 
 @jax.jit
@@ -203,8 +284,13 @@ def append_log(cfg, state: DeviceTableState, keys, cnts) -> DeviceTableState:
     stats = state.stats._replace(
         staged_entries=state.stats.staged_entries + n_new,
         stages=state.stats.stages + 1)
+    # staged keys become device-visible here, so their filter bits must be
+    # set *now* — a filter-negative must also rule out the change segment
     return state._replace(log_keys=log_keys, log_counts=log_counts,
-                          log_ptr=state.log_ptr + keys.shape[0], stats=stats)
+                          log_ptr=state.log_ptr + keys.shape[0],
+                          filter_words=filter_or_keys(
+                              cfg.pair, state.filter_words, keys),
+                          stats=stats)
 
 
 def partition_of(cfg, keys):
@@ -226,8 +312,14 @@ def scatter_partitions(cfg, state: DeviceTableState, keys, cnts):
     stats = state.stats._replace(
         staged_entries=state.stats.staged_entries
         + n_fit.sum(dtype=jnp.int32))
+    # conservative filter maintenance: OR in *all* valid keys, including
+    # the non-fitting rest — those retry (and land) right after the
+    # partition merge, so pre-setting their bits is a harmless superset
     state = state._replace(log_keys=log_keys, log_counts=log_counts,
-                           log_ptr=log_ptr, stats=stats)
+                           log_ptr=log_ptr,
+                           filter_words=filter_or_keys(
+                               cfg.pair, state.filter_words, keys),
+                           stats=stats)
     return state, rest_k, rest_c
 
 
@@ -266,9 +358,10 @@ def merge_dirty_batch(cfg, state: DeviceTableState, keys, cnts):
     rows = jnp.where(valid, inv[blk], n_b).astype(jnp.int32)
     uk, uc, carry_k, carry_c, n_carried = hops.bucket_rows(
         rows, keys, cnts, n_b, cfg.max_updates_per_block)
-    nk, nc, spill_k, spill_c = hops.merge_dirty(
-        pair, state.keys, state.counts, perm, uk, uc, cfg.interpret)
-    state = state._replace(keys=nk, counts=nc)
+    nk, nc, nf, spill_k, spill_c = hops.merge_dirty(
+        pair, state.keys, state.counts, state.filter_words, perm, uk, uc,
+        cfg.interpret)
+    state = state._replace(keys=nk, counts=nc, filter_words=nf)
     state = append_overflow(state, spill_k, spill_c)
     n_dirty = dirty.sum(dtype=jnp.int32)
     stats = state.stats._replace(
@@ -305,9 +398,10 @@ def merge_partition(cfg, state: DeviceTableState, p) -> DeviceTableState:
     uk, uc, carry_k, carry_c, n_carried = hops.bucket_rows(
         rows, sk, sc, k, cfg.max_updates_per_block)
     dirty = (p * k + jnp.arange(k)).astype(jnp.int32)
-    nk, nc, spill_k, spill_c = hops.merge_dirty(
-        pair, state.keys, state.counts, dirty, uk, uc, cfg.interpret)
-    state = state._replace(keys=nk, counts=nc)
+    nk, nc, nf, spill_k, spill_c = hops.merge_dirty(
+        pair, state.keys, state.counts, state.filter_words, dirty, uk, uc,
+        cfg.interpret)
+    state = state._replace(keys=nk, counts=nc, filter_words=nf)
     state = append_overflow(state, spill_k, spill_c)
     # carried updates stay staged at the head of the partition
     new_k, new_c, n_carry = compact(carry_k, carry_c)

@@ -680,7 +680,9 @@ class DeviceBackend:
         self.cfg = cfg if cfg is not None else tj.FlashTableConfig(**table_kw)
         self.scheme = self.cfg.scheme
         self.query_engine = BatchedQueryEngine(
-            self.cfg, chunk=query_chunk, hot_capacity=hot_capacity)
+            self.cfg, chunk=query_chunk, hot_capacity=hot_capacity,
+            filter_fn=((lambda state, q: tj.filter_probe(self.cfg, state, q))
+                       if self.cfg.filters else None))
         self._track_wear = bool(track_wear)
         self._disp = FlushDispatcher(enabled=async_flush)
         self.writer = BatchedWriteEngine(
@@ -928,10 +930,15 @@ class ShardedBackend:
         self._upd = D.make_update_fn(cfg, self.mesh, axis,
                                      with_deltas=True, donate=True)
         self._mrg = D.make_flush_fn(cfg, self.mesh, axis, donate=True)
-        look = D.make_lookup_fn(cfg, self.mesh, axis, with_dist=True)
+        look = D.make_lookup_fn(cfg, self.mesh, axis, with_dist=True,
+                                with_tiles=True)
+        filt = (D.make_filter_fn(cfg, self.mesh, axis)
+                if cfg.local.filters else None)
         self.query_engine = BatchedQueryEngine(
             cfg.local, chunk=query_chunk, hot_capacity=hot_capacity,
-            lookup_fn=lambda state, q: look(state, q))
+            lookup_fn=lambda state, q: look(state, q),
+            filter_fn=(None if filt is None
+                       else lambda state, q: filt(state, q)))
         spec = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
                             D.state_pspec(axis),
                             is_leaf=lambda s: type(s).__name__

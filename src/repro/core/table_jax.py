@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from ..kernels.flash_hash import ops as hops
 from . import segments as seg
 from .hashing import Pow2Hash
+from .hashing import filter_words_for as hashing_filter_words_for
 
 EMPTY = seg.EMPTY
 
@@ -75,6 +76,12 @@ class FlashTableConfig:
     max_updates_per_block: int = 1 << 9   # VMEM cap per tile merge
     overflow_capacity: int = 1 << 10
     interpret: bool = True        # Pallas interpret mode (CPU container)
+    filters: bool = True          # consult the blocked-Bloom filters on
+                                  # lookups (§12). Maintenance always runs
+                                  # (state invariants stay uniform); this
+                                  # only gates the negative-lookup fast
+                                  # path, so it can be toggled per table
+                                  # for A/B benchmarks.
 
     def __post_init__(self):
         if self.scheme not in _SCHEMES:
@@ -114,6 +121,11 @@ class FlashTableConfig:
         """MDB: staged entries one change-segment partition can hold."""
         return self.log_capacity // self.cs_partitions
 
+    @property
+    def filter_words(self) -> int:
+        """uint32 lanes per block's blocked-Bloom filter row (§12)."""
+        return hashing_filter_words_for(self.block_entries)
+
 
 def init(cfg: FlashTableConfig) -> DeviceTableState:
     if cfg.scheme == "MDB":
@@ -123,7 +135,8 @@ def init(cfg: FlashTableConfig) -> DeviceTableState:
         log_shape = (cfg.log_capacity,)
         log_ptr_shape = ()
     return seg.init_state(cfg.num_blocks, cfg.block_entries,
-                          log_shape, log_ptr_shape, cfg.overflow_capacity)
+                          log_shape, log_ptr_shape, cfg.overflow_capacity,
+                          cfg.filter_words)
 
 
 # ---------------------------------------------------------------------------
@@ -277,23 +290,54 @@ def flush(cfg: FlashTableConfig, state: DeviceTableState) -> DeviceTableState:
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def lookup(cfg: FlashTableConfig, state: DeviceTableState, q_keys
-           ) -> Tuple[jax.Array, jax.Array]:
+def lookup_ex(cfg: FlashTableConfig, state: DeviceTableState, q_keys
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Batched point queries (paper §2.7): data segment (blocked Pallas
     probe — one tile fetch per queried block per wave) + change segment
     scan + overflow scan, each shared across the whole batch. Returns
-    (counts, probe_distances); ``EMPTY`` entries are padding → ``(0, 0)``.
+    (counts, probe_distances, tile_loads); ``EMPTY`` entries are padding
+    → ``(0, 0)``.
+
+    With ``cfg.filters`` the blocked-Bloom pre-pass inside
+    :func:`ops.query_blocked_ex` answers definite misses before any tile
+    fetch — a filter-killed key reports distance 0 and contributes no
+    ``tile_loads``. The filter also covers the change segment and
+    overflow (staging ORs bits in too), so a filter-negative needs the
+    scans only for the *surviving* keys — but the scans are batch-shared
+    fixed-shape loops, so they run regardless; the engine-level short
+    circuit (:mod:`query_engine`) is what skips whole dispatches.
 
     Read path: ``state`` is *not* donated.
     """
     q = q_keys.astype(jnp.int32)
-    cnt, dist = hops.query_blocked(cfg.pair, state.keys, state.counts, q,
-                                   128, cfg.interpret)
+    fw = state.filter_words if cfg.filters else None
+    cnt, dist, tiles = hops.query_blocked_ex(
+        cfg.pair, state.keys, state.counts, q, 128, cfg.interpret, fw)
     if cfg.scheme != "MB":  # MB has no change segment to consolidate
         cnt = cnt + seg.scan_segment(state.log_keys.reshape(-1),
                                      state.log_counts.reshape(-1), q)
     cnt = cnt + seg.scan_segment(state.ov_keys, state.ov_counts, q)
+    return cnt, dist, tiles
+
+
+def lookup(cfg: FlashTableConfig, state: DeviceTableState, q_keys
+           ) -> Tuple[jax.Array, jax.Array]:
+    """:func:`lookup_ex` without the tile count (compat entry)."""
+    cnt, dist, _ = lookup_ex(cfg, state, q_keys)
     return cnt, dist
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def filter_probe(cfg: FlashTableConfig, state: DeviceTableState, q_keys
+                 ) -> jax.Array:
+    """Engine-level may-contain verdicts (one cheap dispatch, no tiles).
+
+    Bool ``(Q,)``: False ⇒ the key is definitively absent from the whole
+    device table (data + change + overflow segments — staging and merge
+    both maintain the filter), so the engine can answer 0 without
+    dispatching a lookup at all. ``EMPTY`` keys test False."""
+    q = q_keys.astype(jnp.int32)
+    return seg.filter_may_contain(cfg.pair, state.filter_words, q)
 
 
 @functools.partial(jax.jit, static_argnums=0)

@@ -32,7 +32,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from .flash_model import CostLedger, TableGeometry
-from .hashing import HashPair, hash_pair_for
+from .hashing import HashPair, bloom_positions, filter_words_for, hash_pair_for
 
 EMPTY = -1
 TOMBSTONE = -2
@@ -46,6 +46,8 @@ class QueryStats:
     cs_block_reads: int = 0
     cs_page_reads: int = 0
     overflow_page_reads: int = 0
+    filter_negatives: int = 0  # queries answered by the RAM-resident
+                               # Bloom filter with zero flash reads (§12)
 
     def time_us(self, dev) -> float:
         return ((self.ds_page_reads + self.cs_page_reads +
@@ -268,13 +270,43 @@ class _RamBuffer:
         return out
 
 
+class _BlockedBloom:
+    """RAM-resident per-block Bloom filter array — the event-level twin of
+    the device table's ``filter_words`` (DESIGN.md §12). Same geometry
+    (:func:`filter_words_for`), same hash (:func:`bloom_positions`), same
+    monotone-OR discipline: bits are only ever set, when keys become
+    flash-visible at a drain. ``remove()`` leaves stale positives behind
+    (conservative — a false positive costs a probe, never correctness)."""
+
+    def __init__(self, num_blocks: int, block_entries: int):
+        fw = filter_words_for(block_entries)
+        self.bits_log2 = (fw * 32).bit_length() - 1
+        self.words = np.zeros((num_blocks, fw), dtype=np.uint32)
+
+    def add_batch(self, block: int, keys: np.ndarray) -> None:
+        row = self.words[block]
+        for p in bloom_positions(np.asarray(keys, np.int64), self.bits_log2):
+            np.bitwise_or.at(row, (p >> np.uint32(5)).astype(np.int64),
+                             np.left_shift(np.uint32(1),
+                                           p & np.uint32(31)))
+
+    def may_contain(self, block: int, key: int) -> bool:
+        row = self.words[block]
+        for p in bloom_positions(np.asarray([key], np.int64), self.bits_log2):
+            i = int(p[0])
+            if not (int(row[i >> 5]) >> (i & 31)) & 1:
+                return False
+        return True
+
+
 class FlashHashTableBase:
     """Shared machinery: insert/update/delete path, RAM buffer, merges."""
 
     scheme = "?"
 
     def __init__(self, geom: TableGeometry, ram_buffer_pct: float,
-                 a: Optional[int] = None, overflow_blocks: int = 1):
+                 a: Optional[int] = None, overflow_blocks: int = 1,
+                 filters: bool = True):
         self.geom = geom
         kwargs = {} if a is None else {"a": a}
         self.pair = hash_pair_for(geom.num_blocks, geom.block_entries, **kwargs)
@@ -282,6 +314,8 @@ class FlashHashTableBase:
         self.ds = _DataSegment(geom, self.pair, self.ledger, overflow_blocks)
         cap = int(ram_buffer_pct / 100.0 * geom.total_entries)
         self.ram = _RamBuffer(self.pair, cap)
+        self.filters = (_BlockedBloom(geom.num_blocks, geom.block_entries)
+                        if filters else None)
         self.qstats = QueryStats()
 
     # -- element insertion / update / deletion (§2.5, §2.6) ---------------
@@ -327,6 +361,18 @@ class FlashHashTableBase:
         """Push everything to the data segment (end-of-run)."""
         raise NotImplementedError
 
+    # -- RAM drain + Bloom maintenance --------------------------------------
+    def _drain(self) -> Dict[int, List]:
+        """``ram.drain_by_block()`` plus filter maintenance: this boundary
+        is where keys become flash-visible (staged or merged), so their
+        Bloom bits are OR'd in here — before that the RAM buffer itself
+        answers them, after that the bits cover them forever (monotone)."""
+        groups = self.ram.drain_by_block()
+        if self.filters is not None:
+            for b, (keys, _deltas) in groups.items():
+                self.filters.add_batch(b, keys)
+        return groups
+
     # -- merge helper: one data-segment block ------------------------------
     def _merge_block(self, b: int, keys: np.ndarray, deltas: np.ndarray):
         self.ledger.read_block()
@@ -338,6 +384,16 @@ class FlashHashTableBase:
     # -- queries (§2.7) -----------------------------------------------------
     def query(self, key: int) -> int:
         key = int(key)
+        if (self.filters is not None
+                and not self.filters.may_contain(int(self.pair.s(key)), key)):
+            # definitive miss on all of data / change / overflow: only the
+            # RAM buffer can still hold the key; zero flash reads accrue
+            total = self.ram.get(key)
+            self.qstats.queries += 1
+            self.qstats.filter_negatives += 1
+            if total != 0:
+                self.qstats.found += 1
+            return total
         total = self.ram.get(key)                    # negligible cost
         total += self._query_change_segment(key)     # scheme-specific cost
         found, cnt, ds_pages, ov_pages = self.ds.probe_cost_pages(key)
@@ -396,7 +452,7 @@ class MBTable(FlashHashTableBase):
     scheme = "MB"
 
     def flush(self) -> None:
-        groups = self.ram.drain_by_block()
+        groups = self._drain()
         if not groups:
             return
         self.ledger.merge_event()
@@ -428,7 +484,7 @@ class MDBTable(FlashHashTableBase):
         return min(b // self.k, self.cs_blocks - 1)
 
     def flush(self) -> None:
-        groups = self.ram.drain_by_block()
+        groups = self._drain()
         if not groups:
             return
         self.ledger.stage_event()
@@ -504,7 +560,7 @@ class MDBLTable(FlashHashTableBase):
         self.slot_pages: Dict[int, set] = {}  # slot -> log pages holding it
 
     def flush(self) -> None:
-        groups = self.ram.drain_by_block()
+        groups = self._drain()
         if not groups:
             return
         self.ledger.stage_event()
@@ -582,7 +638,7 @@ class NaiveTable(FlashHashTableBase):
         self.ram.capacity = 1  # flush on every insert
 
     def flush(self) -> None:
-        groups = self.ram.drain_by_block()
+        groups = self._drain()
         for b, (keys, deltas) in groups.items():
             for k, d in zip(keys.tolist(), deltas.tolist()):
                 self.ledger.read_page()

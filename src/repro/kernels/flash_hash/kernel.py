@@ -17,6 +17,12 @@ Kernels
   on-device analogue of "only merge blocks with staged updates").
 * ``query``       — block-table indirection: scalar-prefetched block ids
   pick the tile each query batch reads (PagedAttention-style indexing).
+* ``filter_probe_grid`` — negative-lookup pre-pass (DESIGN.md §12): each
+  grid step holds one block's blocked-Bloom filter row (a few uint32
+  lanes — SMEM/VMEM-resident, ~64× smaller than the tile) and answers
+  membership for up to ``qcap`` queries without touching the tile. Both
+  merge kernels OR the inserted keys' Bloom bits into the filter row of
+  exactly the dirty blocks they visit, in the same tile pass.
 
 All kernels run under ``interpret=True`` on CPU for validation; BlockSpecs
 use power-of-two ``r`` (lane-dim multiples of 128 for real TPUs).
@@ -30,29 +36,55 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ...core.hashing import Pow2Hash
+from ...core.hashing import Pow2Hash, bloom_positions
 
 EMPTY = -1
+
+
+def _bloom_or_row(filt, aw, u, valid, bits_log2):
+    """OR one key's Bloom bits into a ``(1, fw)`` filter row.
+
+    ``aw`` is the lane iota over the row, ``u`` the key as uint32. All
+    lane-parallel select/shift — no scatter."""
+    for p in bloom_positions(u, bits_log2):
+        w = (p >> jnp.uint32(5)).astype(jnp.int32)
+        mask = jnp.left_shift(jnp.uint32(1), p & jnp.uint32(31))
+        filt = jnp.where((aw == w) & valid, filt | mask, filt)
+    return filt
+
+
+def _bloom_test_row(filt, aw, u, bits_log2):
+    """Test one key against a ``(1, fw)`` filter row (k-probe AND)."""
+    hit = jnp.uint32(1)
+    for p in bloom_positions(u, bits_log2):
+        w = (p >> jnp.uint32(5)).astype(jnp.int32)
+        word = jnp.sum(jnp.where(aw == w, filt, jnp.uint32(0)))
+        hit &= (word >> (p & jnp.uint32(31))) & jnp.uint32(1)
+    return hit != 0
 
 
 # --------------------------------------------------------------------------
 # merge kernel
 # --------------------------------------------------------------------------
-def _merge_kernel(pair: Pow2Hash, tk_ref, tc_ref, uk_ref, uc_ref,
-                  ok_ref, oc_ref, sk_ref, sc_ref):
+def _merge_kernel(pair: Pow2Hash, tk_ref, tc_ref, tf_ref, uk_ref, uc_ref,
+                  ok_ref, oc_ref, of_ref, sk_ref, sc_ref):
     r = tk_ref.shape[1]
+    fw = tf_ref.shape[1]
     max_u = uk_ref.shape[1]
     keys0 = tk_ref[...]          # (1, r) int32 tile in VMEM
     counts0 = tc_ref[...]
+    filt0 = tf_ref[...]          # (1, fw) uint32 blocked-Bloom filter row
     uk = uk_ref[...]             # (1, max_u)
     uc = uc_ref[...]
     ar = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+    aw = jax.lax.broadcasted_iota(jnp.int32, (1, fw), 1)
     au = jax.lax.broadcasted_iota(jnp.int32, (1, max_u), 1)
     inf = jnp.int32(r + 1)
     rmask = jnp.int32(r - 1)
+    fbits_log2 = (fw * 32).bit_length() - 1
 
     def body(j, carry):
-        keys, counts, spill_k, spill_c, n_spill = carry
+        keys, counts, filt, spill_k, spill_c, n_spill = carry
         k = jax.lax.dynamic_index_in_dim(uk[0], j, keepdims=False)
         c = jax.lax.dynamic_index_in_dim(uc[0], j, keepdims=False)
         valid = k != EMPTY
@@ -66,35 +98,42 @@ def _merge_kernel(pair: Pow2Hash, tk_ref, tc_ref, uk_ref, uc_ref,
         is_insert = d_empty < d_match
         keys = jnp.where(hit & is_insert, k, keys)
         counts = jnp.where(hit, counts + c, counts)
+        # every valid update key gets its filter bits — including spills,
+        # whose home block is this one (queries consult the home filter)
+        filt = _bloom_or_row(filt, aw, k.astype(jnp.uint32), valid,
+                             fbits_log2)
         do_spill = valid & ~found
         s_hit = (au == n_spill) & do_spill
         spill_k = jnp.where(s_hit, k, spill_k)
         spill_c = jnp.where(s_hit, c, spill_c)
         n_spill = n_spill + do_spill.astype(jnp.int32)
-        return keys, counts, spill_k, spill_c, n_spill
+        return keys, counts, filt, spill_k, spill_c, n_spill
 
-    init = (keys0, counts0,
+    init = (keys0, counts0, filt0,
             jnp.full((1, max_u), EMPTY, jnp.int32),
             jnp.zeros((1, max_u), counts0.dtype),
             jnp.int32(0))
-    keys, counts, spill_k, spill_c, _ = jax.lax.fori_loop(
+    keys, counts, filt, spill_k, spill_c, _ = jax.lax.fori_loop(
         0, max_u, body, init)
     ok_ref[...] = keys
     oc_ref[...] = counts
+    of_ref[...] = filt
     sk_ref[...] = spill_k
     sc_ref[...] = spill_c
 
 
-@functools.partial(jax.jit, static_argnums=(0, 5))
-def merge(pair: Pow2Hash, table_keys, table_counts, upd_keys, upd_counts,
-          interpret: bool = True):
+@functools.partial(jax.jit, static_argnums=(0, 6))
+def merge(pair: Pow2Hash, table_keys, table_counts, filter_words,
+          upd_keys, upd_counts, interpret: bool = True):
     """Merge bucketed updates into the data segment.
 
     table_keys/table_counts: (n_b, r) int32
+    filter_words:            (n_b, fw) uint32 blocked-Bloom filter rows
     upd_keys/upd_counts:     (n_b, max_u) int32, EMPTY-padded
-    Returns (new_keys, new_counts, spill_keys, spill_counts).
+    Returns (new_keys, new_counts, new_filter, spill_keys, spill_counts).
     """
     n_b, r = table_keys.shape
+    _, fw = filter_words.shape
     _, max_u = upd_keys.shape
     kern = functools.partial(_merge_kernel, pair)
     return pl.pallas_call(
@@ -103,39 +142,45 @@ def merge(pair: Pow2Hash, table_keys, table_counts, upd_keys, upd_counts,
         in_specs=[
             pl.BlockSpec((1, r), lambda b: (b, 0)),
             pl.BlockSpec((1, r), lambda b: (b, 0)),
+            pl.BlockSpec((1, fw), lambda b: (b, 0)),
             pl.BlockSpec((1, max_u), lambda b: (b, 0)),
             pl.BlockSpec((1, max_u), lambda b: (b, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, r), lambda b: (b, 0)),
             pl.BlockSpec((1, r), lambda b: (b, 0)),
+            pl.BlockSpec((1, fw), lambda b: (b, 0)),
             pl.BlockSpec((1, max_u), lambda b: (b, 0)),
             pl.BlockSpec((1, max_u), lambda b: (b, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n_b, r), table_keys.dtype),
             jax.ShapeDtypeStruct((n_b, r), table_counts.dtype),
+            jax.ShapeDtypeStruct((n_b, fw), filter_words.dtype),
             jax.ShapeDtypeStruct((n_b, max_u), upd_keys.dtype),
             jax.ShapeDtypeStruct((n_b, max_u), upd_counts.dtype),
         ],
-        input_output_aliases={0: 0, 1: 1},   # in-place tile update
+        input_output_aliases={0: 0, 1: 1, 2: 2},   # in-place tile update
         interpret=interpret,
-    )(table_keys, table_counts, upd_keys, upd_counts)
+    )(table_keys, table_counts, filter_words, upd_keys, upd_counts)
 
 
 # --------------------------------------------------------------------------
 # dirty-only merge (beyond-paper §Perf optimization)
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnums=(0, 6))
-def merge_dirty(pair: Pow2Hash, table_keys, table_counts, dirty_blocks,
-                upd_keys, upd_counts, interpret: bool = True):
+@functools.partial(jax.jit, static_argnums=(0, 7))
+def merge_dirty(pair: Pow2Hash, table_keys, table_counts, filter_words,
+                dirty_blocks, upd_keys, upd_counts, interpret: bool = True):
     """Like :func:`merge`, but the grid only visits ``dirty_blocks``.
 
     dirty_blocks: (n_d,) int32 block ids (may repeat the last id as padding —
     revisiting an already-merged block with EMPTY updates is a no-op).
     upd_keys/upd_counts: (n_d, max_u) updates for the listed blocks.
+    The filter rows of exactly the dirty blocks are OR-updated in the same
+    pass; clean blocks' rows pass through untouched via the aliasing.
     """
     n_b, r = table_keys.shape
+    _, fw = filter_words.shape
     n_d, max_u = upd_keys.shape
 
     def kern(blocks_ref, *refs):  # scalar-prefetch ref only feeds index_maps
@@ -148,12 +193,14 @@ def merge_dirty(pair: Pow2Hash, table_keys, table_counts, dirty_blocks,
         in_specs=[
             pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
             pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
+            pl.BlockSpec((1, fw), lambda i, blocks: (blocks[i], 0)),
             pl.BlockSpec((1, max_u), lambda i, blocks: (i, 0)),
             pl.BlockSpec((1, max_u), lambda i, blocks: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
             pl.BlockSpec((1, r), lambda i, blocks: (blocks[i], 0)),
+            pl.BlockSpec((1, fw), lambda i, blocks: (blocks[i], 0)),
             pl.BlockSpec((1, max_u), lambda i, blocks: (i, 0)),
             pl.BlockSpec((1, max_u), lambda i, blocks: (i, 0)),
         ],
@@ -164,12 +211,14 @@ def merge_dirty(pair: Pow2Hash, table_keys, table_counts, dirty_blocks,
         out_shape=[
             jax.ShapeDtypeStruct((n_b, r), table_keys.dtype),
             jax.ShapeDtypeStruct((n_b, r), table_counts.dtype),
+            jax.ShapeDtypeStruct((n_b, fw), filter_words.dtype),
             jax.ShapeDtypeStruct((n_d, max_u), upd_keys.dtype),
             jax.ShapeDtypeStruct((n_d, max_u), upd_counts.dtype),
         ],
-        input_output_aliases={1: 0, 2: 1},   # offset by scalar-prefetch arg
+        input_output_aliases={1: 0, 2: 1, 3: 2},  # offset by scalar-prefetch
         interpret=interpret,
-    )(dirty_blocks, table_keys, table_counts, upd_keys, upd_counts)
+    )(dirty_blocks, table_keys, table_counts, filter_words,
+      upd_keys, upd_counts)
 
 
 # --------------------------------------------------------------------------
@@ -266,3 +315,62 @@ def query(pair: Pow2Hash, table_keys, table_counts, q_keys,
     cnts, dists = query_grid(pair, table_keys, table_counts, blocks, q2,
                              interpret)
     return cnts.reshape(Q), dists.reshape(Q)
+
+
+# --------------------------------------------------------------------------
+# blocked-Bloom filter probe (negative-lookup pre-pass, DESIGN.md §12)
+# --------------------------------------------------------------------------
+def _filter_probe_kernel(blocks_ref, qk_ref, tf_ref, may_ref):
+    del blocks_ref  # only used by the index_map
+    fw = tf_ref.shape[1]
+    qchunk = qk_ref.shape[1]
+    filt = tf_ref[...]                            # (1, fw) uint32 row
+    qk = qk_ref[...]                              # (1, qchunk)
+    aw = jax.lax.broadcasted_iota(jnp.int32, (1, fw), 1)
+    au = jax.lax.broadcasted_iota(jnp.int32, (1, qchunk), 1)
+    fbits_log2 = (fw * 32).bit_length() - 1
+
+    def one(j, may):
+        k = jax.lax.dynamic_index_in_dim(qk[0], j, keepdims=False)
+        hit = _bloom_test_row(filt, aw, k.astype(jnp.uint32), fbits_log2)
+        ok = (k != EMPTY) & hit
+        return jnp.where(au == j, ok.astype(jnp.int32), may)
+
+    may_ref[...] = jax.lax.fori_loop(
+        0, qchunk, one, jnp.zeros((1, qchunk), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def filter_probe_grid(filter_words, blocks, q2, interpret: bool = True):
+    """Membership pre-pass over the same chunk layout as :func:`query_grid`.
+
+    Grid step ``i`` holds only block ``blocks[i]``'s filter row — a few
+    uint32 lanes, SMEM/VMEM-resident, ~``r/fw`` times smaller than the
+    tile — and answers all of row ``i``'s queries against it with zero
+    tile traffic. Returns a ``(n_rows, qcap)`` int32 mask: 0 ⇒ the key is
+    definitively absent from the block (and, because staging paths also
+    maintain the filter, from the change segment and overflow region
+    too); 1 ⇒ maybe present, fetch the tile. Rows must be bucketed like
+    :func:`query_grid`'s (``ops.query_blocked`` builds both layouts);
+    the Bloom hash ignores the block id, so foreign-lane junk is
+    harmless — callers never gather those lanes."""
+    n_b, fw = filter_words.shape
+    n_rows, qcap = q2.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_rows,),
+        in_specs=[
+            pl.BlockSpec((1, qcap), lambda i, blocks: (i, 0)),
+            pl.BlockSpec((1, fw), lambda i, blocks: (blocks[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qcap), lambda i, blocks: (i, 0)),
+        ],
+    )
+    (may,) = pl.pallas_call(
+        _filter_probe_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_rows, qcap), jnp.int32)],
+        interpret=interpret,
+    )(blocks.astype(jnp.int32), q2, filter_words)
+    return may

@@ -106,16 +106,16 @@ def accumulate(tokens) -> Tuple[jax.Array, jax.Array]:
     return keys, cnts.astype(jnp.int32)
 
 
-def merge(pair: Pow2Hash, table_keys, table_counts, upd_keys, upd_counts,
-          interpret: bool = True):
-    return _k.merge(pair, table_keys, table_counts, upd_keys, upd_counts,
-                    interpret)
+def merge(pair: Pow2Hash, table_keys, table_counts, filter_words,
+          upd_keys, upd_counts, interpret: bool = True):
+    return _k.merge(pair, table_keys, table_counts, filter_words,
+                    upd_keys, upd_counts, interpret)
 
 
-def merge_dirty(pair: Pow2Hash, table_keys, table_counts, dirty_blocks,
-                upd_keys, upd_counts, interpret: bool = True):
-    return _k.merge_dirty(pair, table_keys, table_counts, dirty_blocks,
-                          upd_keys, upd_counts, interpret)
+def merge_dirty(pair: Pow2Hash, table_keys, table_counts, filter_words,
+                dirty_blocks, upd_keys, upd_counts, interpret: bool = True):
+    return _k.merge_dirty(pair, table_keys, table_counts, filter_words,
+                          dirty_blocks, upd_keys, upd_counts, interpret)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4))
@@ -135,8 +135,9 @@ def query_sorted(pair: Pow2Hash, table_keys, table_counts, q_keys,
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4, 5))
-def query_blocked(pair: Pow2Hash, table_keys, table_counts, q_keys,
-                  qcap: int = 128, interpret: bool = True):
+def query_blocked_ex(pair: Pow2Hash, table_keys, table_counts, q_keys,
+                     qcap: int = 128, interpret: bool = True,
+                     filter_words=None):
     """Batched point queries, sized for large batches (paper §2.7).
 
     Buckets the batch by destination block into the dense
@@ -150,43 +151,83 @@ def query_blocked(pair: Pow2Hash, table_keys, table_counts, q_keys,
     additional waves (``fori_loop``; with deduped batches one wave is
     the common case).
 
+    With ``filter_words`` (the ``(n_b, fw)`` blocked-Bloom rows from
+    ``state.filter_words``), a :func:`kernel.filter_probe_grid` pre-pass
+    tests every key against its block's SMEM-resident filter row first
+    and the survivors are *re-bucketed*: blocks whose queries were all
+    definite misses drop out of the queried-block list entirely, so they
+    cost no tile fetch, and the post-filter ``max_load`` shrinks the
+    wave count (an all-filtered batch runs zero query waves). Filtered
+    keys answer ``(0, 0)``.
+
     q_keys: (Q,) int32, ``EMPTY`` entries are padding and return
-    ``(0, 0)``. Returns (counts, probe_distances) aligned with ``q_keys``,
-    bit-identical to :func:`query_sorted` for valid keys.
+    ``(0, 0)``. Returns (counts, probe_distances, n_tiles) with the first
+    two aligned with ``q_keys`` — bit-identical to :func:`query_sorted`
+    for valid unfiltered keys — and ``n_tiles`` the number of distinct
+    block tiles the query waves fetched (the batch's accounted
+    ``tile_loads``; 0 when the filter killed everything).
     """
     n_b, _ = table_keys.shape
     (Q,) = q_keys.shape
     if Q == 0:
         return (jnp.zeros((0,), table_counts.dtype),
-                jnp.zeros((0,), jnp.int32))
+                jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32))
     qcap = max(min(qcap, Q), 1)
     n_rows = min(n_b, Q)       # ≤ Q distinct blocks can be queried
     q = q_keys.astype(jnp.int32)
     valid = q != EMPTY
-    blk = jnp.where(valid, pair.s(q), n_b).astype(jnp.int32)
-    order = jnp.argsort(blk, stable=True)
-    sq, sb = q[order], blk[order]
-    start = jnp.searchsorted(sb, jnp.arange(n_b + 1, dtype=sb.dtype))
-    pos = jnp.arange(Q, dtype=jnp.int32) - start[jnp.clip(sb, 0, n_b)]
-    max_load = jnp.max(start[1:] - start[:-1])     # queries in fullest block
-    # dense rank of each query's block within the queried-block set
-    is_first = (sb < n_b) & jnp.concatenate(
-        [jnp.ones((1,), bool), sb[1:] != sb[:-1]])
-    rank = jnp.cumsum(is_first) - 1
-    grid_blocks = jnp.zeros((n_rows,), jnp.int32).at[
-        jnp.where(is_first, rank, n_rows)].set(sb, mode="drop")
 
-    def wave(p, acc):
-        cnt_s, dist_s = acc
+    def bucket(alive):
+        blk = jnp.where(alive, pair.s(q), n_b).astype(jnp.int32)
+        order = jnp.argsort(blk, stable=True)
+        sq, sb = q[order], blk[order]
+        start = jnp.searchsorted(sb, jnp.arange(n_b + 1, dtype=sb.dtype))
+        pos = jnp.arange(Q, dtype=jnp.int32) - start[jnp.clip(sb, 0, n_b)]
+        max_load = jnp.max(start[1:] - start[:-1])  # fullest block's queries
+        # dense rank of each query's block within the queried-block set
+        is_first = (sb < n_b) & jnp.concatenate(
+            [jnp.ones((1,), bool), sb[1:] != sb[:-1]])
+        rank = jnp.cumsum(is_first) - 1
+        grid_blocks = jnp.zeros((n_rows,), jnp.int32).at[
+            jnp.where(is_first, rank, n_rows)].set(sb, mode="drop")
+        return order, sq, sb, pos, max_load, is_first, rank, grid_blocks
+
+    order, sq, sb, pos, max_load, is_first, rank, grid_blocks = bucket(valid)
+
+    def dense_rows(p, sb, pos, rank, sq):
         win = (sb < n_b) & (pos >= p * qcap) & (pos < (p + 1) * qcap)
         row = jnp.where(win, rank, n_rows)
         col = jnp.where(win, pos - p * qcap, 0)
         dense = jnp.full((n_rows, qcap), EMPTY, jnp.int32
                          ).at[row, col].set(sq, mode="drop")
-        c, d = _k.query_grid(pair, table_keys, table_counts, grid_blocks,
-                             dense, interpret)
         g = (jnp.clip(rank, 0, n_rows - 1),
              jnp.clip(pos - p * qcap, 0, qcap - 1))
+        return win, dense, g
+
+    if filter_words is not None:
+        def fwave(p, may_s):
+            win, dense, g = dense_rows(p, sb, pos, rank, sq)
+            m = _k.filter_probe_grid(filter_words, grid_blocks, dense,
+                                     interpret)
+            return jnp.where(win, m[g], may_s)
+
+        n_fwaves = (max_load + qcap - 1) // qcap
+        may_s = jax.lax.fori_loop(0, n_fwaves, fwave,
+                                  jnp.zeros((Q,), jnp.int32))
+        may = jnp.zeros((Q,), jnp.int32).at[order].set(may_s)
+        # re-bucket the survivors: fully-filtered blocks vanish from the
+        # grid list (no tile fetch) and the post-filter max_load shrinks
+        # the wave loop — possibly to zero waves
+        order, sq, sb, pos, max_load, is_first, rank, grid_blocks = bucket(
+            valid & (may > 0))
+
+    n_tiles = is_first.sum(dtype=jnp.int32)
+
+    def wave(p, acc):
+        cnt_s, dist_s = acc
+        win, dense, g = dense_rows(p, sb, pos, rank, sq)
+        c, d = _k.query_grid(pair, table_keys, table_counts, grid_blocks,
+                             dense, interpret)
         cnt_s = jnp.where(win, c[g], cnt_s)
         dist_s = jnp.where(win, d[g], dist_s)
         return cnt_s, dist_s
@@ -197,4 +238,13 @@ def query_blocked(pair: Pow2Hash, table_keys, table_counts, q_keys,
         (jnp.zeros((Q,), table_counts.dtype), jnp.zeros((Q,), jnp.int32)))
     cnts = jnp.zeros((Q,), table_counts.dtype).at[order].set(cnt_s)
     dists = jnp.zeros((Q,), jnp.int32).at[order].set(dist_s)
+    return cnts, dists, n_tiles
+
+
+def query_blocked(pair: Pow2Hash, table_keys, table_counts, q_keys,
+                  qcap: int = 128, interpret: bool = True,
+                  filter_words=None):
+    """:func:`query_blocked_ex` without the tile count (compat entry)."""
+    cnts, dists, _ = query_blocked_ex(pair, table_keys, table_counts,
+                                      q_keys, qcap, interpret, filter_words)
     return cnts, dists

@@ -1,0 +1,438 @@
+"""Blocked-Bloom negative-lookup fast path (ISSUE 8, DESIGN.md §12).
+
+The hard invariant under test: **no false negatives, ever** — a key
+resident in any of the paper's regions (data segment, change
+segment/log, overflow; before or after snapshot/restore and elastic
+WAL handoff) must survive the filter pre-pass under every scheme and
+backend. Its complement is the perf contract: a *true* negative (a key
+the filter itself rules out) costs zero accounted ``tile_loads`` at the
+ops level and zero lookup dispatches at the engine level, and the sim's
+costed twin answers it with zero flash page reads.
+
+"True negative" here is the filter's own verdict: tests rejection-sample
+absent keys through ``filter_probe`` so the ~4% false-positive rate can
+never flake an assertion — a false positive costs a probe, never
+correctness, and is exercised separately.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import segments as seg
+from repro.core import table_jax as tj
+from repro.core.flash_model import TableGeometry
+from repro.core.hashing import bloom_positions, filter_words_for
+from repro.core.store import FlashStore
+from repro.core.table_sim import make_table
+
+SCHEMES = ["MB", "MDB", "MDB-L"]
+GEOM = TableGeometry(num_blocks=32, pages_per_block=4, entries_per_page=8)
+
+
+def _sim(scheme, **kw):
+    kw.setdefault("overflow_blocks", 4)       # room for skewed spills
+    return make_table(scheme, GEOM, ram_buffer_pct=10.0,
+                      change_segment_pct=25.0, **kw)
+
+
+def _cfg(scheme, **kw):
+    base = dict(q_log2=10, r_log2=6, scheme=scheme, log_capacity=1 << 9,
+                cs_partitions=4, max_updates_per_block=1 << 6,
+                overflow_capacity=1 << 9)
+    base.update(kw)
+    return tj.FlashTableConfig(**base)
+
+
+def _shard_count() -> int:
+    import jax
+    n = jax.device_count()
+    return n if n & (n - 1) == 0 else 1
+
+
+def _open(backend, scheme="MDB-L", **kw):
+    kw.setdefault("flush_threshold", 10_000)   # no surprise auto-drains
+    if backend == "sim":
+        return FlashStore.open(backend="sim", scheme=scheme, **kw)
+    if backend == "device":
+        kw.setdefault("chunk", 128)
+        return FlashStore.open(_cfg(scheme), backend="device", **kw)
+    kw.setdefault("shard_chunk", 128)
+    return FlashStore.open(_cfg(scheme), backend="sharded",
+                           num_shards=_shard_count(), **kw)
+
+
+def _same_block_keys(pair, block, n, lo=0):
+    out = []
+    x = lo
+    while len(out) < n:
+        if int(pair.s(x)) == block:
+            out.append(x)
+        x += 1
+    return np.asarray(out, dtype=np.int64)
+
+
+def _probe(store, keys) -> np.ndarray:
+    """May-contain verdicts through the backend's own filter path (the
+    exact function the engine consults): bool (Q,)."""
+    fn = store._b.query_engine._filter
+    assert fn is not None, "store opened without filters"
+    m = np.asarray(fn(store.state, jnp.asarray(keys, jnp.int32)))
+    return m.astype(bool)
+
+
+def _true_negatives(store, n, avoid, start=1_000_000) -> np.ndarray:
+    """Rejection-sample ``n`` absent keys the filter itself rules out."""
+    out = []
+    x = start
+    avoid = set(int(a) for a in avoid)
+    while len(out) < n:
+        cands = np.asarray([k for k in range(x, x + 256)
+                            if k not in avoid], np.int64)
+        neg = cands[~_probe(store, cands)]
+        out.extend(int(k) for k in neg[: n - len(out)])
+        x += 256
+        assert x < start + 1 << 22, "filter FPR implausibly high"
+    return np.asarray(out, np.int64)
+
+
+def _qstats(store):
+    s = store.stats()
+    return {k[len("query_"):]: v for k, v in s.items()
+            if k.startswith("query_")}
+
+
+# ---------------------------------------------------------------------------
+# the invariant: no false negatives, across regions × schemes × backends
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_no_false_negatives_across_regions(scheme):
+    """Keys living in data / change / overflow all survive the filter,
+    and the filtered batched path stays exact vs the sim oracle."""
+    st = _open("device", scheme)
+    sim = _sim(scheme)
+    rng = np.random.default_rng(0)
+    # data + overflow: overfill one block (r=64) so the excess spills
+    hot = _same_block_keys(st.cfg.pair, 3, 80)
+    bulk = rng.integers(0, 500, size=400)
+    merged = np.concatenate([hot, hot[:8], bulk])
+    st.update(merged)
+    st.flush()
+    # a second merge re-drains the carried keys into the now-full block,
+    # spilling them to overflow (the kick key marks the engine dirty —
+    # a bare flush() after a merge is a contractual no-op)
+    kick = np.asarray([123_456])
+    st.update(kick)
+    st.flush()
+    sim.insert_batch(kick)
+    assert st.wear()["dropped"] == 0
+    assert int(np.asarray(st.state.ov_keys != -1).sum()) >= 8  # real spill
+    sim.insert_batch(merged)
+    sim.finalize()
+    # change segment / log: staged, never merged (MB merges immediately)
+    staged = np.arange(10_000, 10_040)
+    st.update(staged)
+    st.drain()
+    sim.insert_batch(staged)
+    present = np.unique(np.concatenate([merged, staged, kick]))
+    assert _probe(st, present).all()          # the invariant itself
+    absent = np.arange(500_000, 500_064)
+    q = np.concatenate([present, absent])
+    got = st.query_batch(q)
+    oracle = np.asarray([sim.query(int(k)) for k in q])
+    np.testing.assert_array_equal(got, oracle)
+    st.close()
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_true_negatives_cost_zero_tiles(scheme):
+    """Ops level: a batch of filter-ruled-out keys fetches no tile at
+    all; the same batch without filters pays per-block fetches."""
+    cfg = _cfg(scheme)
+    state = tj.init(cfg)
+    state = tj.update(cfg, state, jnp.asarray(np.arange(0, 3000, 3)))
+    state = tj.flush(cfg, state)
+    may = np.asarray(tj.filter_probe(
+        cfg, state, jnp.asarray(np.arange(7_000_000, 7_002_048), jnp.int32)))
+    neg = np.arange(7_000_000, 7_002_048)[~may.astype(bool)][:256]
+    assert neg.size == 256
+    cnt, dist, tiles = tj.lookup_ex(cfg, state, jnp.asarray(neg, jnp.int32))
+    assert int(tiles) == 0
+    assert int(np.asarray(cnt).sum()) == 0
+    assert int(np.asarray(dist).sum()) == 0   # filtered keys: distance 0
+    off = _cfg(scheme, filters=False)
+    _, _, tiles_off = tj.lookup_ex(off, state, jnp.asarray(neg, jnp.int32))
+    assert int(tiles_off) > 0                 # the traffic the filter saves
+    # mixed batch: filters only ever shrink the fetched-tile set
+    mixed = jnp.asarray(np.concatenate([np.arange(0, 90, 3), neg[:90]]),
+                        jnp.int32)
+    c_on, _, t_on = tj.lookup_ex(cfg, state, mixed)
+    c_off, _, t_off = tj.lookup_ex(off, state, mixed)
+    np.testing.assert_array_equal(np.asarray(c_on), np.asarray(c_off))
+    assert int(t_on) <= int(t_off)
+
+
+def test_wave_skip_on_compacted_block_list():
+    """Satellite: the wave loop is sized by the *post-filter* max_load —
+    an overloaded block whose queries are mostly definite misses drops
+    below the wave boundary, and an all-filtered batch runs zero waves
+    (tiles == 0) while still answering exact zeros."""
+    cfg = _cfg("MB")
+    state = tj.init(cfg)
+    present = _same_block_keys(cfg.pair, 5, 3)
+    state = tj.update(cfg, state, jnp.asarray(present))
+    # 200 same-block keys > qcap=128 → 2 waves unfiltered; after the
+    # filter kills the absent ones the survivors fit one wave
+    cands = _same_block_keys(cfg.pair, 5, 200)
+    may = np.asarray(tj.filter_probe(cfg, state, jnp.asarray(cands,
+                                                             jnp.int32)))
+    q = np.concatenate([present,
+                        cands[~may.astype(bool)][:197]])
+    cnt, dist, tiles = tj.lookup_ex(cfg, state, jnp.asarray(q, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(cnt)[:3], np.ones(3))
+    assert int(np.asarray(cnt)[3:].sum()) == 0
+    assert int(tiles) == 1                    # one block survived
+    # all-filtered: zero tiles, zero waves, all-zero answers
+    allneg = q[3:]
+    cnt0, _, tiles0 = tj.lookup_ex(cfg, state,
+                                   jnp.asarray(allneg, jnp.int32))
+    assert int(tiles0) == 0 and int(np.asarray(cnt0).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: negative verdicts, negative cache, epoch fence (satellite 1)
+# ---------------------------------------------------------------------------
+def test_engine_skips_dispatch_and_caches_negatives():
+    st = _open("device", "MDB-L")
+    st.update(np.arange(100))
+    st.flush()
+    neg = _true_negatives(st, 32, avoid=np.arange(100))
+    base = _qstats(st)
+    got = st.query_batch(neg)
+    assert int(got.sum()) == 0
+    s1 = _qstats(st)
+    assert s1["filter_negatives"] - base["filter_negatives"] == 32
+    # every key was ruled out before dispatch: no lookup ran at all
+    assert s1["device_dispatches"] == base["device_dispatches"]
+    assert s1["tile_loads"] == base["tile_loads"]
+    # negative entries went into the hot cache: the repeat is all hits
+    got2 = st.query_batch(neg)
+    s2 = _qstats(st)
+    assert int(got2.sum()) == 0
+    assert s2["cache_hits"] - s1["cache_hits"] == 32
+    assert s2["filter_negatives"] == s1["filter_negatives"]
+    st.close()
+
+
+def test_flush_invalidate_evicts_negative_entries():
+    """Regression (satellite 1): a cached negative must die with the
+    epoch like any positive entry — else the first write to a
+    previously-absent key would be shadowed by a stale 0 forever."""
+    st = _open("device", "MDB-L")
+    st.update(np.arange(50))
+    st.flush()
+    neg = _true_negatives(st, 8, avoid=np.arange(50))
+    assert int(st.query_batch(neg).sum()) == 0       # cached as zeros
+    st.update(neg)                                    # the keys appear...
+    st.flush()                                        # ...and invalidate()
+    np.testing.assert_array_equal(st.query_batch(neg), np.ones(8))
+    s = _qstats(st)
+    assert s["invalidations"] >= 1
+    st.close()
+
+
+def test_present_keys_never_filtered():
+    """Engine end-to-end twin of the ops-level invariant: present keys
+    (merged, staged or still buffered in H_R) always answer exactly."""
+    st = _open("device", "MDB")
+    merged = np.arange(0, 600, 3)
+    st.update(merged)
+    st.flush()
+    staged = np.arange(20_000, 20_030)
+    st.update(staged)
+    st.drain()
+    buffered = np.arange(30_000, 30_010)              # H_R only
+    st.update(buffered)
+    q = np.concatenate([merged, staged, buffered])
+    np.testing.assert_array_equal(st.query_batch(q), np.ones(q.size))
+    st.close()
+
+
+def test_filters_off_store_still_exact():
+    """cfg.filters=False: no filter_fn is wired, every miss dispatches,
+    and answers stay exact (the A/B baseline the benchmarks use)."""
+    st = _open("device", "MDB-L")
+    off = FlashStore.open(_cfg("MDB-L", filters=False), backend="device",
+                          chunk=128, flush_threshold=10_000)
+    assert off._b.query_engine._filter is None
+    for s in (st, off):
+        s.update(np.arange(64))
+        s.flush()
+    absent = np.arange(900_000, 900_032)
+    q = np.concatenate([np.arange(64), absent])
+    np.testing.assert_array_equal(st.query_batch(q), off.query_batch(q))
+    so = _qstats(off)
+    assert so["filter_negatives"] == 0
+    assert so["device_dispatches"] >= 1
+    st.close()
+    off.close()
+
+
+# ---------------------------------------------------------------------------
+# durability surfaces: post-restore, post-handoff (satellite 3)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["device", "sharded"])
+def test_no_false_negatives_post_restore(tmp_path, backend):
+    wal = tmp_path / "s.wal"
+    snap = tmp_path / "snap"
+    st = _open(backend, "MDB-L", wal=wal)
+    st.update(np.arange(100), np.ones(100, np.int64))
+    st.drain(wait=True)
+    st.snapshot(snap)                         # filter rides the pytree
+    st.update(np.arange(100, 130))
+    st.drain(wait=True)                       # sealed + logged, not snap'd
+    st.close()
+
+    st2 = _open(backend, "MDB-L", wal=wal)
+    st2.restore(snap)                         # snapshot + WAL tail replay
+    present = np.arange(130)
+    assert _probe(st2, present).all()
+    np.testing.assert_array_equal(st2.query_batch(present), np.ones(130))
+    neg = _true_negatives(st2, 16, avoid=present)
+    base = _qstats(st2)
+    assert int(st2.query_batch(neg).sum()) == 0
+    s = _qstats(st2)
+    assert s["filter_negatives"] - base["filter_negatives"] == 16
+    assert s["tile_loads"] == base["tile_loads"]
+    st2.close()
+
+
+def test_no_false_negatives_post_handoff(tmp_path):
+    from repro.runtime.elastic import handoff_hr_partitions
+    wal = tmp_path / "depart.wal"
+    a = _open("sharded", wal=wal)
+    toks = np.arange(200)
+    a.update(toks, np.ones(200, np.int64))
+    a.drain(wait=True)
+    a.close()                                 # node departs; WAL survives
+
+    b = _open("sharded")
+    handoff_hr_partitions(wal, b)             # replays through update path
+    b.drain(wait=True)                        # staged → filter maintained
+    assert _probe(b, toks).all()
+    np.testing.assert_array_equal(b.query_batch(toks), np.ones(200))
+    neg = _true_negatives(b, 8, avoid=toks)
+    assert int(b.query_batch(neg).sum()) == 0
+    assert _qstats(b)["filter_negatives"] >= 8
+    b.close()
+
+
+def test_sharded_filter_parity_with_sim():
+    st = _open("sharded")
+    sim = _sim("MDB-L")
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 600, size=800)
+    st.update(toks)
+    st.flush()
+    sim.insert_batch(toks)
+    sim.finalize()
+    q = np.concatenate([np.unique(toks), np.arange(40_000, 40_064)])
+    got = st.query_batch(q)
+    oracle = np.asarray([sim.query(int(k)) for k in q])
+    np.testing.assert_array_equal(got, oracle)
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# the sim's costed twin
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_sim_twin_true_negative_is_free(scheme):
+    t = _sim(scheme)
+    t.insert_batch(np.arange(300))
+    t.finalize()
+    # rejection-sample through the sim's own filter
+    neg = [k for k in range(100_000, 100_400)
+           if not t.filters.may_contain(int(t.pair.s(k)), k)][:32]
+    assert len(neg) == 32
+    pages_before = (t.ledger.page_ops, t.qstats.ds_page_reads,
+                    t.qstats.overflow_page_reads, t.qstats.cs_page_reads)
+    for k in neg:
+        assert t.query(k) == 0
+    assert t.qstats.filter_negatives == 32
+    after = (t.ledger.page_ops, t.qstats.ds_page_reads,
+             t.qstats.overflow_page_reads, t.qstats.cs_page_reads)
+    assert after == pages_before              # zero flash reads accrued
+    # the filterless twin pays data-segment page reads for the same keys
+    t_off = _sim(scheme, filters=False)
+    assert t_off.filters is None
+    t_off.insert_batch(np.arange(300))
+    t_off.finalize()
+    for k in neg:
+        assert t_off.query(k) == 0
+    assert t_off.qstats.filter_negatives == 0
+    assert t_off.qstats.ds_page_reads > 0
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_sim_twin_no_false_negatives(scheme):
+    """Filtered and filterless sims agree on every key — present keys
+    are never short-circuited to 0 (RAM-buffered keys included: the
+    buffer answers before flash, bits are OR'd at the drain boundary)."""
+    t_on = _sim(scheme)
+    t_off = _sim(scheme, filters=False)
+    rng = np.random.default_rng(7)
+    stream = rng.integers(0, 500, size=1200)
+    for t in (t_on, t_off):
+        t.insert_batch(stream)                # flushes mid-stream
+    q = list(range(520)) + [9999, 12345]      # present + tail-absent
+    got = [t_on.query(k) for k in q]
+    want = [t_off.query(k) for k in q]
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# maintenance soundness: rebuild vs incremental OR
+# ---------------------------------------------------------------------------
+def test_rebuild_filters_covers_and_is_subset():
+    """``rebuild_filters`` (fresh OR over data+log+overflow) covers every
+    present key, and its bit set is a subset of the incrementally
+    maintained one — the monotone-OR discipline only ever *adds* bits
+    (e.g. for keys that later moved on a merge), so dirty-block
+    maintenance can never lose coverage the rebuild would have."""
+    cfg = _cfg("MDB-L")
+    state = tj.init(cfg)
+    rng = np.random.default_rng(11)
+    for _ in range(4):
+        state = tj.update(cfg, state,
+                          jnp.asarray(rng.integers(0, 5000, size=600)))
+    state = tj.flush(cfg, state)
+    state = tj.update(cfg, state, jnp.asarray(np.arange(90_000, 90_050)))
+    maintained = np.asarray(state.filter_words)
+    rebuilt = np.asarray(
+        seg.rebuild_filters(cfg.pair, state).filter_words)
+    assert (rebuilt & ~maintained).sum() == 0          # subset
+    fresh = state._replace(filter_words=jnp.asarray(rebuilt))
+    present = np.unique(np.concatenate(
+        [np.asarray(state.keys).ravel(),
+         np.asarray(state.log_keys).ravel(),
+         np.asarray(state.ov_keys).ravel()]))
+    present = present[present != tj.EMPTY]
+    may = np.asarray(tj.filter_probe(cfg, fresh,
+                                     jnp.asarray(present, jnp.int32)))
+    assert may.all()
+
+
+def test_bloom_positions_disjoint_and_deterministic():
+    """The murmur-finalizer probe pair: both positions in range, not
+    degenerately equal across a dense key population (the correlation
+    bug the finalizer exists to kill), numpy ≡ jax."""
+    keys = np.arange(4096, dtype=np.int64)
+    fw = filter_words_for(64)
+    bits_log2 = (fw * 32).bit_length() - 1
+    p1, p2 = bloom_positions(keys, bits_log2)
+    assert int(p1.max()) < fw * 32 and int(p2.max()) < fw * 32
+    assert (p1 == p2).mean() < 0.05           # probes are independent
+    j1, j2 = bloom_positions(jnp.asarray(keys, jnp.int32), bits_log2)
+    np.testing.assert_array_equal(np.asarray(j1), p1.astype(np.uint32))
+    np.testing.assert_array_equal(np.asarray(j2), p2.astype(np.uint32))

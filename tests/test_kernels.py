@@ -5,10 +5,15 @@ import jax.numpy as jnp
 import pytest
 from collections import Counter
 
-from repro.core.hashing import Pow2Hash
+from repro.core.hashing import Pow2Hash, filter_words_for
 from repro.kernels.flash_hash import ops, ref
 
 EMPTY = ref.EMPTY
+
+
+def _zf(pair):
+    """Fresh (all-zero) per-block Bloom filter rows for a table."""
+    return jnp.zeros((pair.num_slots, filter_words_for(pair.r)), jnp.uint32)
 
 
 def _mk_updates(pair, n_keys, key_space, seed, max_u):
@@ -29,8 +34,8 @@ def test_merge_matches_ref_shapes(q_log2, r_log2, max_u):
     tc = jnp.zeros((n_b, r), jnp.int32)
     _, uk, uc, _ = _mk_updates(pair, 4 * pair.q // 8, 1 << 20, q_log2, max_u)
     r1 = ref.merge_ref(pair, tk, tc, uk, uc)
-    r2 = ops.merge(pair, tk, tc, uk, uc)
-    for a, b in zip(r1, r2):
+    nk, nc, _, sk, sc = ops.merge(pair, tk, tc, _zf(pair), uk, uc)
+    for a, b in zip(r1, (nk, nc, sk, sc)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -40,6 +45,7 @@ def test_merge_repeated_batches_count_exact(count_dtype):
     n_b, r = pair.num_slots, pair.r
     tk = jnp.full((n_b, r), EMPTY, jnp.int32)
     tc = jnp.zeros((n_b, r), count_dtype)
+    tf = _zf(pair)
     truth = Counter()
     rng = np.random.default_rng(7)
     for i in range(5):
@@ -48,7 +54,7 @@ def test_merge_repeated_batches_count_exact(count_dtype):
         keys, cnts = ops.accumulate(jnp.asarray(toks, jnp.int32))
         uk, uc, _, _, nd = ops.bucket_updates(pair, keys, cnts, 128)
         assert int(nd) == 0
-        tk, tc, sk, sc = ops.merge(pair, tk, tc, uk, uc)
+        tk, tc, tf, sk, sc = ops.merge(pair, tk, tc, tf, uk, uc)
         assert int((sk != EMPTY).sum()) == 0  # no spills at this load
     q = jnp.asarray(sorted(truth), jnp.int32)
     cnt, dist = ops.query_sorted(pair, tk, tc, q)
@@ -72,7 +78,7 @@ def test_spill_semantics():
     uc = jnp.zeros((n_b, 16), jnp.int32).at[0, :12].set(1)
     tk = jnp.full((n_b, r), EMPTY, jnp.int32)
     tc = jnp.zeros((n_b, r), jnp.int32)
-    nk, nc, sk, sc = ops.merge(pair, tk, tc, uk, uc)
+    nk, nc, _, sk, sc = ops.merge(pair, tk, tc, _zf(pair), uk, uc)
     assert int((nk[0] != EMPTY).sum()) == r          # block full
     assert int((sk[0] != EMPTY).sum()) == 12 - r     # rest spilled
     rk, rc, rsk, rsc = ref.merge_ref(pair, tk, tc, uk, uc)
@@ -88,7 +94,7 @@ def test_negative_deltas_and_zero():
     keys = jnp.asarray([42, 43], jnp.int32)
     deltas = jnp.asarray([5, -2], jnp.int32)
     uk, uc, _, _, _ = ops.bucket_updates(pair, keys, deltas, 8)
-    tk, tc, _, _ = ops.merge(pair, tk, tc, uk, uc)
+    tk, tc, _, _, _ = ops.merge(pair, tk, tc, _zf(pair), uk, uc)
     q = jnp.asarray([42, 43, 44, 42], jnp.int32)
     cnt, _ = ops.query_sorted(pair, tk, tc, q)
     assert list(map(int, cnt)) == [5, -2, 0, 5]
@@ -100,7 +106,7 @@ def test_query_probe_distance_vs_ref():
     tk = jnp.full((n_b, r), EMPTY, jnp.int32)
     tc = jnp.zeros((n_b, r), jnp.int32)
     toks, uk, uc, _ = _mk_updates(pair, 300, 1000, 3, 64)
-    tk, tc, _, _ = ops.merge(pair, tk, tc, uk, uc)
+    tk, tc, _, _, _ = ops.merge(pair, tk, tc, _zf(pair), uk, uc)
     q = jnp.asarray(np.random.default_rng(4).integers(0, 1500, 64), jnp.int32)
     c1, d1 = ref.query_ref(pair, tk, tc, q)
     c2, d2 = ops.query_sorted(pair, tk, tc, q)
@@ -115,12 +121,14 @@ def test_merge_dirty_equals_full_merge():
     tk = jnp.full((n_b, r), EMPTY, jnp.int32)
     tc = jnp.zeros((n_b, r), jnp.int32)
     _, uk, uc, _ = _mk_updates(pair, 500, 4000, 6, 64)
-    full_k, full_c, _, _ = ops.merge(pair, tk, tc, uk, uc)
+    full_k, full_c, full_f, _, _ = ops.merge(pair, tk, tc, _zf(pair), uk, uc)
     dirty = jnp.asarray([b for b in range(n_b)
                          if int((uk[b] != EMPTY).sum())], jnp.int32)
-    dk, dc, _, _ = ops.merge_dirty(pair, tk, tc, dirty, uk[dirty], uc[dirty])
+    dk, dc, df, _, _ = ops.merge_dirty(pair, tk, tc, _zf(pair), dirty,
+                                       uk[dirty], uc[dirty])
     np.testing.assert_array_equal(np.asarray(full_k), np.asarray(dk))
     np.testing.assert_array_equal(np.asarray(full_c), np.asarray(dc))
+    np.testing.assert_array_equal(np.asarray(full_f), np.asarray(df))
 
 
 @pytest.mark.parametrize("qcap", [1, 3, 16, 128])
@@ -133,7 +141,7 @@ def test_query_blocked_matches_ref(qcap):
     tk = jnp.full((n_b, r), EMPTY, jnp.int32)
     tc = jnp.zeros((n_b, r), jnp.int32)
     _, uk, uc, _ = _mk_updates(pair, 300, 1000, 11, 64)
-    tk, tc, _, _ = ops.merge(pair, tk, tc, uk, uc)
+    tk, tc, _, _, _ = ops.merge(pair, tk, tc, _zf(pair), uk, uc)
     rng = np.random.default_rng(12)
     q = np.concatenate([rng.integers(0, 1500, 90),     # present + absent
                         np.full(6, EMPTY),             # padding lanes
@@ -152,7 +160,7 @@ def test_query_blocked_matches_query_sorted():
     tk = jnp.full((n_b, r), EMPTY, jnp.int32)
     tc = jnp.zeros((n_b, r), jnp.int32)
     _, uk, uc, _ = _mk_updates(pair, 500, 4000, 13, 64)
-    tk, tc, _, _ = ops.merge(pair, tk, tc, uk, uc)
+    tk, tc, _, _, _ = ops.merge(pair, tk, tc, _zf(pair), uk, uc)
     q = jnp.asarray(np.random.default_rng(14).integers(0, 5000, 256),
                     jnp.int32)
     c1, d1 = ops.query_sorted(pair, tk, tc, q)

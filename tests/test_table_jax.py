@@ -5,7 +5,7 @@ import pytest
 from collections import Counter
 
 from repro.core import table_jax as tj
-from repro.core.hashing import Pow2Hash
+from repro.core.hashing import Pow2Hash, filter_words_for
 from repro.kernels.flash_hash import ops, ref
 
 SCHEMES = ["MB", "MDB", "MDB-L"]
@@ -159,7 +159,8 @@ def test_merge_dirty_matches_ref():
         jnp.arange(n_b, dtype=jnp.int32))
     rows = jnp.where(valid, inv[blk], n_b).astype(jnp.int32)
     duk, duc, _, _, _ = ops.bucket_rows(rows, keys, cnts, n_b, 64)
-    got_k, got_c, _, _ = ops.merge_dirty(pair, tk, tc, perm, duk, duc)
+    tf = jnp.zeros((n_b, filter_words_for(r)), jnp.uint32)
+    got_k, got_c, _, _, _ = ops.merge_dirty(pair, tk, tc, tf, perm, duk, duc)
     np.testing.assert_array_equal(np.asarray(want_k), np.asarray(got_k))
     np.testing.assert_array_equal(np.asarray(want_c), np.asarray(got_c))
 
