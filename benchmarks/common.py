@@ -153,6 +153,12 @@ ACCEPTANCE_FLOORS = {
                 ("present_speedup_vs_filterless", 0.5)),
     "fig4dev": (("speedup_vs_per_call", 5.0),
                 ("speedup_vs_sync", 1.0)),
+    # ISSUE 9: continuous batching ≥2× the serial serve() loop on the
+    # same trace, token-identical outputs, and ≥25% of prompt tokens
+    # served from the paged prefix cache on the repeated-prefix trace
+    "fig7dev": (("speedup_vs_serial", 2.0),
+                ("identical_outputs", 1.0),
+                ("cache_hit_rate", 0.25)),
 }
 
 

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig4*   — paper Figure 4 + §3.5 naive (I/O cost) bench_io_costs
   fig5*   — paper Figure 5 (cleans)                bench_cleans
   fig6dev — sharded FlashStore weak scaling        bench_weak_scaling
+  fig7dev — continuous-batching serving traffic    bench_serving
   table2* — paper Table 2 (op mix)                 bench_block_page_ops
   kernel* — Pallas flash-hash microbench           bench_kernels
   roofline* — dry-run-derived roofline terms       bench_roofline
@@ -35,7 +36,7 @@ import time
 
 from . import (bench_block_page_ops, bench_cleans, bench_io_costs,
                bench_kernels, bench_query_times, bench_roofline,
-               bench_weak_scaling)
+               bench_serving, bench_weak_scaling)
 from .common import (compare_to_baseline, emit, rows_to_json, set_slow,
                      set_smoke)
 
@@ -44,6 +45,7 @@ SUITES = {
     "fig4": bench_io_costs,
     "fig5": bench_cleans,
     "fig6": bench_weak_scaling,
+    "fig7": bench_serving,
     "table2": bench_block_page_ops,
     "kernel": bench_kernels,
     "roofline": bench_roofline,

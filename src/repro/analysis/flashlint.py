@@ -21,7 +21,8 @@ FL002     use-after-donation: a value passed to a donating call site
 FL003     every code path that rebinds ``<backend>.state`` must invalidate
           the paired query engine (the flush→invalidate contract)
 FL004     no direct ``threading``/executor imports outside the store's
-          dispatcher (and the race harness)
+          dispatcher (plus the race harness and the serving scheduler's
+          trace-replay feeders)
 FL005     no deprecated-shim imports/references (replaces the CI grep —
           a real parser also catches aliased imports)
 FL006     dispatcher-guarded fields (``_fl_guarded`` declarations) are

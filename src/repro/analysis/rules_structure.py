@@ -32,7 +32,10 @@ SHIM_KEYWORDS = frozenset({"engine", "writer"})
 _FL001_ALLOWED = ("core/store.py", "core/write_engine.py",
                   "core/query_engine.py")
 _FL004_ALLOWED = ("core/store.py", "core/wal.py",
-                  "analysis/race_harness.py")
+                  "analysis/race_harness.py",
+                  # trace-replay feeder workers (DESIGN.md §13); other
+                  # serving files must stay thread-free
+                  "serving/scheduler.py")
 
 
 def _check_fl001(ctx) -> List:

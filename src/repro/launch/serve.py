@@ -1,7 +1,9 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> --tiny``.
 
-Batched greedy decoding with the flash-hash prefix KV cache (counting
-refcounts; DESIGN.md §5). Prints per-request outputs + cache statistics.
+Greedy decoding with the flash-hash prefix KV cache (counting
+refcounts; DESIGN.md §5). ``--continuous`` swaps the serial engine for
+the continuous-batching scheduler over the paged block pool
+(DESIGN.md §13). Prints per-request outputs + cache statistics.
 """
 from __future__ import annotations
 
@@ -13,7 +15,8 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import model as M
-from ..serving import PrefixKVCache, Request, ServeEngine
+from ..serving import (ContinuousBatchingScheduler, PrefixKVCache,
+                       Request, SchedRequest, ServeEngine)
 
 
 def main() -> None:
@@ -26,31 +29,52 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=16,
                     help="tokens shared across requests (exercises the "
                          "prefix cache)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching scheduler over the paged "
+                         "block pool instead of the serial engine")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="packed decode slots (--continuous only)")
+    ap.add_argument("--backend", default="device",
+                    choices=("device", "sim"),
+                    help="refcount-table backend for the prefix cache")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
     params = M.init_params(jax.random.key(args.seed), cfg)
-    cache = PrefixKVCache(block_tokens=8, capacity_blocks=64)
-    engine = ServeEngine(cfg, params, prefix_cache=cache)
+    bt = 16 if args.continuous else 8
+    cache = PrefixKVCache(block_tokens=bt, capacity_blocks=64,
+                          backend=args.backend)
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prefix).tolist()
-    reqs = []
-    for _ in range(args.requests):
-        tail = rng.integers(0, cfg.vocab_size,
-                            args.prompt_len - args.shared_prefix).tolist()
-        reqs.append(Request(prompt=shared + tail,
-                            max_new_tokens=args.max_new))
+    prompts = [shared + rng.integers(
+        0, cfg.vocab_size,
+        args.prompt_len - args.shared_prefix).tolist()
+        for _ in range(args.requests)]
 
     t0 = time.time()
-    done = engine.serve(reqs)
+    if args.continuous:
+        sched = ContinuousBatchingScheduler(
+            cfg, params, prefix_cache=cache, max_slots=args.slots,
+            max_context=args.prompt_len + args.max_new + bt)
+        done = sched.run([SchedRequest(prompt=p,
+                                       max_new_tokens=args.max_new,
+                                       request_id=i)
+                          for i, p in enumerate(prompts)])
+        done = sorted(done, key=lambda r: r.request_id)
+    else:
+        engine = ServeEngine(cfg, params, prefix_cache=cache)
+        done = engine.serve([Request(prompt=p,
+                                     max_new_tokens=args.max_new)
+                             for p in prompts])
     dt = time.time() - t0
     for i, r in enumerate(done):
-        print(f"req{i}: out={r.output[:8]}...")
+        print(f"req{i}: cached={r.cached_tokens} out={r.output[:8]}...")
     tok = sum(len(r.output) for r in done)
-    print(f"[serve] {len(done)} requests, {tok} tokens in {dt:.2f}s "
-          f"({tok / max(dt, 1e-9):.1f} tok/s)")
+    mode = "continuous" if args.continuous else "serial"
+    print(f"[serve:{mode}] {len(done)} requests, {tok} tokens in "
+          f"{dt:.2f}s ({tok / max(dt, 1e-9):.1f} tok/s)")
     print(f"[prefix-cache] {cache.stats()}")
 
 

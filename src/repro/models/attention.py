@@ -185,6 +185,64 @@ def gqa_decode(params, cfg: ModelConfig, x, cache: KVCache, index
     return out, KVCache(ck, cv)
 
 
+def gqa_decode_packed(params, cfg: ModelConfig, x, cache: KVCache, indices
+                      ) -> Tuple[jax.Array, KVCache]:
+    """Packed-slot decode: x (b, 1, d), ``indices`` (b,) int32 — each row
+    writes/attends at its own position (continuous batching: slots are
+    mid-flight at different depths). Rows beyond their request park on a
+    scratch index; their writes land on never-attended rows."""
+    pos = indices[:, None]                                   # (b, 1)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    row_write = jax.vmap(
+        lambda c, r, i: jax.lax.dynamic_update_slice(c, r, (i, 0, 0)))
+    ck = row_write(cache.k, k, indices)
+    cv = row_write(cache.v, v, indices)
+    s_max = ck.shape[1]
+    kpos = jnp.arange(s_max)[None, :]                        # (1, t)
+    mask = jnp.where(kpos <= indices[:, None], 0.0, -1e30
+                     ).astype(jnp.float32)[:, None, None, None, :]
+    o = _sdpa(q, ck, cv, mask)                               # mask (b,1,1,1,t)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, KVCache(ck, cv)
+
+
+def gqa_chunk_append(params, cfg: ModelConfig, x, cache: KVCache, start
+                     ) -> Tuple[jax.Array, KVCache]:
+    """Chunked prefill: x (b, c, d) at absolute positions start..start+c;
+    KV is appended into the cache rows [start, start+c) and the chunk
+    queries attend causally against the whole cache. All batch rows share
+    ``start`` (the scheduler runs one slot's chunk at a time)."""
+    b, c, _ = x.shape
+    pos = start + jnp.arange(c, dtype=jnp.int32)[None, :]    # (1, c)
+    pos = jnp.broadcast_to(pos, (b, c))
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, start, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, start, 0, 0))
+    s_max = ck.shape[1]
+    qpos = start + jnp.arange(c)[:, None]                    # (c, 1)
+    kpos = jnp.arange(s_max)[None, :]                        # (1, t)
+    mask = jnp.where(kpos <= qpos, 0.0, -1e30).astype(jnp.float32)
+    o = _sdpa(q, ck, cv, mask)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, KVCache(ck, cv)
+
+
 # ---------------------------------------------------------------------------
 # MLA (multi-head latent attention)
 # ---------------------------------------------------------------------------
@@ -273,6 +331,27 @@ def mla_cache_axes() -> MLACache:
                     k_rope=("batch", "seq", None))
 
 
+def _mla_absorbed_attend(params, cfg: ModelConfig, x_dtype, q_nope, q_rope,
+                         cl, cr, mask):
+    """Shared absorbed-projection attention against the latent cache.
+    ``mask`` broadcasts against scores (b, h, s, t)."""
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_up"],
+                       preferred_element_type=jnp.float32)
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat.astype(x_dtype), cl,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, cr,
+                           preferred_element_type=jnp.float32))
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim).astype(
+        jnp.float32)
+    probs = jax.nn.softmax(scores * scale + mask, axis=-1).astype(x_dtype)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs, cl,
+                         preferred_element_type=jnp.float32).astype(x_dtype)
+    o = jnp.einsum("bshr,rhk->bshk", ctx_lat, params["wv_up"],
+                   preferred_element_type=jnp.float32).astype(x_dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"],
+                      preferred_element_type=jnp.float32).astype(x_dtype)
+
+
 def mla_decode(params, cfg: ModelConfig, x, cache: MLACache, index
                ) -> Tuple[jax.Array, MLACache]:
     """Absorbed-projection decode: score/value computed in latent space, so
@@ -283,22 +362,44 @@ def mla_decode(params, cfg: ModelConfig, x, cache: MLACache, index
     cl = jax.lax.dynamic_update_slice(cache.latent, latent, (0, index, 0))
     cr = jax.lax.dynamic_update_slice(cache.k_rope, k_rope[:, :, 0, :],
                                       (0, index, 0))
-    # absorb wk_up into q: q_lat (b,1,h,kv_lora)
-    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_up"],
-                       preferred_element_type=jnp.float32)
-    scores = (jnp.einsum("bshr,btr->bhst", q_lat.astype(x.dtype), cl,
-                         preferred_element_type=jnp.float32)
-              + jnp.einsum("bshk,btk->bhst", q_rope, cr,
-                           preferred_element_type=jnp.float32))
-    scale = 1.0 / jnp.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim).astype(
-        jnp.float32)
     kpos = jnp.arange(cl.shape[1])[None, :]
     mask = jnp.where(kpos <= index, 0.0, -1e30).astype(jnp.float32)
-    probs = jax.nn.softmax(scores * scale + mask, axis=-1).astype(x.dtype)
-    ctx_lat = jnp.einsum("bhst,btr->bshr", probs, cl,
-                         preferred_element_type=jnp.float32).astype(x.dtype)
-    o = jnp.einsum("bshr,rhk->bshk", ctx_lat, params["wv_up"],
-                   preferred_element_type=jnp.float32).astype(x.dtype)
-    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"],
-                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = _mla_absorbed_attend(params, cfg, x.dtype, q_nope, q_rope,
+                               cl, cr, mask)
+    return out, MLACache(cl, cr)
+
+
+def mla_decode_packed(params, cfg: ModelConfig, x, cache: MLACache, indices
+                      ) -> Tuple[jax.Array, MLACache]:
+    """Packed-slot MLA decode: per-row write/attend positions (b,)."""
+    pos = indices[:, None]                                   # (b, 1)
+    q_nope, q_rope, latent, k_rope = _mla_qkv_full(params, cfg, x, pos)
+    row_write2 = jax.vmap(
+        lambda c, r, i: jax.lax.dynamic_update_slice(c, r, (i, 0)))
+    cl = row_write2(cache.latent, latent, indices)
+    cr = row_write2(cache.k_rope, k_rope[:, :, 0, :], indices)
+    kpos = jnp.arange(cl.shape[1])[None, :]                  # (1, t)
+    mask = jnp.where(kpos <= indices[:, None], 0.0, -1e30
+                     ).astype(jnp.float32)[:, None, None, :]  # (b,1,1,t)
+    out = _mla_absorbed_attend(params, cfg, x.dtype, q_nope, q_rope,
+                               cl, cr, mask)
+    return out, MLACache(cl, cr)
+
+
+def mla_chunk_append(params, cfg: ModelConfig, x, cache: MLACache, start
+                     ) -> Tuple[jax.Array, MLACache]:
+    """Chunked prefill for MLA: x (b, c, d) at positions start..start+c,
+    latent/rope-key rows appended, absorbed attention over the cache."""
+    b, c, _ = x.shape
+    pos = start + jnp.arange(c, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (b, c))
+    q_nope, q_rope, latent, k_rope = _mla_qkv_full(params, cfg, x, pos)
+    cl = jax.lax.dynamic_update_slice(cache.latent, latent, (0, start, 0))
+    cr = jax.lax.dynamic_update_slice(cache.k_rope, k_rope[:, :, 0, :],
+                                      (0, start, 0))
+    qpos = start + jnp.arange(c)[:, None]                    # (c, 1)
+    kpos = jnp.arange(cl.shape[1])[None, :]                  # (1, t)
+    mask = jnp.where(kpos <= qpos, 0.0, -1e30).astype(jnp.float32)
+    out = _mla_absorbed_attend(params, cfg, x.dtype, q_nope, q_rope,
+                               cl, cr, mask)
     return out, MLACache(cl, cr)

@@ -368,3 +368,85 @@ def decode_step(params: Params, cfg: ModelConfig, tokens, caches, index):
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = lm_logits(params["embed"], cfg, x)
     return logits, list(new_caches)
+
+
+# ---------------------------------------------------------------------------
+# packed-slot serving entry points (continuous batching; DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def _group_decode_packed(cfg: ModelConfig, x, indices, group_params,
+                         group_caches):
+    new_caches = []
+    for slot, (kind, ffn_kind) in enumerate(zip(cfg.layer_pattern,
+                                                cfg.ffn_pattern)):
+        p = group_params[slot]
+        c = group_caches[slot]
+        h = rmsnorm(p["mixer_ln"], x, cfg.norm_eps)
+        if kind == "attn":
+            if cfg.attn_type == "mla":
+                mix, c = attn.mla_decode_packed(p["mixer"], cfg, h, c,
+                                                indices)
+            else:
+                mix, c = attn.gqa_decode_packed(p["mixer"], cfg, h, c,
+                                                indices)
+        else:
+            # SSM decode is recurrent — position-free, packed by nature
+            mix, c = ssm_mod.ssd_decode(p["mixer"], cfg, h, c)
+        x = x + mix
+        x, _, _ = _apply_ffn(p, cfg, ffn_kind, x)
+        new_caches.append(c)
+    return x, new_caches
+
+
+def decode_step_packed(params: Params, cfg: ModelConfig, tokens, caches,
+                       indices):
+    """Continuous-batching decode: tokens (b, 1), ``indices`` (b,) int32 —
+    one step over a packed slot table where every row sits at its own
+    sequence position (requests join/leave mid-flight). Returns
+    (logits (b,1,V) fp32, new caches)."""
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(x, xs):
+        group_params, group_caches = xs
+        y, new_caches = _group_decode_packed(cfg, x, indices, group_params,
+                                             group_caches)
+        return y, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (params["groups"], tuple(caches)))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x)
+    return logits, list(new_caches)
+
+
+def prefill_chunk(params: Params, cfg: ModelConfig, tokens, caches, start):
+    """Chunked prefill: process ``tokens`` (b, c) occupying absolute
+    positions start..start+c against existing caches (earlier chunks /
+    reused prefix blocks already hold rows < start). Returns
+    (logits (b,c,V) fp32, new caches). Attention-only stacks — SSM
+    recurrent state cannot be entered mid-sequence; hybrid archs take
+    the whole-prompt prefill path instead (DESIGN.md §13)."""
+    if any(k == "ssm" for k in cfg.layer_pattern):
+        raise ValueError("prefill_chunk requires a pure-attention stack; "
+                         f"{cfg.name} has layer_pattern={cfg.layer_pattern}")
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(x, xs):
+        group_params, group_caches = xs
+        new_caches = []
+        for slot, (kind, ffn_kind) in enumerate(zip(cfg.layer_pattern,
+                                                    cfg.ffn_pattern)):
+            p = group_params[slot]
+            c = group_caches[slot]
+            h = rmsnorm(p["mixer_ln"], x, cfg.norm_eps)
+            if cfg.attn_type == "mla":
+                mix, c = attn.mla_chunk_append(p["mixer"], cfg, h, c, start)
+            else:
+                mix, c = attn.gqa_chunk_append(p["mixer"], cfg, h, c, start)
+            x = x + mix
+            x, _, _ = _apply_ffn(p, cfg, ffn_kind, x)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (params["groups"], tuple(caches)))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["embed"], cfg, x)
+    return logits, list(new_caches)

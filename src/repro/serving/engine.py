@@ -38,7 +38,11 @@ class ServeEngine:
             lambda p, b: M.prefill(p, cfg, b))
 
     def _prefill_one(self, prompt: List[int]):
-        """Prefill a single prompt, reusing a cached prefix if available."""
+        """Prefill a single prompt, reusing a cached prefix if available.
+
+        Returns ``(logits, caches, consumed, n_cached, pinned)`` where
+        ``n_cached`` is the reused-prefix length in tokens (0 on miss).
+        """
         pinned = []
         if self.cache is not None:
             n, value, pinned = self.cache.acquire(prompt)
@@ -52,10 +56,9 @@ class ServeEngine:
                                                          t, consumed)
                     consumed += 1
                 if logits is None:  # exact full-prompt hit
-                    batch = {"tokens": jnp.asarray([prompt[-1:]], jnp.int32)}
                     logits, caches = self._decode_single(
                         caches, prompt[-1], consumed - 1)
-                return logits, caches, consumed, pinned
+                return logits, caches, consumed, n, pinned
         batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
         if self.cfg.frontend != "none":
             batch["frontend_embeds"] = jnp.zeros(
@@ -65,7 +68,7 @@ class ServeEngine:
         if self.cache is not None:
             pinned += self.cache.insert(prompt, caches,
                                         slicer=self._slicer())
-        return logits, caches, len(prompt), pinned
+        return logits, caches, len(prompt), 0, pinned
 
     def _slicer(self):
         """Seq-axis cache trimmer — only for pure-attention stacks (SSM
@@ -86,7 +89,8 @@ class ServeEngine:
         return logits, caches
 
     def generate(self, req: Request) -> Request:
-        logits, caches, consumed, pinned = self._prefill_one(req.prompt)
+        logits, caches, consumed, n_cached, pinned = \
+            self._prefill_one(req.prompt)
         max_len = consumed + req.max_new_tokens
         caches = M.pad_caches(self.cfg, caches, max_len)
         out = []
@@ -99,8 +103,7 @@ class ServeEngine:
         if self.cache is not None:
             self.cache.release(pinned)
         req.output = out
-        req.cached_tokens = (len(req.prompt) - (len(req.prompt) - consumed)
-                             if consumed <= len(req.prompt) else 0)
+        req.cached_tokens = n_cached
         return req
 
     def serve(self, requests: Sequence[Request]) -> List[Request]:

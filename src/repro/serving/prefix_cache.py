@@ -1,4 +1,5 @@
-"""KV prefix-block cache with flash-hash reference counting.
+"""KV prefix-block cache: flash-hash refcounts as the page table of a
+paged block pool.
 
 The paper motivates counting hash tables with *reference counting* (§1,
 garbage collection). Here that is exactly the serving-side bookkeeping:
@@ -8,12 +9,15 @@ table holds per-block reference counts — +1 while a request uses a block,
 −1 on release (deletion-by-decrement, §2.6), and blocks whose count drops
 to 0 are evictable.
 
-At cluster scale the value store is paged HBM blocks (vLLM-style) sharded
-like the KV cache; in this reference implementation the store is a host
-dict of cache pytrees, while the *refcount* path runs through a
-:class:`~repro.core.store.FlashStore` (DESIGN.md §8) — H_R ±1
-cancellation before any device traffic, read-your-writes overlay so
-eviction decisions are exact, automatic hot-cache invalidation on flush.
+Physically the values live in a :class:`~.block_pool.BlockPool` — a
+fixed slab of slots behind a free-list allocator (pie/vLLM-style paged
+KV). The *page table* mapping a token-chain key to its physical slot is
+this class plus the refcount store: ``acquire``/``insert``/``release``
+are block-granular pin/unpin (±1 through the store's H_R, so a pin/unpin
+pair cancels before any device traffic), and eviction takes a
+zero-refcount slot. Copy-on-write sharing is structural: block values
+are written once and never mutated; a diverging request hashes to new
+keys and allocates new slots.
 
 Eviction is **wear-aware** by default (``eviction="wear"``): among
 zero-refcount blocks, evict the one whose key lives in the *hottest*
@@ -23,6 +27,15 @@ anyway, so the eventual re-insertion of that block's refcount dirties a
 block that merges regardless; evicting a cold-partition block instead
 would later re-dirty a quiet region and buy a fresh block rewrite.
 ``eviction="first_fit"`` keeps the old drop-the-first-zero-ref policy.
+
+Two value disciplines share the pool:
+
+* the legacy engine path (``insert(tokens, value, slicer=...)``) stores
+  *cumulative-prefix* values — key i holds the cache for tokens [0, i·B);
+* the scheduler path (``insert_block``/``acquire_blocks``) stores
+  *per-block segments* — key i holds only rows [ (i−1)·B, i·B ), which is
+  what makes sharing paged: N requests over a common prefix hold the same
+  physical slots, O(prefix) memory total, not O(prefix²).
 """
 from __future__ import annotations
 
@@ -33,6 +46,7 @@ import numpy as np
 
 from ..core import table_jax as tj
 from ..core.store import FlashStore
+from .block_pool import BlockPool
 
 
 def _chain_hash(prev: int, tokens: Sequence[int]) -> int:
@@ -48,18 +62,20 @@ def _chain_hash(prev: int, tokens: Sequence[int]) -> int:
 class _Block:
     key: int
     tokens: Tuple[int, ...]
-    value: Any  # cache pytree for the prefix ending at this block
+    bid: int                     # physical slot in the BlockPool
 
 
 class PrefixKVCache:
     def __init__(self, block_tokens: int = 16, capacity_blocks: int = 256,
                  q_log2: int = 12, r_log2: int = 8, scheme: str = "MDB-L",
-                 cs_partitions: int = 4, eviction: str = "wear"):
+                 cs_partitions: int = 4, eviction: str = "wear",
+                 backend: str = "device"):
         if eviction not in ("wear", "first_fit"):
             raise ValueError(f"unknown eviction policy {eviction!r}")
         self.block_tokens = block_tokens
         self.capacity = capacity_blocks
         self.eviction = eviction
+        self.backend = backend
         self.cfg = tj.FlashTableConfig(q_log2=q_log2, r_log2=r_log2,
                                        scheme=scheme,
                                        log_capacity=1 << 10,
@@ -71,12 +87,20 @@ class PrefixKVCache:
         # served from the store's hot cache + H_R overlay (the store
         # invalidates the cache whenever it flushes to the device).
         # track_wear feeds the per-partition heat the eviction policy uses.
-        self._refs = FlashStore.open(self.cfg, backend="device",
-                                     chunk=256, query_chunk=256,
-                                     flush_threshold=2 * capacity_blocks,
-                                     hot_capacity=4 * capacity_blocks,
-                                     track_wear=True)
-        self.store: Dict[int, _Block] = {}
+        if backend == "sim":
+            # costed-simulator refcounts (quickstart/CI without a device
+            # table); no wear feed — "wear" degrades to first-fit order
+            self._refs = FlashStore.open(
+                None, backend="sim", scheme=scheme,
+                flush_threshold=2 * capacity_blocks)
+        else:
+            self._refs = FlashStore.open(self.cfg, backend=backend,
+                                         chunk=256, query_chunk=256,
+                                         flush_threshold=2 * capacity_blocks,
+                                         hot_capacity=4 * capacity_blocks,
+                                         track_wear=True)
+        self.pool = BlockPool(capacity_blocks)
+        self.store: Dict[int, _Block] = {}   # page table: key -> slot
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -111,7 +135,19 @@ class PrefixKVCache:
         self._refs.update(np.asarray(keys, np.int64),
                           np.full(len(keys), delta, np.int64))
 
-    # -- public API ------------------------------------------------------------
+    def _value(self, key: int) -> Any:
+        return self.pool.get(self.store[key].bid)
+
+    def _put(self, key: int, tokens: Tuple[int, ...], value: Any) -> None:
+        """Page-table insert: evict until a physical slot frees, then map
+        ``key`` onto it. The refcount pin (+1) is the caller's."""
+        bid = self.pool.alloc(value)
+        while bid is None:
+            self._evict()
+            bid = self.pool.alloc(value)
+        self.store[key] = _Block(key, tokens, bid)
+
+    # -- public API: legacy cumulative-prefix path ---------------------------
     def acquire(self, tokens: Sequence[int]) -> Tuple[int, Optional[Any],
                                                       List[int]]:
         """Longest reusable prefix: → (n_cached_tokens, cache_value, keys).
@@ -122,7 +158,7 @@ class PrefixKVCache:
         for i, k in enumerate(keys):
             if k in self.store:
                 n = (i + 1) * self.block_tokens
-                value = self.store[k].value
+                value = self._value(k)
             else:
                 break
         pinned = keys[:n // self.block_tokens]
@@ -145,24 +181,67 @@ class PrefixKVCache:
         pinned = []
         items = (list(enumerate(keys)) if slicer is not None
                  else [(len(keys) - 1, keys[-1])])
-        for i, k in enumerate(keys) if slicer is not None else items:
+        for i, k in items:
             if k in self.store:
                 continue
-            while len(self.store) >= self.capacity:
-                self._evict()
             n = (i + 1) * self.block_tokens
             v = slicer(value, n) if slicer is not None else value
-            self.store[k] = _Block(k, tuple(tokens[:n]), v)
+            self._put(k, tuple(tokens[:n]), v)
             pinned.append(k)
         self._bump(pinned, +1)
         return pinned
+
+    # -- public API: block-granular paged path (the scheduler's) ------------
+    def lookup(self, tokens: Sequence[int]) -> int:
+        """Cached-prefix length in tokens, without pinning anything."""
+        n = 0
+        for i, k in enumerate(self.block_keys(tokens)):
+            if k not in self.store:
+                break
+            n = (i + 1) * self.block_tokens
+        return n
+
+    def acquire_blocks(self, tokens: Sequence[int]
+                       ) -> Tuple[int, List[Any], List[int]]:
+        """Paged acquire: → (n_cached_tokens, [block segment values],
+        pinned keys). Each value covers only its own block's rows — the
+        scheduler scatters them into a slot's cache rows one by one."""
+        keys = self.block_keys(tokens)
+        values = []
+        for k in keys:
+            if k not in self.store:
+                break
+            values.append(self._value(k))
+        pinned = keys[:len(values)]
+        self._bump(pinned, +1)
+        if pinned:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return len(values) * self.block_tokens, values, pinned
+
+    def insert_block(self, tokens: Sequence[int], block_index: int,
+                     segment: Any) -> Optional[int]:
+        """Register one block's segment (rows [i·B, (i+1)·B) of the
+        prefix ending at block ``block_index``). Pins the new block (+1);
+        returns its key, or None if it was already resident (no pin —
+        the caller pinned it via :meth:`acquire_blocks`)."""
+        keys = self.block_keys(tokens)
+        k = keys[block_index]
+        if k in self.store:
+            return None
+        n = (block_index + 1) * self.block_tokens
+        self._put(k, tuple(tokens[:n]), segment)
+        self._bump([k], +1)
+        return k
 
     def release(self, pinned: List[int]) -> None:
         """Decrement refcounts (the paper's deletion-by-decrement)."""
         self._bump(pinned, -1)
 
     def _evict(self) -> None:
-        """Drop a zero-refcount block (full removal, §2.6).
+        """Drop a zero-refcount block (full removal, §2.6) and free its
+        pool slot.
 
         ``eviction="wear"``: among the zero-refcount candidates, evict
         the one whose key's change-segment partition has accumulated the
@@ -173,13 +252,13 @@ class PrefixKVCache:
         zero = [k for k, c in zip(keys, counts) if c <= 0]
         if not zero:
             # all pinned: drop the oldest anyway (degraded mode)
-            del self.store[keys[0]]
-            self.evictions += 1
-            return
-        victim = zero[0]
-        if self.eviction == "wear" and len(zero) > 1:
-            heat = self._refs.partition_heat(np.asarray(zero, np.int64))
-            victim = zero[int(np.argmax(heat))]
+            victim = keys[0]
+        else:
+            victim = zero[0]
+            if self.eviction == "wear" and len(zero) > 1:
+                heat = self._refs.partition_heat(np.asarray(zero, np.int64))
+                victim = zero[int(np.argmax(heat))]
+        self.pool.free(self.store[victim].bid)
         del self.store[victim]
         self.evictions += 1
 
@@ -187,15 +266,18 @@ class PrefixKVCache:
     def snapshot(self, path) -> None:
         """Persist the cache through the store's own snapshot machinery:
         the refcount table goes through ``FlashStore.snapshot()`` (no
-        parallel save path), the host block map + hit/miss counters ride
-        in a pickle sidecar next to it."""
+        parallel save path), the host page table + pool values +
+        hit/miss counters ride in a pickle sidecar next to it."""
         import pickle
         from pathlib import Path
         path = Path(path)
         self._refs.snapshot(path / "refs")
-        blob = pickle.dumps({"blocks": self.store, "hits": self.hits,
+        blocks = [(b.key, b.tokens, self.pool.get(b.bid))
+                  for b in self.store.values()]
+        blob = pickle.dumps({"blocks": blocks, "hits": self.hits,
                              "misses": self.misses,
-                             "evictions": self.evictions})
+                             "evictions": self.evictions,
+                             "block_tokens": self.block_tokens})
         tmp = path / "cache.pkl.tmp"
         tmp.write_bytes(blob)
         tmp.rename(path / "cache.pkl")   # atomic publish
@@ -208,24 +290,33 @@ class PrefixKVCache:
         path = Path(path)
         self._refs.restore(path / "refs")
         side = pickle.loads((path / "cache.pkl").read_bytes())
-        self.store = side["blocks"]
+        self.pool = BlockPool(self.capacity)
+        self.store = {}
+        for key, tokens, value in side["blocks"]:
+            self._put(key, tokens, value)
         self.hits = side["hits"]
         self.misses = side["misses"]
         self.evictions = side["evictions"]
 
     def stats(self) -> dict:
         s = self._refs.stats()
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "resident": len(self.store),
-                "scheme": self.cfg.scheme,
-                "eviction": self.eviction,
-                "tile_stores": s["tile_stores"],
-                "dropped": s["dropped"],
-                "carried": s["carried"],
-                "query_batches": s["query_batches"],
-                "query_cache_hits": s["query_cache_hits"],
-                "query_device_keys": s["query_device_queries"],
-                "write_buffered": s["write_buffered"],
-                "write_cancelled": s["write_cancelled"],
-                "write_flushes": s["write_flushes"],
-                "write_dispatches": s["write_dispatches"]}
+        out = {"hits": self.hits, "misses": self.misses,
+               "evictions": self.evictions, "resident": len(self.store),
+               "scheme": self.cfg.scheme,
+               "eviction": self.eviction,
+               "backend": self.backend,
+               # device backends ledger tile_stores (the paper's cleans
+               # analogue); the sim's counterpart is its `cleans` counter
+               "tile_stores": s.get("tile_stores", s.get("cleans", 0)),
+               "dropped": s.get("dropped", 0),
+               "carried": s.get("carried", 0),
+               "query_batches": s.get("query_batches",
+                                      s.get("queries", 0)),
+               "query_cache_hits": s.get("query_cache_hits", 0),
+               "query_device_keys": s.get("query_device_queries", 0),
+               "write_buffered": s["write_buffered"],
+               "write_cancelled": s["write_cancelled"],
+               "write_flushes": s["write_flushes"],
+               "write_dispatches": s["write_dispatches"]}
+        out.update(self.pool.stats())
+        return out

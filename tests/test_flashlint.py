@@ -30,6 +30,17 @@ def test_each_fixture_trips_exactly_its_rule(rule):
                     vs[0].format())
 
 
+def test_fl004_serving_scope():
+    """The scheduler (trace-replay feeder threads) is allow-listed; every
+    other serving file still trips FL004 (PR 9 satellite)."""
+    fixture = FIXTURES / "serving" / "trace_bad.py"
+    vs = flashlint.lint_file(fixture)
+    assert {v.rule for v in vs} == {"FL004"}
+    sched = REPO / "src" / "repro" / "serving" / "scheduler.py"
+    assert "threading" in sched.read_text()
+    assert [v for v in flashlint.lint_file(sched) if v.rule == "FL004"] == []
+
+
 def test_cli_nonzero_on_fixtures_zero_on_tree(capsys):
     rc = flashlint.main([str(FIXTURES)])
     out = capsys.readouterr()

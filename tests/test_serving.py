@@ -1,0 +1,330 @@
+"""Serving subsystem (ISSUE 9): paged block pool, block-granular prefix
+cache, continuous-batching scheduler, trace replay.
+
+Acceptance pins:
+- scheduler outputs are token-identical to the serial ``serve()`` loop
+  (dense, MLA, and SSM stacks; fp32 so argmax ties cannot flip);
+- ``cached_tokens`` reports the true reused-prefix length (satellite);
+- the exact-full-prompt-hit branch still yields first-token logits
+  (satellite);
+- SSM archs get ``slicer=None`` and never insert sliced recurrent state
+  (satellite);
+- multi-worker trace replay is deterministic under a fixed seed.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving import (BlockPool, ContinuousBatchingScheduler,
+                           PrefixKVCache, Request, SchedRequest,
+                           ServeEngine, make_trace, replay_trace)
+
+
+def _f32(arch):
+    return dataclasses.replace(get_config(arch, tiny=True), dtype="float32")
+
+
+def _params(cfg):
+    return M.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(cfg, shared_tokens=16, suffixes=(5, 9, 0, 16), seed=2):
+    rng = np.random.default_rng(seed)
+    shared = [int(t) for t in rng.integers(1, cfg.vocab_size,
+                                           size=shared_tokens)]
+    return [shared + [int(t) for t in rng.integers(1, cfg.vocab_size,
+                                                   size=n)]
+            for n in suffixes]
+
+
+def _sim_cache(**kw):
+    kw.setdefault("block_tokens", 16)
+    kw.setdefault("capacity_blocks", 32)
+    return PrefixKVCache(backend="sim", **kw)
+
+
+# ---------------------------------------------------------------------------
+# block pool
+# ---------------------------------------------------------------------------
+class TestBlockPool:
+    def test_alloc_free_roundtrip(self):
+        pool = BlockPool(4)
+        bids = [pool.alloc(f"v{i}") for i in range(4)]
+        assert sorted(bids) == [0, 1, 2, 3]
+        assert pool.alloc("overflow") is None          # exhausted, not an error
+        assert [pool.get(b) for b in bids] == ["v0", "v1", "v2", "v3"]
+        pool.free(bids[1])
+        assert pool.num_free == 1 and pool.in_use == 3
+        assert pool.alloc("again") == bids[1]          # LIFO reuse
+        assert pool.high_water == 4
+
+    def test_double_free_rejected(self):
+        pool = BlockPool(2)
+        b = pool.alloc("x")
+        pool.free(b)
+        with pytest.raises(ValueError, match="double free"):
+            pool.free(b)
+
+    def test_stats_and_validation(self):
+        with pytest.raises(ValueError):
+            BlockPool(0)
+        pool = BlockPool(3)
+        pool.alloc("a")
+        s = pool.stats()
+        assert s["pool_capacity"] == 3 and s["pool_in_use"] == 1
+        assert s["pool_allocs"] == 1 and s["pool_high_water"] == 1
+
+
+# ---------------------------------------------------------------------------
+# block-granular prefix cache (refcounts as the page table)
+# ---------------------------------------------------------------------------
+class TestPagedPrefixCache:
+    def test_insert_block_acquire_blocks(self):
+        c = _sim_cache(block_tokens=4, capacity_blocks=8)
+        toks = list(range(1, 11))                       # 2 whole blocks + 2
+        k0 = c.insert_block(toks, 0, "seg0")
+        k1 = c.insert_block(toks, 1, "seg1")
+        assert k0 is not None and k1 is not None and k0 != k1
+        assert c.insert_block(toks, 0, "dup") is None   # already resident
+        n, values, pinned = c.acquire_blocks(toks)
+        assert n == 8
+        assert values == ["seg0", "seg1"]               # per-block segments
+        assert len(pinned) == 2
+        # insert pinned each block once, acquire pinned again
+        assert list(c._count(pinned)) == [2, 2]
+        c.release(pinned)
+        c.release([k0, k1])
+        assert list(c._count(pinned)) == [0, 0]
+
+    def test_lookup_does_not_pin(self):
+        c = _sim_cache(block_tokens=4, capacity_blocks=8)
+        toks = list(range(1, 9))
+        c.insert_block(toks, 0, "s0")
+        assert c.lookup(toks) == 4                      # only block 0 resident
+        assert list(c._count(c.block_keys(toks)[:1])) == [1]
+
+    def test_pool_backed_eviction_frees_slots(self):
+        c = _sim_cache(block_tokens=4, capacity_blocks=2)
+        keys = []
+        for i in range(4):
+            toks = [10 * i + j for j in range(1, 5)]
+            keys.append(c.insert_block(toks, 0, f"s{i}"))
+            c.release([keys[-1]])                       # unpin immediately
+        assert len(c.store) == 2                        # capacity respected
+        assert c.evictions == 2
+        s = c.stats()
+        assert s["pool_in_use"] == 2 and s["pool_capacity"] == 2
+        assert s["pool_frees"] == 2                     # evictions freed slots
+
+    def test_eviction_spares_pinned_blocks(self):
+        c = _sim_cache(block_tokens=4, capacity_blocks=2)
+        a = [1, 2, 3, 4]
+        b = [5, 6, 7, 8]
+        ka = c.insert_block(a, 0, "A")                  # stays pinned
+        kb = c.insert_block(b, 0, "B")
+        c.release([kb])
+        c.insert_block([9, 10, 11, 12], 0, "C")         # forces eviction
+        assert ka in c.store and kb not in c.store
+
+    def test_legacy_and_paged_share_refcounts(self):
+        """Legacy acquire/release and paged pins go through one counting
+        table — the page table is shared state, not per-API."""
+        c = _sim_cache(block_tokens=4, capacity_blocks=8)
+        toks = [1, 2, 3, 4]
+        k = c.insert_block(toks, 0, "seg")
+        n, _value, pinned = c.acquire(toks)             # legacy pin
+        assert n == 4 and pinned == [k]
+        assert list(c._count([k])) == [2]
+        c.release(pinned)
+        c.release([k])
+        assert list(c._count([k])) == [0]
+
+    def test_sim_backend_stats_are_tolerant(self):
+        c = _sim_cache()
+        s = c.stats()
+        assert s["backend"] == "sim"
+        for field in ("tile_stores", "dropped", "query_batches",
+                      "pool_capacity", "write_buffered"):
+            assert field in s
+
+
+# ---------------------------------------------------------------------------
+# engine satellites
+# ---------------------------------------------------------------------------
+class TestEngineSatellites:
+    def test_cached_tokens_reports_reused_prefix(self):
+        """Regression (ISSUE 9): the old expression reduced to
+        ``consumed`` — a cache hit on a 16-token prefix of a 21-token
+        prompt must report 16, not 21."""
+        cfg = _f32("llama32_3b")
+        eng = ServeEngine(cfg, _params(cfg), prefix_cache=_sim_cache())
+        p1, p2 = _prompts(cfg, suffixes=(5, 9))
+        r1 = eng.generate(Request(prompt=list(p1), max_new_tokens=2))
+        assert r1.cached_tokens == 0                    # cold miss
+        r2 = eng.generate(Request(prompt=list(p2), max_new_tokens=2))
+        assert r2.cached_tokens == 16                   # shared whole block
+
+    def test_full_prompt_hit_branch(self):
+        """Exact full-prompt hit (prompt length a block multiple, all
+        blocks cached) must still produce first-token logits — and the
+        same first token as the cold pass (satellite for the dead
+        ``batch`` assignment removal)."""
+        cfg = _f32("llama32_3b")
+        eng = ServeEngine(cfg, _params(cfg), prefix_cache=_sim_cache())
+        (prompt,) = _prompts(cfg, shared_tokens=32, suffixes=(0,))
+        cold = eng.generate(Request(prompt=list(prompt), max_new_tokens=3))
+        hot = eng.generate(Request(prompt=list(prompt), max_new_tokens=3))
+        assert hot.cached_tokens == len(prompt) == 32
+        assert hot.output == cold.output
+
+    def test_ssm_slicer_is_none_and_unsliced_insert(self):
+        """SSM archs: ``_slicer`` must be None (recurrent state is not
+        seq-sliceable) and insert must register only the exact prefix,
+        never intermediate sliced states."""
+        cfg = _f32("mamba2_2p7b")
+        cache = _sim_cache()
+        eng = ServeEngine(cfg, _params(cfg), prefix_cache=cache)
+        assert eng._slicer() is None
+        (prompt,) = _prompts(cfg, shared_tokens=32, suffixes=(0,))
+        eng.generate(Request(prompt=list(prompt), max_new_tokens=2))
+        # one entry (the full 2-block prefix), not one per block
+        assert len(cache.store) == 1
+        blk = next(iter(cache.store.values()))
+        assert blk.tokens == tuple(prompt)              # exact, unsliced
+
+    def test_attention_slicer_registers_every_block(self):
+        cfg = _f32("llama32_3b")
+        cache = _sim_cache()
+        eng = ServeEngine(cfg, _params(cfg), prefix_cache=cache)
+        assert callable(eng._slicer())
+        (prompt,) = _prompts(cfg, shared_tokens=32, suffixes=(0,))
+        eng.generate(Request(prompt=list(prompt), max_new_tokens=2))
+        assert len(cache.store) == 2                    # one per whole block
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching scheduler
+# ---------------------------------------------------------------------------
+def _serial_vs_batched(arch, max_slots=2, use_cache=True):
+    cfg = _f32(arch)
+    params = _params(cfg)
+    prompts = _prompts(cfg)
+    serial = ServeEngine(cfg, params).serve(
+        [Request(prompt=list(p), max_new_tokens=5) for p in prompts])
+    cache = _sim_cache() if use_cache else None
+    sched = ContinuousBatchingScheduler(cfg, params, prefix_cache=cache,
+                                        max_slots=max_slots, max_context=64)
+    done = sched.run([SchedRequest(prompt=list(p), max_new_tokens=5,
+                                   request_id=i)
+                      for i, p in enumerate(prompts)])
+    by_id = {r.request_id: r for r in done}
+    for i, s in enumerate(serial):
+        assert by_id[i].output == s.output, f"req {i} diverged"
+    return sched, by_id
+
+
+class TestScheduler:
+    def test_identical_outputs_dense(self):
+        sched, by_id = _serial_vs_batched("llama32_3b")
+        assert sched.decode_steps > 0 and sched.chunk_calls > 0
+        # later requests rode the blocks the earlier ones inserted
+        assert by_id[2].cached_tokens == 16             # exact-block prompt
+        assert by_id[3].cached_tokens == 16
+
+    @pytest.mark.slow
+    def test_identical_outputs_mla(self):
+        _serial_vs_batched("minicpm3_4b")
+
+    def test_identical_outputs_ssm_fallback(self):
+        """Hybrid/SSM stacks take whole-prompt prefill (no paging) but
+        still decode packed — outputs must match the serial loop."""
+        sched, by_id = _serial_vs_batched("mamba2_2p7b")
+        assert sched.chunk_calls == 0                   # no chunked prefill
+        assert all(by_id[i].cached_tokens == 0 for i in by_id)
+
+    def test_no_cache_still_batches(self):
+        sched, _ = _serial_vs_batched("llama32_3b", use_cache=False)
+        assert sched.cache is None and sched.chunk_calls > 0
+
+    def test_oversized_request_rejected(self):
+        cfg = _f32("llama32_3b")
+        sched = ContinuousBatchingScheduler(cfg, _params(cfg),
+                                            max_slots=1, max_context=32)
+        with pytest.raises(ValueError, match="max_context"):
+            sched.submit(SchedRequest(prompt=[1] * 30, max_new_tokens=8))
+
+    def test_pins_released_on_completion(self):
+        cfg = _f32("llama32_3b")
+        cache = _sim_cache()
+        sched = ContinuousBatchingScheduler(cfg, _params(cfg),
+                                            prefix_cache=cache,
+                                            max_slots=2, max_context=64)
+        prompts = _prompts(cfg)
+        sched.run([SchedRequest(prompt=list(p), max_new_tokens=3,
+                                request_id=i)
+                   for i, p in enumerate(prompts)])
+        keys = list(cache.store.keys())
+        assert keys, "prefill should have inserted blocks"
+        assert all(c == 0 for c in cache._count(keys))  # all unpinned
+        assert sched._free_slots and all(r is None for r in sched._active)
+
+
+# ---------------------------------------------------------------------------
+# trace generation + multi-worker replay
+# ---------------------------------------------------------------------------
+class TestTraceReplay:
+    def test_trace_is_deterministic_and_block_aligned(self):
+        a = make_trace(num_requests=8, num_users=3, seed=7)
+        b = make_trace(num_requests=8, num_users=3, seed=7)
+        assert [t.prompt for t in a] == [t.prompt for t in b]
+        assert [t.arrival_s for t in a] == [t.arrival_s for t in b]
+        assert all(t.arrival_s >= 0 for t in a)
+        assert all(0 not in t.prompt for t in a)        # pad token excluded
+        # same user ⇒ identical block-aligned system prefix
+        by_user = {}
+        for t in a:
+            by_user.setdefault(t.user, t.prompt[:32])
+            assert t.prompt[:32] == by_user[t.user]
+
+    def test_multi_worker_replay_smoke(self):
+        """Fixed-seed, two feeder threads: every request completes, the
+        report accounts all tokens, and the repeated-prefix trace hits
+        the cache (the CI tests-serving smoke)."""
+        cfg = _f32("llama32_3b")
+        cache = _sim_cache(capacity_blocks=64)
+        sched = ContinuousBatchingScheduler(cfg, _params(cfg),
+                                            prefix_cache=cache,
+                                            max_slots=4, max_context=96)
+        trace = make_trace(num_requests=12, num_users=3, prefix_blocks=2,
+                           block_tokens=16, max_new_tokens=4,
+                           vocab_size=cfg.vocab_size, seed=3)
+        rep = replay_trace(sched, trace, workers=2)
+        assert rep.requests == 12
+        assert rep.generated_tokens == 12 * 4
+        assert rep.tokens_per_s > 0
+        assert rep.p99_latency_s >= rep.p50_latency_s > 0
+        assert rep.hit_rate >= 0.3                      # zipf prefix reuse
+        assert "fig7dev" in rep.summary()
+
+    def test_replay_outputs_match_serial(self):
+        """Replay through threads + scheduler must equal the serial
+        engine on the same trace (the fig7dev identical-outputs gate)."""
+        cfg = _f32("llama32_3b")
+        params = _params(cfg)
+        trace = make_trace(num_requests=6, num_users=2, prefix_blocks=1,
+                           block_tokens=16, max_new_tokens=3,
+                           vocab_size=cfg.vocab_size, seed=5)
+        serial = ServeEngine(cfg, params).serve(
+            [Request(prompt=list(t.prompt), max_new_tokens=3)
+             for t in trace])
+        sched = ContinuousBatchingScheduler(
+            cfg, params, prefix_cache=_sim_cache(capacity_blocks=64),
+            max_slots=3, max_context=64)
+        replay_trace(sched, trace, workers=2)
+        by_id = {r.request_id: r for r in sched.completed}
+        for i, s in enumerate(serial):
+            assert by_id[i].output == s.output
