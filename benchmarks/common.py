@@ -159,6 +159,18 @@ ACCEPTANCE_FLOORS = {
     "fig7dev": (("speedup_vs_serial", 2.0),
                 ("identical_outputs", 1.0),
                 ("cache_hit_rate", 0.25)),
+    # ISSUE 10: the 2-process multihost rows (fields only they carry, so
+    # the single-host fig6dev ladder is not gated by them): owner-aligned
+    # waves stay carry-free on every host, every host actually hid
+    # collective drain time behind ingest, and per-update efficiency vs
+    # the single-host 1-shard baseline stays above a collapse-catching
+    # floor. Both processes share one physical CPU (gloo over virtual
+    # devices measures software overhead, not multi-chip bandwidth):
+    # measured ≈2.3× in smoke, ≈0.5× at full load — 0.2 flags a
+    # serialization regression without gating on machine noise.
+    "fig6dev": (("carry_free", 1.0),
+                ("overlap_us", 1.0),
+                ("mh_weak_efficiency", 0.2)),
 }
 
 
@@ -168,15 +180,25 @@ def compare_to_baseline(rows, baseline_path: str) -> bool:
     Checks every current row covered by :data:`ACCEPTANCE_FLOORS`
     against its floor, printing the committed baseline's value (e.g.
     ``BENCH_PR3.json``) for reference. Returns False — and the caller
-    exits nonzero — if any speedup regressed below its floor, or if
-    *no* covered rows ran at all (a renamed suite/field must not let
-    the gate pass vacuously).
+    exits nonzero — if any speedup regressed below its floor, or if a
+    gated suite went missing: every suite that carries gated fields *in
+    the committed baseline* must contribute at least one checked row to
+    this run (ISSUE 10) — a renamed suite/field, or a multihost pair
+    that silently failed to spawn, must not let the gate pass vacuously.
+    (Running a ``--only`` subset against a full baseline therefore
+    fails; gate subset runs against a matching baseline, or not at all.)
     """
     import json
 
     with open(baseline_path) as f:
         base = {r["name"]: r for r in json.load(f)["rows"]}
-    checked, failures = 0, []
+    # suites the gate *expects*: gated fields present in the baseline
+    expected = {s for s, floors in ACCEPTANCE_FLOORS.items()
+                for r in base.values()
+                if r["name"].split("/")[0] == s
+                and any(f in r.get("derived", {}) for f, _ in floors)}
+    checked_by_suite: dict = {}
+    failures = []
     for name, _us, derived in rows:
         suite = name.split("/")[0]
         if suite not in ACCEPTANCE_FLOORS:
@@ -185,7 +207,7 @@ def compare_to_baseline(rows, baseline_path: str) -> bool:
         for field, floor in ACCEPTANCE_FLOORS[suite]:
             if field not in d:
                 continue
-            checked += 1
+            checked_by_suite[suite] = checked_by_suite.get(suite, 0) + 1
             cur = float(d[field])
             ref = base.get(name, {}).get("derived", {}).get(field)
             note = f"baseline={ref}" if ref is not None else "baseline=n/a"
@@ -196,9 +218,15 @@ def compare_to_baseline(rows, baseline_path: str) -> bool:
                 print(f"# baseline-ok {line}", file=sys.stderr, flush=True)
     for line in failures:
         print(f"# REGRESSION {line}", file=sys.stderr, flush=True)
-    if checked == 0:
+    missing = expected - set(checked_by_suite)
+    for suite in sorted(missing):
+        print(f"# REGRESSION baseline gate: suite {suite} carries "
+              "acceptance fields in the baseline but contributed no "
+              "checked rows to this run (gate fails closed)",
+              file=sys.stderr, flush=True)
+    if not checked_by_suite:
         print("# REGRESSION baseline gate matched no rows: acceptance "
               "suites/fields missing from this run (gate fails closed)",
               file=sys.stderr, flush=True)
         return False
-    return not failures
+    return not failures and not missing

@@ -7,14 +7,29 @@ load** (weak scaling): per-shard update stream, per-shard table geometry
 and a key space that grows with the mesh. Ideal weak scaling holds
 us/update constant as shards grow.
 
-Prints one ``ROW|name|us_per_call|derived`` line per shard count;
+After the single-host ladder it re-runs the 8-shard point as a **2-process
+multihost mesh** (ISSUE 10): two ``--mh-worker`` children of this same
+script, 4 virtual devices each, joined via ``jax.distributed.initialize``
+over a localhost coordinator with gloo CPU collectives. Each host ingests
+its half of the same stream and hides the collective drains behind local
+ingest (``drain(wait=False)``); the per-host rows carry the
+``overlap_us``/``stall_us`` ledgers, ``carry_free`` (owner-aligned waves
+never carry) and ``mh_weak_efficiency`` vs the single-host shards_1
+baseline — the fields the fig6dev acceptance floors gate on.
+
+Prints one ``ROW|name|us_per_call|derived`` line per shard count / host;
 ``benchmarks.bench_weak_scaling`` parses them into suite rows.
 """
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
-os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import sys
+
+_MH_WORKER = "--mh-worker" in sys.argv
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={4 if _MH_WORKER else 8} "
+    + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import socket
+import subprocess
 import time
 from pathlib import Path
 
@@ -31,21 +46,30 @@ PER_SHARD_UPDATES = 100_000
 PER_SHARD_KEYS = 1 << 14
 BATCH = 4096
 N_QUERIES = 4096
+MH_PROCS = 2
+MH_DRAIN_EVERY = 2     # global batches between hidden collective drains
 
 
-def bench_shards(n: int, n_updates: int, rng: np.random.Generator):
-    cfg = ShardedTableConfig(
+def _cfg(n: int) -> ShardedTableConfig:
+    return ShardedTableConfig(
         local=tj.FlashTableConfig(q_log2=13, r_log2=9, scheme="MDB-L",
                                   log_capacity=1 << 13,
                                   max_updates_per_block=1 << 8,
                                   overflow_capacity=1 << 10),
         num_shards=n, bucket_cap=1 << 10)
-    store = FlashStore.open(cfg, backend="sharded", shard_chunk=1024,
+
+
+def _stream(n: int, n_updates: int, rng: np.random.Generator) -> np.ndarray:
+    # key space scales with the mesh: per-shard unique load stays fixed
+    return (rng.zipf(1.35, size=n * n_updates)
+            % (n * PER_SHARD_KEYS)).astype(np.int64)
+
+
+def bench_shards(n: int, n_updates: int, rng: np.random.Generator):
+    store = FlashStore.open(_cfg(n), backend="sharded", shard_chunk=1024,
                             flush_threshold=2048)
     total = n * n_updates
-    # key space scales with the mesh: per-shard unique load stays fixed
-    toks = (rng.zipf(1.35, size=total) % (n * PER_SHARD_KEYS)).astype(
-        np.int64)
+    toks = _stream(n, n_updates, rng)
     # warm the compiled update/lookup programs outside the timed region
     store.update(np.arange(BATCH, dtype=np.int64))
     store._b.drain()
@@ -65,9 +89,93 @@ def bench_shards(n: int, n_updates: int, rng: np.random.Generator):
     return upd_secs, q_secs, total, s
 
 
+# ---------------------------------------------------------------------------
+# multihost: the 8-shard point as a 2-process mesh (ISSUE 10)
+# ---------------------------------------------------------------------------
+def run_mh_worker(pid: int, port: int, base_us: float,
+                  n_updates: int) -> None:
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass          # newer jax: gloo is already the CPU default
+    jax.distributed.initialize(coordinator_address=f"127.0.0.1:{port}",
+                               num_processes=MH_PROCS, process_id=pid)
+    assert jax.device_count() == 8 and jax.local_device_count() == 4
+    rng = np.random.default_rng(7)
+    store = FlashStore.open(_cfg(8), backend="sharded", shard_chunk=1024)
+    total = 8 * n_updates
+    toks = _stream(8, n_updates, rng)     # every host derives the same
+    # warm compile + first collective outside the timed region
+    store.update(np.arange(BATCH, dtype=np.int64))
+    store.drain(wait=True)
+    store.query(np.arange(N_QUERIES, dtype=np.int64))
+    t0 = time.time()
+    for b, i in enumerate(range(0, total, BATCH)):
+        if b % MH_PROCS == pid:           # my half of the global stream
+            store.update(toks[i:i + BATCH])
+        if b % MH_DRAIN_EVERY == MH_DRAIN_EVERY - 1:
+            store.drain(wait=False)       # collective hidden behind ingest
+    store.flush(wait=True)
+    upd_secs = time.time() - t0
+    q = rng.choice(toks, size=N_QUERIES).astype(np.int64)
+    t0 = time.time()
+    store.query_batch(q)
+    q_secs = time.time() - t0
+    s = store.stats()
+    store.close()
+    us = upd_secs / total * 1e6           # both hosts cover the window
+    derived = (f"procs={MH_PROCS};host={pid};shards=8;"
+               f"per_shard_updates={n_updates};total_updates={total};"
+               f"secs={upd_secs:.2f};"
+               f"mh_weak_efficiency={base_us / us:.2f};"
+               f"query_us_per_key={q_secs / N_QUERIES * 1e6:.2f};"
+               f"overlap_us={s['write_overlap_us']};"
+               f"stall_us={s['write_stall_us']};"
+               f"flushes={s['write_flushes']};"
+               f"collectives={s['write_dispatches']};"
+               f"deduped={s['write_deduped']};"
+               f"carried={s['write_carried']};"
+               f"carry_free={1 if s['write_carried'] == 0 else 0};"
+               f"dropped={s['dropped']}")
+    print(f"ROW|fig6dev/multihost/MDB-L/host_{pid}|{us:.3f}|{derived}",
+          flush=True)
+
+
+def spawn_mh_pair(base_us: float, smoke: bool) -> None:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)            # workers pin their own 4-dev view
+    procs = [subprocess.Popen(
+        [sys.executable, str(Path(__file__).resolve()), "--mh-worker",
+         "--pid", str(p), "--port", str(port), "--base-us", str(base_us)]
+        + (["--smoke"] if smoke else []),
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True) for p in range(MH_PROCS)]
+    for p, proc in enumerate(procs):
+        out, _ = proc.communicate(timeout=1800)
+        if proc.returncode != 0:
+            raise RuntimeError(f"mh worker {p} rc={proc.returncode}\n"
+                               f"{out[-4000:]}")
+        for line in out.splitlines():     # relay the per-host ROW lines
+            if line.startswith("ROW|"):
+                print(line, flush=True)
+
+
+def _arg(flag: str, default=None):
+    return (sys.argv[sys.argv.index(flag) + 1]
+            if flag in sys.argv else default)
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv
     n_updates = PER_SHARD_UPDATES // (16 if smoke else 1)
+    if _MH_WORKER:
+        run_mh_worker(int(_arg("--pid")), int(_arg("--port")),
+                      float(_arg("--base-us")), n_updates)
+        return
     assert jax.device_count() == 8, jax.devices()
     base_us = None
     for n in (1, 2, 4, 8):
@@ -90,6 +198,7 @@ def main() -> None:
                    f"carried={s['write_carried']};dropped={s['dropped']}")
         print(f"ROW|fig6dev/sharded/MDB-L/shards_{n}|{us:.3f}|{derived}",
               flush=True)
+    spawn_mh_pair(base_us, smoke)
 
 
 if __name__ == "__main__":

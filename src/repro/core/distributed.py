@@ -71,10 +71,16 @@ def init_global(cfg: ShardedTableConfig) -> tj.DeviceTableState:
     return jax.tree.map(rep, local)
 
 
-def state_pspec(axis: str) -> tj.DeviceTableState:
+def state_pspec(axis: str,
+                local: tj.FlashTableConfig | None = None
+                ) -> tj.DeviceTableState:
     """PartitionSpec pytree for the global state (all leaves sharded on
-    their leading, per-shard dim)."""
-    return jax.tree.map(lambda _: P(axis), tj.init(tj.FlashTableConfig()))
+    their leading, per-shard dim). The tree structure is scheme-independent
+    (MDB's ``(cs_partitions,)`` log pointers tile to ``(n * cs_partitions,)``
+    and shard on the same leading dim), so ``local`` is only needed when the
+    default config would not build — it never changes the specs."""
+    return jax.tree.map(lambda _: P(axis),
+                        tj.init(local or tj.FlashTableConfig()))
 
 
 def _bucket_by_owner(cfg: ShardedTableConfig, keys, cnts):
@@ -102,18 +108,30 @@ def _bucket_by_owner(cfg: ShardedTableConfig, keys, cnts):
     return buk, buc, carry_k, carry_c
 
 
-def _squeeze(state):
-    """Drop the leading per-shard dim of scalar leaves inside shard_map."""
+def _squeeze(state, local: tj.FlashTableConfig | None = None):
+    """Drop the leading per-shard dim of scalar leaves inside shard_map.
+
+    Scheme-aware (ISSUE 10): MB / MDB-L keep a scalar ``log_ptr`` (tiled to
+    ``(n,)`` globally, ``(1,)`` per shard — squeeze to ``()``); MDB keeps a
+    *vector* of per-change-segment-partition pointers (``(cs_partitions,)``
+    locally, tiled to ``(n * cs_partitions,)`` globally) that arrives inside
+    shard_map already in its local shape and must not be squeezed."""
+    scalar_log = local is None or local.scheme != "MDB"
     return state._replace(
-        log_ptr=state.log_ptr.reshape(state.log_ptr.shape[1:]),
+        log_ptr=(state.log_ptr.reshape(state.log_ptr.shape[1:])
+                 if scalar_log else state.log_ptr),
         ov_ptr=state.ov_ptr.reshape(()),
         stats=jax.tree.map(lambda x: x.reshape(()), state.stats))
 
 
-def _expand(state):
-    """Restore the leading per-shard dim on scalar leaves for out_specs."""
+def _expand(state, local: tj.FlashTableConfig | None = None):
+    """Restore the leading per-shard dim on scalar leaves for out_specs.
+    Inverse of :func:`_squeeze` — MDB's ``(cs_partitions,)`` log pointers
+    already carry their sharded leading dim and pass through untouched."""
+    scalar_log = local is None or local.scheme != "MDB"
     return state._replace(
-        log_ptr=state.log_ptr.reshape((1,) + state.log_ptr.shape),
+        log_ptr=(state.log_ptr.reshape((1,) + state.log_ptr.shape)
+                 if scalar_log else state.log_ptr),
         ov_ptr=state.ov_ptr.reshape((1,)),
         stats=jax.tree.map(lambda x: x.reshape((1,)), state.stats))
 
@@ -133,10 +151,10 @@ def make_update_fn(cfg: ShardedTableConfig, mesh, axis: str,
     """
     from ..kernels.flash_hash import ops as hops
     local_cfg = cfg.local
-    spec = state_pspec(axis)
+    spec = state_pspec(axis, local_cfg)
 
     def local_update(state: tj.DeviceTableState, tokens, deltas=None):
-        state = _squeeze(state)
+        state = _squeeze(state, local_cfg)
         if deltas is None:
             keys, cnts = hops.accumulate(tokens.astype(jnp.int32))
         else:
@@ -156,8 +174,13 @@ def make_update_fn(cfg: ShardedTableConfig, mesh, axis: str,
         # block bits are identical — owner routing and local placement agree
         # by construction (placement property, sharded edition).
         state = tj.update(local_cfg, state, got_k, got_c)
-        n_carry = (carry_k != EMPTY).sum(dtype=jnp.int32)
-        return _expand(state), n_carry[None]
+        # replicated scalar (psum over shards) rather than a per-shard
+        # vector: in a multi-process mesh only replicated outputs are
+        # addressable from every host, and the stores only ever consumed
+        # the sum anyway.
+        n_carry = jax.lax.psum(
+            (carry_k != EMPTY).sum(dtype=jnp.int32), axis)
+        return _expand(state, local_cfg), n_carry
 
     from jax.experimental.shard_map import shard_map
     if with_deltas:
@@ -167,7 +190,7 @@ def make_update_fn(cfg: ShardedTableConfig, mesh, axis: str,
         body = lambda state, tokens: local_update(state, tokens)
         in_specs = (spec, P(axis))
     upd = shard_map(body, mesh=mesh, in_specs=in_specs,
-                    out_specs=(spec, P(axis)),
+                    out_specs=(spec, P()),
                     check_rep=False)
     return jax.jit(upd, donate_argnums=(0,) if donate else ())
 
@@ -182,15 +205,16 @@ def make_lookup_fn(cfg: ShardedTableConfig, mesh, axis: str,
     (the owner shard's device probe; non-owners contribute 0), matching
     the ``(counts, distances)`` contract of :func:`table_jax.lookup` so a
     :class:`~.query_engine.BatchedQueryEngine` can front this path.
-    ``with_tiles=True`` (requires ``with_dist``) appends the per-shard
-    tile-load counts as an ``(n_shards,)`` vector — the engine sums it
-    into its ``tile_loads`` counter.
+    ``with_tiles=True`` (requires ``with_dist``) appends the tile-load
+    count summed over shards as a replicated scalar — the engine adds it
+    to its ``tile_loads`` counter. (Replicated, not ``(n_shards,)``: a
+    multi-process mesh can only read replicated outputs locally.)
     """
     local_cfg = cfg.local
-    spec = state_pspec(axis)
+    spec = state_pspec(axis, local_cfg)
 
     def local_lookup(state: tj.DeviceTableState, q):
-        state = _squeeze(state)
+        state = _squeeze(state, local_cfg)
         blocks_per_shard_log2 = cfg.local.q_log2 - cfg.local.r_log2
         owner = cfg.global_pair.s(q) >> blocks_per_shard_log2
         me = jax.lax.axis_index(axis)
@@ -203,13 +227,13 @@ def make_lookup_fn(cfg: ShardedTableConfig, mesh, axis: str,
         dist = jax.lax.psum(jnp.where(mine, dist, 0), axis)
         if not with_tiles:
             return cnt, dist
-        return cnt, dist, tiles[None]  # (1,) per shard -> (n_shards,)
+        return cnt, dist, jax.lax.psum(tiles, axis)
 
     from jax.experimental.shard_map import shard_map
     if with_tiles and not with_dist:
         raise ValueError("with_tiles requires with_dist")
     out_specs = (P() if not with_dist
-                 else (P(), P(), P(axis)) if with_tiles
+                 else (P(), P(), P()) if with_tiles
                  else (P(), P()))
     look = shard_map(local_lookup, mesh=mesh,
                      in_specs=(spec, P()),
@@ -226,10 +250,10 @@ def make_filter_fn(cfg: ShardedTableConfig, mesh, axis: str):
     ``(state, keys) -> mask`` contract the query engine's ``filter_fn``
     expects."""
     local_cfg = cfg.local
-    spec = state_pspec(axis)
+    spec = state_pspec(axis, local_cfg)
 
     def local_filter(state: tj.DeviceTableState, q):
-        state = _squeeze(state)
+        state = _squeeze(state, local_cfg)
         blocks_per_shard_log2 = cfg.local.q_log2 - cfg.local.r_log2
         owner = cfg.global_pair.s(q) >> blocks_per_shard_log2
         me = jax.lax.axis_index(axis)
@@ -253,12 +277,102 @@ def make_flush_fn(cfg: ShardedTableConfig, mesh, axis: str,
     change segment through :func:`table_jax.flush` (end-of-stream /
     checkpoint). No collective — merges are block-local by construction."""
     local_cfg = cfg.local
-    spec = state_pspec(axis)
+    spec = state_pspec(axis, local_cfg)
 
     def local_flush(state: tj.DeviceTableState):
-        return _expand(tj.flush(local_cfg, _squeeze(state)))
+        return _expand(tj.flush(local_cfg, _squeeze(state, local_cfg)),
+                       local_cfg)
 
     from jax.experimental.shard_map import shard_map
     fl = shard_map(local_flush, mesh=mesh, in_specs=(spec,),
                    out_specs=spec, check_rep=False)
     return jax.jit(fl, donate_argnums=(0,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# Multi-process (multi-host) helpers — ISSUE 10.
+#
+# Everything above is process-count agnostic: the programs are plain
+# shard_map'd jits over a mesh. What changes on a multi-process mesh
+# (``jax.distributed.initialize``) is *array placement*: a process can only
+# materialise its addressable shards, so global inputs are built with
+# ``jax.make_array_from_callback`` instead of ``device_put``/implicit
+# commitment, and anything a host needs to *read back* must come out
+# replicated (``P()``), which is why ``n_carry`` and the tile-load counter
+# above are psums. The helpers below are also correct on a single-process
+# mesh — the sharded store uses them unconditionally in multihost mode and
+# the tests reuse them in-process.
+# ---------------------------------------------------------------------------
+
+
+def host_shards(mesh, axis: str) -> list[int]:
+    """Mesh positions (== shard ids) owned by the calling process.
+
+    With ``jax.make_mesh((n,), (axis,))`` over id-ordered devices the
+    shards of process *p* are contiguous, but we derive ownership from the
+    mesh itself rather than assume it."""
+    me = jax.process_index()
+    return [i for i, d in enumerate(mesh.devices.reshape(-1))
+            if d.process_index == me]
+
+
+def place_global(cfg: ShardedTableConfig, mesh, axis: str
+                 ) -> tj.DeviceTableState:
+    """:func:`init_global` for multi-process meshes: every process builds
+    the (identical, deterministic) host-side global init and materialises
+    only its addressable shards via ``jax.make_array_from_callback``."""
+    import numpy as np
+    from jax.sharding import NamedSharding
+    local = jax.tree.map(np.asarray, tj.init(cfg.local))
+    sh = NamedSharding(mesh, P(axis))
+
+    def place(x):
+        if x.ndim:
+            g = np.tile(x[None], (cfg.num_shards,) + (1,) * x.ndim).reshape(
+                (cfg.num_shards * x.shape[0],) + x.shape[1:])
+        else:
+            g = np.tile(x[None], (cfg.num_shards,))
+        return jax.make_array_from_callback(
+            g.shape, sh, lambda idx, g=g: g[idx])
+
+    return jax.tree.map(place, local)
+
+
+def make_global_batch(mesh, axis: str, arr) -> jax.Array:
+    """Place a host-side array as a global array sharded over ``axis``.
+    ``arr`` must be the *global* value (identical shape on every process);
+    each process materialises only its addressable slices."""
+    import numpy as np
+    from jax.sharding import NamedSharding
+    a = np.asarray(arr)
+    sh = NamedSharding(mesh, P(axis))
+    return jax.make_array_from_callback(a.shape, sh, lambda idx: a[idx])
+
+
+def make_replicated(mesh, arr) -> jax.Array:
+    """Place a host-side array fully replicated over ``mesh`` (for query
+    batches: the read path takes the full batch on every shard). The value
+    must be identical on every process — collective calls are SPMD."""
+    import numpy as np
+    from jax.sharding import NamedSharding
+    a = np.asarray(arr)
+    sh = NamedSharding(mesh, P())
+    return jax.make_array_from_callback(a.shape, sh, lambda idx: a[idx])
+
+
+def make_sync_fn(cfg: ShardedTableConfig, mesh, axis: str, width: int = 2):
+    """Build the drain-agreement collective: ``(n_shards, width)`` int32 in
+    (each process fills its own shards' rows), element-wise max over shards
+    out, replicated. The multihost store runs it on the *caller* thread
+    (post-settle, pre-submit) so hosts agree on the number of drain waves —
+    and on whether a device merge is needed — before the worker launches
+    any collective program; the global collective order stays
+    ``agree_k < waves_k < agree_{k+1}`` on every host (DESIGN.md §14)."""
+
+    def local_max(v):  # v: (1, width) per shard
+        return jax.lax.pmax(v.reshape(v.shape[1:]), axis)
+
+    from jax.experimental.shard_map import shard_map
+    sync = shard_map(local_max, mesh=mesh, in_specs=(P(axis),),
+                     out_specs=P(), check_rep=False)
+    return jax.jit(sync)

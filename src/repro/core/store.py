@@ -664,9 +664,9 @@ class DeviceBackend:
     wear-aware eviction policies (`serving/prefix_cache`)."""
 
     name = "device"
-    # wear ledgers are mutated by _on_drain on the drain worker; FL006
+    # the wear ledger is mutated by _on_drain on the drain worker; FL006
     # holds every access to the state lock or an audited method
-    _fl_guarded = ("_heat", "_staged_parts")
+    _fl_guarded = ("_wear",)
 
     def __init__(self, cfg=None, state=None, chunk: int = 4096,
                  query_chunk: int = 1024,
@@ -692,8 +692,9 @@ class DeviceBackend:
             dispatcher=self._disp, wal=wal)
         # wear attribution: partition -> accumulated Δtile_stores share,
         # plus the staged-since-last-merge histogram merges are charged to
-        self._heat: Dict[int, float] = {}
-        self._staged_parts: Dict[int, int] = {}
+        # (the ledger is shared with the sharded backend — ISSUE 10)
+        from .write_engine import PartitionHeatLedger
+        self._wear = PartitionHeatLedger()
 
     # -- wear attribution ---------------------------------------------------
     def _partition_of(self, keys: np.ndarray) -> np.ndarray:
@@ -705,22 +706,17 @@ class DeviceBackend:
         return np.asarray(s)
 
     def _on_drain(self, keys, wear_delta: int) -> None:  # flashlint: under-lock
+        # the ledger charges the measured Δtile_stores to the partitions
+        # staged since the last forced merge, proportional to staged
+        # volume, with a decayed history (recent merge pressure, not the
+        # lifetime total); keys=None marks the forced merge that drains
+        # the staged histogram
+        parts_counts = None
         if keys is not None:                 # H_R drain: staged entries
             parts, counts = np.unique(self._partition_of(keys),
                                       return_counts=True)
-            for p, c in zip(parts.tolist(), counts.tolist()):
-                self._staged_parts[p] = self._staged_parts.get(p, 0) + c
-        # charge the measured Δtile_stores to the partitions staged since
-        # the last forced merge, proportional to their staged volume; the
-        # history decays so heat tracks *recent* merge pressure, not the
-        # lifetime total (an old burst must not pin a partition hot)
-        if wear_delta > 0 and self._staged_parts:
-            self._heat = {p: 0.5 * v for p, v in self._heat.items()}
-            total = sum(self._staged_parts.values())
-            for p, c in self._staged_parts.items():
-                self._heat[p] = self._heat.get(p, 0.0) + wear_delta * c / total
-        if keys is None:                     # forced merge drained the lot
-            self._staged_parts.clear()
+            parts_counts = list(zip(parts.tolist(), counts.tolist()))
+        self._wear.note(parts_counts, wear_delta)
 
     def partition_heat(self, keys) -> np.ndarray:
         """Write pressure of each key's partition: entries currently
@@ -734,8 +730,7 @@ class DeviceBackend:
         if flat.size == 0:
             return np.zeros(0)
         with self._disp.lock:
-            pending = dict(self._staged_parts)
-            heat = dict(self._heat)
+            pending, heat = self._wear.snapshot()
             for b in (self.writer.front._buf[0],
                       self.writer.front._inflight[0]):
                 if not b:
@@ -829,8 +824,7 @@ class DeviceBackend:
             # (and assert_live) need real jax arrays
             self.writer.state = jax.tree.map(jnp.asarray, restored)
         self.writer._staged_dirty = True  # snapshot may hold staged segments
-        self._heat.clear()
-        self._staged_parts.clear()
+        self._wear.clear()
         self.query_engine.invalidate()
         return step, meta
 
@@ -878,15 +872,37 @@ class ShardedBackend:
       blocks, one psum combines), fronted by the standard
       :class:`~.query_engine.BatchedQueryEngine` hot cache + H_R overlay.
 
-    The local scheme must be MB or MDB-L (MDB's partitioned change
-    segment and the shard axis would partition the same dimension twice).
+    All three schemes shard (ISSUE 10): MDB's per-change-segment-partition
+    log pointers tile to a per-shard leading dim like every other leaf
+    (:func:`distributed._squeeze` is scheme-aware).
+
+    **Multi-process meshes** (ISSUE 10, DESIGN.md §14). When the process
+    was brought up under ``jax.distributed.initialize`` the same backend
+    runs the *cluster* edition: the mesh spans every process's devices,
+    each host folds its own ingest into its host-local per-shard H_R
+    partitions, and the cross-host ``all_to_all`` inside the update
+    program routes drained entries to their owner's blocks. Because
+    collective programs are SPMD, three rules change vs. single-host:
+
+    * drains/flushes/queries are **collective** — every process must call
+      them at the same logical point (threshold auto-flush is disabled;
+      the caller drives the drain cadence);
+    * hosts first **agree on the number of drain waves** (and whether a
+      device merge is pending anywhere) via a tiny caller-thread
+      collective run post-settle, so the worker-side collectives stay in
+      global program order (``agree_k < waves_k < agree_{k+1}``) while
+      still being hidden behind each host's local ingest;
+    * each host packs its sealed entries into its **local device slices**
+      only (``<= shard_chunk`` entries per slice, so the per-(src,dst)
+      bucket can never overflow: ``write_carried == 0`` stays structural
+      even though the a2a now does real cross-host routing).
     """
 
     name = "sharded"
     # shared with the drain worker; flashlint FL006 holds every access
     # to the state lock (or an audited under-lock/quiescent method). The
     # per-shard H_R double-buffer itself lives in the SealedFront.
-    _fl_guarded = ("state", "_staged_dirty")
+    _fl_guarded = ("state", "_staged_dirty", "_wear")
 
     def __init__(self, cfg=None, mesh=None, axis: str = "table",
                  num_shards: Optional[int] = None,
@@ -894,14 +910,14 @@ class ShardedBackend:
                  flush_threshold: Optional[int] = None,
                  query_chunk: int = 1024, hot_capacity: int = 4096,
                  piggyback_frac: float = 0.5, async_flush: bool = True,
-                 wal=None, **table_kw):
+                 track_wear: bool = True, wal=None, **table_kw):
         import jax
         from jax.sharding import NamedSharding
 
         from . import distributed as D
         from . import table_jax as tj
         from .query_engine import BatchedQueryEngine
-        from .write_engine import WriteEngineStats
+        from .write_engine import PartitionHeatLedger, WriteEngineStats
 
         if cfg is None or isinstance(cfg, tj.FlashTableConfig):
             n = int(num_shards if num_shards is not None
@@ -913,14 +929,17 @@ class ShardedBackend:
         n = cfg.num_shards
         if n & (n - 1):
             raise ValueError(f"num_shards={n} must be a power of two")
-        if cfg.local.scheme not in ("MB", "MDB-L"):
-            raise ValueError(
-                f"sharded backend requires an MB or MDB-L local scheme, "
-                f"got {cfg.local.scheme!r} (MDB partitions the change "
-                f"segment over the same axis the mesh shards)")
         self.scheme = cfg.local.scheme
         self.mesh = mesh if mesh is not None else jax.make_mesh((n,), (axis,))
         self.axis = axis
+        # multi-process mesh? (jax.distributed.initialize before open)
+        self.num_processes = int(jax.process_count())
+        self.process_index = int(jax.process_index())
+        self.multihost = self.num_processes > 1
+        # mesh positions whose device this process owns == the slices this
+        # host may pack drained entries into (all of them, single-host)
+        self._local_shards = (D.host_shards(self.mesh, axis)
+                              if self.multihost else list(range(n)))
         self.shard_chunk = int(min(cfg.bucket_cap, shard_chunk or 1024))
         self.flush_threshold = int(2 * self.shard_chunk
                                    if flush_threshold is None
@@ -930,21 +949,34 @@ class ShardedBackend:
         self._upd = D.make_update_fn(cfg, self.mesh, axis,
                                      with_deltas=True, donate=True)
         self._mrg = D.make_flush_fn(cfg, self.mesh, axis, donate=True)
+        self._sync = (D.make_sync_fn(cfg, self.mesh, axis)
+                      if self.multihost else None)
         look = D.make_lookup_fn(cfg, self.mesh, axis, with_dist=True,
                                 with_tiles=True)
         filt = (D.make_filter_fn(cfg, self.mesh, axis)
                 if cfg.local.filters else None)
+        if self.multihost:
+            # query batches must be *global* (replicated) arrays — a
+            # process-local jnp array is not addressable mesh-wide
+            mesh_ = self.mesh
+            lookup_fn = lambda state, q: look(
+                state, D.make_replicated(mesh_, np.asarray(q)))
+            filter_fn = (None if filt is None else lambda state, q: filt(
+                state, D.make_replicated(mesh_, np.asarray(q))))
+        else:
+            lookup_fn = lambda state, q: look(state, q)
+            filter_fn = (None if filt is None
+                         else lambda state, q: filt(state, q))
         self.query_engine = BatchedQueryEngine(
             cfg.local, chunk=query_chunk, hot_capacity=hot_capacity,
-            lookup_fn=lambda state, q: look(state, q),
-            filter_fn=(None if filt is None
-                       else lambda state, q: filt(state, q)))
+            lookup_fn=lookup_fn, filter_fn=filter_fn)
         spec = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
-                            D.state_pspec(axis),
+                            D.state_pspec(axis, cfg.local),
                             is_leaf=lambda s: type(s).__name__
                             == "PartitionSpec")
         self._spec = spec             # restore reshard target
-        self.state = jax.device_put(D.init_global(cfg), spec)
+        self.state = (D.place_global(cfg, self.mesh, axis) if self.multihost
+                      else jax.device_put(D.init_global(cfg), spec))
         self._shard_bits = cfg.local.q_log2 - cfg.local.r_log2
         self._staged_dirty = False    # staged entries since last merge
         self._disp = FlushDispatcher(enabled=async_flush)
@@ -954,6 +986,14 @@ class ShardedBackend:
         self._disp.ledger = self.stats_ledger
         self.piggybacked = 0
         self.carried = 0
+        # per-shard wear/heat (ISSUE 10): keyed by *global* block id so
+        # heat is a function of the trace, not of the mesh topology; the
+        # merge charge is the trace-derived staged volume (the sharded
+        # TableStats deltas are not per-host-readable). track_wear is
+        # accepted for DeviceBackend signature parity — the proxy feed is
+        # cheap enough to keep on unconditionally.
+        self._track_wear = bool(track_wear)
+        self._wear = PartitionHeatLedger()
 
     @property
     def _inflight(self) -> List[Optional[Dict[int, int]]]:
@@ -981,6 +1021,11 @@ class ShardedBackend:
         led.cancelled += cancelled
         led.buffered += n_new
         led.deduped += n_valid - n_new
+        if self.multihost:
+            # drains are collective: a host-local threshold must not
+            # launch a collective program the other hosts don't know
+            # about. The caller drives the drain cadence (DESIGN.md §14).
+            return
         lens = self.front.part_lens()
         hot = [i for i, ln in enumerate(lens)
                if ln >= self.flush_threshold]
@@ -1034,10 +1079,24 @@ class ShardedBackend:
         self._staged_dirty = True
         for _s, (ks, _vs) in per_shard.items():
             led.dispatched_entries += ks.size
+        self._note_staged(per_shard)
         self.front.mark_drained(sorted(per_shard))
         led.flushes += 1
         self.query_engine.invalidate()
         led.invalidations += 1
+
+    def _note_staged(self, per_shard: Dict) -> None:  # flashlint: under-lock
+        """Feed the wear ledger with the drained entries, keyed by
+        *global* block id — the trace-derived proxy for per-shard
+        ``partition_heat`` (identical no matter how the mesh splits the
+        trace across processes). Worker side, under the dispatcher lock."""
+        if not self._track_wear or not per_shard:
+            return
+        blocks = np.concatenate(
+            [np.asarray(self.cfg.global_pair.s(ks))
+             for ks, _vs in per_shard.values()])
+        parts, counts = np.unique(blocks, return_counts=True)
+        self._wear.note(list(zip(parts.tolist(), counts.tolist())), 0)
 
     # flashlint: under-lock (drain-worker body, submitted via dispatcher)
     def _merge_device(self) -> None:
@@ -1052,6 +1111,10 @@ class ShardedBackend:
         self._disp.trace("state_rebind", "state", "w")
         self.stats_ledger.merges += 1
         self._staged_dirty = False
+        if self._track_wear:
+            # merge charge = staged volume since the last merge (the
+            # trace-derived twin of DeviceBackend's Δtile_stores feed)
+            self._wear.note(None, float(sum(self._wear.staged.values())))
         self.query_engine.invalidate()
         self.stats_ledger.invalidations += 1
 
@@ -1062,11 +1125,124 @@ class ShardedBackend:
         yet to settle ``_staged_dirty`` also barriers here."""
         self.front.settle()
 
+    # -- multi-process drains (ISSUE 10, DESIGN.md §14) ----------------------
+    def _agree(self, waves: int, dirty: int) -> Tuple[int, int]:
+        """Caller-thread agreement collective: element-wise max over
+        shards of ``(waves, dirty)``. Each process fills only its own
+        shards' rows (the placement callback never asks for the others),
+        so the result is the max over hosts. Runs post-settle — no worker
+        collective can be in flight — keeping the global collective order
+        strict: ``agree_k < waves_k < agree_{k+1}`` on every host."""
+        from . import distributed as D
+        v = np.zeros((self.cfg.num_shards, 2), np.int32)
+        v[self._local_shards, 0] = waves
+        v[self._local_shards, 1] = dirty
+        got = np.asarray(self._sync(
+            D.make_global_batch(self.mesh, self.axis, v)))
+        return int(got[0]), int(got[1])
+
+    def _drain_collective(self, merge: bool, wait: bool) -> None:
+        """Multihost drain/flush body: seal all host-local partitions,
+        agree with the other hosts on the number of fixed-shape drain
+        waves (and, for a flush, whether any host still has staged
+        segments), then submit ONE worker job that runs exactly the
+        agreed program sequence — identical on every host (SPMD
+        lockstep), with the collectives themselves hidden behind the
+        next buffer's local ingest (the overlap_us ledger)."""
+        per_shard = self._seal(None)
+        total = (sum(ks.size for ks, _vs in per_shard.values())
+                 if per_shard else 0)
+        budget = len(self._local_shards) * self.shard_chunk
+        waves = -(-total // budget) if total else 0
+        # post-settle probe: no job in flight, the flag is stable
+        dirty = 1 if (merge and
+                      self._staged_dirty) else 0  # flashlint: disable=FL006
+        g_waves, g_dirty = self._agree(waves, dirty)
+        if g_waves == 0 and not (merge and g_dirty):
+            if wait:
+                self._disp.wait()
+            return
+
+        def job():
+            self._drain_sealed_multihost(per_shard, g_waves)
+            if merge and g_dirty:
+                self._merge_device()
+
+        kind = "flush" if merge else "drain"
+        mine = sorted(per_shard) if per_shard else []
+        self._disp.submit(job, label=f"mh-{kind}#{self.front.seals}:"
+                                     f"waves{g_waves}:shards{mine}")
+        if wait:
+            self._disp.wait()
+
+    # flashlint: under-lock (drain-worker body, submitted via dispatcher)
+    def _drain_sealed_multihost(self, per_shard: Optional[Dict],
+                                waves: int) -> None:
+        """Run the agreed number of collective update waves, packing this
+        host's sealed entries into its *local* device slices only (the
+        a2a routes them to their owners across hosts). Each slice holds
+        at most ``shard_chunk <= bucket_cap`` entries, so no (src, dst)
+        bucket can overflow — ``write_carried == 0`` stays structural. A
+        host with nothing sealed still runs its share of the waves with
+        EMPTY slices (SPMD lockstep)."""
+        from . import distributed as D
+        from .distributed import assert_live
+        n = self.cfg.num_shards
+        step = self.shard_chunk
+        budget = len(self._local_shards) * step
+        led = self.stats_ledger
+        assert_live(self.state)
+        if per_shard:
+            order = sorted(per_shard)
+            ks = np.concatenate([per_shard[s][0] for s in order])
+            vs = np.concatenate([per_shard[s][1] for s in order])
+        else:
+            ks = np.zeros(0, np.int64)
+            vs = np.zeros(0, np.int64)
+        for w in range(waves):
+            toks = np.full(n * step, EMPTY, np.int64)
+            dels = np.zeros(n * step, np.int64)
+            ck = ks[w * budget:(w + 1) * budget]
+            cv = vs[w * budget:(w + 1) * budget]
+            for j, s in enumerate(self._local_shards):
+                pk = ck[j * step:(j + 1) * step]
+                pv = cv[j * step:(j + 1) * step]
+                toks[s * step:s * step + pk.size] = pk
+                dels[s * step:s * step + pv.size] = pv
+            gt = D.make_global_batch(self.mesh, self.axis,
+                                     toks.astype(np.int32))
+            gd = D.make_global_batch(self.mesh, self.axis,
+                                     dels.astype(np.int32))
+            self.state, n_carry = self._upd(self.state, gt, gd)
+            led.dispatches += 1
+            self.carried += int(np.asarray(n_carry))
+        import jax
+        jax.block_until_ready(self.state)   # durable, not merely queued
+        self._disp.trace("state_rebind", "state", "w")
+        if waves:
+            # other hosts' entries may have landed in our local shards'
+            # change segments even when we sealed nothing
+            self._staged_dirty = True
+        if per_shard:
+            for _s, (pks, _pvs) in per_shard.items():
+                led.dispatched_entries += pks.size
+            self._note_staged(per_shard)
+            self.front.mark_drained(sorted(per_shard))
+            led.flushes += 1
+        self.query_engine.invalidate()
+        led.invalidations += 1
+
     def drain(self, shards: Optional[List[int]] = None,
               wait: bool = True) -> None:
         """Seal the selected shards' H_R partitions and drain them on
-        the worker (no forced merge)."""
+        the worker (no forced merge). On a multi-process mesh this is a
+        collective call: every process seals *all* its local partitions
+        (``shards`` selection is host-local and therefore ignored) and
+        the hosts agree on the wave count before the worker dispatches."""
         self._stall_if_inflight()
+        if self.multihost:
+            self._drain_collective(merge=False, wait=wait)
+            return
         per_shard = self._seal(shards)
         if per_shard is not None:
             self._disp.submit(lambda: self._drain_sealed(per_shard),
@@ -1079,8 +1255,13 @@ class ShardedBackend:
         """Durability point: drain every H_R partition, then force the
         device merge of all staged change segments. A complete no-op —
         nothing buffered, in flight or staged — touches neither the
-        device nor the hot cache."""
+        device nor the hot cache. Collective on a multi-process mesh
+        (the merge runs on every host when *any* host has staged
+        segments; the no-op decision is agreed, not local)."""
         self._stall_if_inflight()
+        if self.multihost:
+            self._drain_collective(merge=True, wait=wait)
+            return
         per_shard = self._seal(None)
         # post-settle probe: no job is in flight here, so the flag is
         # stable until we submit below
@@ -1116,19 +1297,61 @@ class ShardedBackend:
         return self.front.pending(flat, self.owner_of(flat))
 
     def query_batch(self, keys) -> np.ndarray:
+        if self.multihost:
+            # lookups are collective programs: barrier the in-flight
+            # drain first so every host issues them at the same point in
+            # the global program order. Every process must call
+            # query_batch with identical keys (DESIGN.md §14).
+            self._disp.wait()
         with self._disp.lock:
             base = self.query_engine.query_batch(self.state, keys)
             pend = self.pending(keys)
         return base + pend
 
     def partition_heat(self, keys) -> np.ndarray:
-        return np.zeros(_flat_i64(keys).size)     # not tracked per shard yet
+        """Write pressure of each key's *global* block (ISSUE 10): H_R
+        entries pending for it (active + in-flight, this host's view of
+        the trace) plus the decayed per-merge heat history from the
+        trace-derived wear proxy. Topology-invariant by construction —
+        the ledger keys are global block ids, so the same trace produces
+        the same heat on a 1-host-8-shard and a 2-process-4-shard mesh."""
+        flat = _flat_i64(keys)
+        if flat.size == 0:
+            return np.zeros(0)
+        with self._disp.lock:
+            pending, heat = self._wear.snapshot()
+            for bufs in (self.front._buf, self.front._inflight):
+                for b in bufs:
+                    if not b:
+                        continue
+                    bk = np.fromiter(b.keys(), np.int64, len(b))
+                    parts, counts = np.unique(
+                        np.asarray(self.cfg.global_pair.s(bk)),
+                        return_counts=True)
+                    for p, c in zip(parts.tolist(), counts.tolist()):
+                        pending[p] = pending.get(p, 0) + c
+        if not pending and not heat:
+            return np.zeros(flat.size)
+        parts = np.asarray(self.cfg.global_pair.s(flat))
+        return np.asarray([pending.get(int(p), 0)
+                           + heat.get(int(p), 0.0) for p in parts])
 
     def wear(self) -> Dict[str, int]:  # flashlint: quiescent
-        """Device wear counters summed across shards."""
+        """Device wear counters summed across shards. On a multi-process
+        mesh a host can only read its addressable shards, so the counters
+        are the *local* shards' sums — the per-host wear view (the drain
+        routed every entry to its owner, so summing across hosts'
+        reports recovers the global figure)."""
         self._disp.wait()             # quiesce: device counters settled
         s = self.state.stats
-        return {f: int(np.asarray(getattr(s, f)).sum()) for f in s._fields}
+
+        def tot(x) -> int:
+            if self.multihost:
+                return int(sum(int(np.asarray(sh.data).sum())
+                               for sh in x.addressable_shards))
+            return int(np.asarray(x).sum())
+
+        return {f: tot(getattr(s, f)) for f in s._fields}
 
     def stats(self) -> Dict[str, int]:
         out = {"backend": self.name, "scheme": self.scheme,
@@ -1151,7 +1374,15 @@ class ShardedBackend:
                        manager=None) -> Path:
         """Capture the global sharded state through the checkpoint layout
         (full arrays per the single-process writer; restore reshards
-        against the current mesh)."""
+        against the current mesh). Multi-process meshes recover through
+        their per-host WALs instead (DESIGN.md §14): serializing a
+        non-addressable global array would need a gather collective the
+        checkpoint layer doesn't speak yet."""
+        if self.multihost:
+            raise NotImplementedError(
+                "multihost sharded stores snapshot via per-host WALs "
+                "(FlashStore.restore replays them); global-array "
+                "snapshots need a gather the checkpoint layer lacks")
         from ..checkpoint.checkpoint import CheckpointManager
         if manager is None:
             manager = CheckpointManager(path, every_steps=1, keep=1_000_000)
@@ -1170,16 +1401,24 @@ class ShardedBackend:
         if path is not None and step is None:
             step = _latest_step(path)
         if path is None or step is None:
-            self.state = jax.device_put(D.init_global(self.cfg), self._spec)
+            self.state = (D.place_global(self.cfg, self.mesh, self.axis)
+                          if self.multihost
+                          else jax.device_put(D.init_global(self.cfg),
+                                              self._spec))
             meta = {}
             step = None
         else:
+            if self.multihost:
+                raise NotImplementedError(
+                    "multihost sharded stores restore from per-host "
+                    "WALs over a fresh init (path=None)")
             from ..checkpoint.checkpoint import restore_checkpoint
             restored, meta = restore_checkpoint(
                 path, D.init_global(self.cfg), step=step,
                 shardings=self._spec)
             self.state = restored
         self._staged_dirty = True     # snapshot may hold staged segments
+        self._wear.clear()
         self.query_engine.invalidate()
         return step, meta
 
@@ -1478,7 +1717,10 @@ class FlashStore:
                     b.update(r.keys, r.deltas)
                     records_replayed += 1
                     entries_replayed += int(r.keys.size)
-                if seals:
+                # multihost: drain() is collective — every host must call
+                # it even with zero seal records of its own (per-host WALs
+                # recover independently but drain in lockstep, §14)
+                if seals or getattr(b, "multihost", False):
                     b.drain(wait=True)
         return RestoreReport(
             snapshot_step=snap_step, base_seq=base,

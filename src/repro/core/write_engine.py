@@ -128,6 +128,53 @@ def fold_entry(buf: Dict[int, int], k: int, s: int) -> int:
     return -1
 
 
+class PartitionHeatLedger:
+    """Per-partition write-pressure ledger shared by the wear-tracking
+    backends (ISSUE 10): a staged-since-last-merge histogram plus a
+    decayed per-merge heat history.
+
+    ``note(parts_counts, wear_delta)`` is the single mutation point —
+    callers hold their dispatcher lock (the single-device backend feeds
+    it from ``_on_drain`` on the drain worker; the sharded backend from
+    its drain body). Semantics are exactly the former
+    ``DeviceBackend._on_drain`` ledgers: staged entries accumulate per
+    partition; a positive ``wear_delta`` halves the existing heat and
+    charges the delta to the staged partitions proportional to volume
+    (recent merge pressure, not lifetime totals); ``parts_counts=None``
+    marks a forced merge and clears the staged histogram after charging.
+
+    Partition ids are caller-defined — the single-device backend uses
+    change-segment partitions (MDB) or data blocks, the sharded backend
+    uses *global* block ids so heat is a function of the trace, not of
+    how the mesh splits it across hosts/processes.
+    """
+
+    def __init__(self) -> None:
+        self.heat: Dict[int, float] = {}
+        self.staged: Dict[int, int] = {}
+
+    def note(self, parts_counts, wear_delta: float) -> None:
+        if parts_counts is not None:
+            for p, c in parts_counts:
+                self.staged[int(p)] = self.staged.get(int(p), 0) + int(c)
+        if wear_delta > 0 and self.staged:
+            self.heat = {p: 0.5 * v for p, v in self.heat.items()}
+            total = sum(self.staged.values())
+            for p, c in self.staged.items():
+                self.heat[p] = self.heat.get(p, 0.0) + wear_delta * c / total
+        if parts_counts is None:
+            self.staged.clear()
+
+    def snapshot(self) -> Tuple[Dict[int, int], Dict[int, float]]:
+        """Copies of (staged, heat) — take under the caller's lock, then
+        combine with live-buffer pendings lock-free."""
+        return dict(self.staged), dict(self.heat)
+
+    def clear(self) -> None:
+        self.heat.clear()
+        self.staged.clear()
+
+
 class BatchedWriteEngine:
     """H_R dedup + threshold flush + donated fixed-shape dispatch over
     ``table_jax.update``; double-buffered async drains with a dispatcher

@@ -36,6 +36,19 @@ def remesh_shardings(old_shardings, new_mesh: Mesh):
         is_leaf=lambda s: isinstance(s, NamedSharding))
 
 
+def _survivor_processes(survivor) -> Tuple[int, int]:
+    """(process_index, num_processes) of the surviving mesh.
+
+    Derived from the survivor store itself (its backend recorded the
+    process topology when it built the mesh), *not* from the departing
+    WAL's partition count — ``len(partitions)`` says how the departed
+    store split its H_R, which is unrelated to how many processes now
+    share the replay (ISSUE 10)."""
+    b = getattr(survivor, "_b", survivor)
+    return (int(getattr(b, "process_index", 0)),
+            int(getattr(b, "num_processes", 1)))
+
+
 def handoff_hr_partitions(wal_path, survivor, shards=None,
                           base_seq: int = 0) -> Tuple[int, int]:
     """Re-own a departing store's sealed H_R partitions via its WAL.
@@ -51,17 +64,29 @@ def handoff_hr_partitions(wal_path, survivor, shards=None,
     ``None`` takes everything — the safe default when the whole store
     moved.
 
-    Returns ``(records_replayed, entries_replayed)``. The survivor's own
-    WAL (if any) logs the re-owned chunks as fresh seals — they are new
-    writes from its point of view."""
+    **Process-count aware** (ISSUE 10): when the survivor spans multiple
+    processes, every surviving process calls this with the same departing
+    WAL, and each replays a disjoint round-robin-by-``seq`` slice of the
+    records — the survivor set comes from the *mesh* (the store's
+    recorded process topology), so each sealed chunk folds into exactly
+    one host's H_R and the next collective drain routes it to its owner.
+    Replaying everything on every process would double-apply.
+
+    Returns ``(records_replayed, entries_replayed)`` for *this* process.
+    The survivor's own WAL (if any) logs the re-owned chunks as fresh
+    seals — they are new writes from its point of view."""
     from ..core.wal import SEAL, read_wal
     records, _ = read_wal(wal_path)
     keep = None if shards is None else set(shards)
+    me, n_procs = _survivor_processes(survivor)
     n_rec = n_ent = 0
-    for r in sorted((r for r in records if r.kind == SEAL
-                     and r.seq > base_seq
-                     and (keep is None or r.part in keep)),
-                    key=lambda r: r.seq):
+    for i, r in enumerate(sorted(
+            (r for r in records if r.kind == SEAL
+             and r.seq > base_seq
+             and (keep is None or r.part in keep)),
+            key=lambda r: r.seq)):
+        if i % n_procs != me:
+            continue
         survivor.update(r.keys, r.deltas)
         n_rec += 1
         n_ent += int(r.keys.size)

@@ -1,0 +1,346 @@
+"""Multi-process sharded FlashStore launcher (ISSUE 10, DESIGN.md §14).
+
+Parent process (no jax configured) spawns:
+
+* two ``--role worker`` children — one JAX *process* each, joined into a
+  single 8-device mesh via ``jax.distributed.initialize`` over a local
+  TCP coordinator, 4 virtual CPU devices per process
+  (``xla_force_host_platform_device_count=4``), gloo CPU collectives;
+* optionally one ``--role single`` child — the single-host 8-virtual-
+  device sharded reference on the *same* stream.
+
+and compares their dumped query results against each other and the sim
+oracle (computed in-parent). Scenarios:
+
+``equivalence``  2-process store vs single-host sharded vs sim oracle:
+                 bit-identical final contents per scheme (MB/MDB/MDB-L),
+                 ``write_carried == 0`` on every host.
+``heat``         identical skewed trace on 1-host-8-shard vs
+                 2-process-4-shard meshes yields identical per-shard
+                 ``partition_heat`` (and therefore eviction victims):
+                 heat is a function of the trace, not the topology.
+``wal_restore``  per-host WALs recover independently: each process seals
+                 through its own log, the stores are abandoned
+                 un-closed, fresh stores replay their own logs (drains
+                 in lockstep) and reproduce the truth.
+``handoff``      2-process departure: a departed store's WAL is re-owned
+                 by both surviving processes via
+                 ``elastic.handoff_hr_partitions`` — disjoint
+                 round-robin record slices, exactly-once totals.
+
+The child env (XLA flags, gloo collectives config *before*
+``jax.distributed.initialize``) is the load-bearing part: CPU
+multiprocess collectives need ``jax_cpu_collectives_implementation`` set
+via ``jax.config.update`` in-process.
+"""
+import argparse
+import os
+import socket
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[2]
+UNIVERSE = 5000          # key space for every stream below
+N_BATCHES = 16
+BATCH = 1024
+NUM_PROCS = 2
+
+
+# ---------------------------------------------------------------------------
+# shared deterministic inputs (every role regenerates from the seed)
+# ---------------------------------------------------------------------------
+def make_batches(seed: int = 0, deltas: bool = False):
+    """N_BATCHES (tokens, deltas|None) batches over a skewed key space.
+
+    With ``deltas``, the final batch decrements every 3rd key the stream
+    actually touched (deletion-by-decrement, §2.6) — net counts stay
+    non-negative so a plain Counter is the truth."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(N_BATCHES - (1 if deltas else 0)):
+        toks = (rng.zipf(1.3, size=BATCH) % UNIVERSE).astype(np.int64)
+        d = rng.choice(np.array([1, 1, 2], np.int64), BATCH) if deltas \
+            else None
+        out.append((toks, d))
+    if deltas:
+        seen = np.unique(np.concatenate([t for t, _ in out]))[::3]
+        dec = seen[:BATCH]
+        out.append((dec.astype(np.int64),
+                    np.full(dec.size, -1, np.int64)))
+    return out
+
+
+def truth_of(batches):
+    from collections import Counter
+    c: Counter = Counter()
+    for toks, d in batches:
+        if d is None:
+            c.update(toks.tolist())
+        else:
+            for k, v in zip(toks.tolist(), d.tolist()):
+                c[k] += v
+    return c
+
+
+def store_kwargs(scheme: str) -> dict:
+    kw = dict(q_log2=10, r_log2=7, scheme=scheme,
+              log_capacity=1 << 14, max_updates_per_block=1 << 7,
+              overflow_capacity=1 << 9)
+    if scheme == "MDB":
+        kw["cs_partitions"] = 4          # divides 2^(10-7) local blocks
+    return kw
+
+
+def open_sharded(scheme: str, wal=None):
+    from repro.core import table_jax as tj
+    from repro.core.distributed import ShardedTableConfig
+    from repro.core.store import FlashStore
+    cfg = ShardedTableConfig(
+        local=tj.FlashTableConfig(**store_kwargs(scheme)),
+        num_shards=8, bucket_cap=1 << 9)
+    # flush_threshold is moot in multihost (auto-flush disabled) but keeps
+    # the single-host reference on the same explicit-drain cadence
+    return FlashStore.open(cfg, backend="sharded", shard_chunk=256,
+                           flush_threshold=1 << 30, wal=wal)
+
+
+def ingest(store, batches, mine=lambda i: True, drain_every: int = 4):
+    """Drive the agreed drain cadence: every process walks the *global*
+    batch index sequence, folds only its own batches, and hits the
+    collective drain points together."""
+    for i, (toks, d) in enumerate(batches):
+        if mine(i):
+            store.update(toks, d)
+        if i % drain_every == drain_every - 1:
+            store.drain(wait=True)
+
+
+def query_universe(store) -> np.ndarray:
+    return np.asarray(store.query_batch(np.arange(UNIVERSE, dtype=np.int64)))
+
+
+# ---------------------------------------------------------------------------
+# roles
+# ---------------------------------------------------------------------------
+def run_worker(a) -> None:
+    import jax
+    try:
+        # must run after `import jax`, before distributed.initialize —
+        # the env-var spelling does NOT work (spike-verified)
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass          # newer jax: gloo is already the CPU default
+    jax.distributed.initialize(
+        coordinator_address=f"127.0.0.1:{a.port}",
+        num_processes=NUM_PROCS, process_id=a.pid)
+    assert jax.device_count() == 8 and jax.local_device_count() == 4
+    tmp = Path(a.tmp)
+    if a.scenario == "equivalence":
+        batches = make_batches(deltas=True)
+        store = open_sharded(a.scheme)
+        ingest(store, batches, mine=lambda i: i % NUM_PROCS == a.pid)
+        store.flush(wait=True)
+        got = query_universe(store)
+        s = store.stats()
+        assert s["write_carried"] == 0, s    # owner-aligned waves: no carry
+        assert s["dropped"] == 0, s
+        if a.pid == 0:
+            np.save(tmp / "mh_counts.npy", got)
+        store.close()
+    elif a.scenario == "heat":
+        batches = make_batches(seed=3)       # counts-only, heavily skewed
+        store = open_sharded(a.scheme)
+        # the whole trace lands on host 0; host 1 participates in the
+        # collectives with empty seals — heat must match single-host
+        ingest(store, batches, mine=lambda i: a.pid == 0)
+        store.flush(wait=True)
+        heat = store.partition_heat(np.arange(UNIVERSE, dtype=np.int64))
+        if a.pid == 0:
+            np.save(tmp / "mh_heat.npy", np.asarray(heat))
+        store.close()
+    elif a.scenario == "wal_restore":
+        batches = make_batches(seed=5)
+        wal_path = tmp / f"wal_{a.pid}.log"
+        store = open_sharded(a.scheme, wal=str(wal_path))
+        ingest(store, batches, mine=lambda i: i % NUM_PROCS == a.pid)
+        store.drain(wait=True)               # seal + drain everything
+        # crash: abandon the store un-closed (device state discarded);
+        # the per-host WAL is the only survivor
+        store._b._disp.close()
+        store._b.front.wal.close()
+        store2 = open_sharded(a.scheme, wal=str(wal_path))
+        rep = store2.restore(path=None)
+        assert rep.records_replayed > 0, rep
+        store2.flush(wait=True)
+        got = query_universe(store2)
+        if a.pid == 0:
+            np.save(tmp / "mh_counts.npy", got)
+        store2.close()
+    elif a.scenario == "handoff":
+        from repro.runtime.elastic import handoff_hr_partitions
+        batches = make_batches(seed=7)
+        store = open_sharded(a.scheme)
+        ingest(store, batches, mine=lambda i: i % NUM_PROCS == a.pid)
+        store.drain(wait=True)
+        n_rec, n_ent = handoff_hr_partitions(str(tmp / "depart.log"), store)
+        print(f"HANDOFF{a.pid} records={n_rec} entries={n_ent}", flush=True)
+        assert n_rec > 0                     # the slice split left us some
+        store.flush(wait=True)
+        got = query_universe(store)
+        if a.pid == 0:
+            np.save(tmp / "mh_counts.npy", got)
+        store.close()
+    else:
+        raise SystemExit(f"unknown scenario {a.scenario}")
+    print(f"MH{a.pid}_OK", flush=True)
+
+
+def run_single(a) -> None:
+    import jax
+    assert jax.device_count() == 8, jax.devices()
+    tmp = Path(a.tmp)
+    if a.scenario == "equivalence":
+        batches = make_batches(deltas=True)
+        store = open_sharded(a.scheme)
+        ingest(store, batches)
+        store.flush(wait=True)
+        np.save(tmp / "single_counts.npy", query_universe(store))
+        assert store.stats()["write_carried"] == 0
+        store.close()
+    elif a.scenario == "heat":
+        batches = make_batches(seed=3)
+        store = open_sharded(a.scheme)
+        ingest(store, batches)
+        store.flush(wait=True)
+        heat = store.partition_heat(np.arange(UNIVERSE, dtype=np.int64))
+        np.save(tmp / "single_heat.npy", np.asarray(heat))
+        store.close()
+    else:
+        raise SystemExit(f"no single-host reference for {a.scenario}")
+    print("SINGLE_OK", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# parent: spawn + compare
+# ---------------------------------------------------------------------------
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _spawn(role: str, a, port: int, pid: int = 0) -> subprocess.Popen:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    devs = 4 if role == "worker" else 8
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devs}"
+    env["JAX_PLATFORMS"] = "cpu"
+    cmd = [sys.executable, str(Path(__file__).resolve()), "--role", role,
+           "--scenario", a.scenario, "--scheme", a.scheme,
+           "--tmp", a.tmp, "--port", str(port), "--pid", str(pid)]
+    return subprocess.Popen(cmd, env=env, cwd=str(ROOT),
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+
+
+def _wait_ok(proc: subprocess.Popen, marker: str, timeout: int = 600) -> str:
+    out, _ = proc.communicate(timeout=timeout)
+    assert proc.returncode == 0, f"{marker} rc={proc.returncode}\n{out}"
+    assert marker in out, f"missing {marker}\n{out}"
+    return out
+
+
+def run_parent(a) -> None:
+    tmp = Path(a.tmp)
+    tmp.mkdir(parents=True, exist_ok=True)
+    port = _free_port()
+
+    if a.scenario == "handoff":
+        # the departing node: a WAL'd store sealing one stream (the sim
+        # backend keeps the parent jax-free; only its *log* matters)
+        from repro.core.store import FlashStore
+        depart = make_batches(seed=11)
+        dstore = FlashStore.open(backend="sim", scheme=a.scheme,
+                                 wal=str(tmp / "depart.log"))
+        for toks, d in depart:
+            dstore.update(toks, d)
+            dstore.drain(wait=True)          # one sealed WAL record per
+        dstore.close()                       # batch: both survivors get
+                                             # a non-empty replay slice
+
+    workers = [_spawn("worker", a, port, pid=p) for p in range(NUM_PROCS)]
+    single = (None if a.scenario in ("wal_restore", "handoff")
+              else _spawn("single", a, port))
+    for p, w in enumerate(workers):
+        out = _wait_ok(w, f"MH{p}_OK")
+        if a.scenario == "handoff":
+            print(out, flush=True)
+    if single is not None:
+        _wait_ok(single, "SINGLE_OK")
+
+    keys = np.arange(UNIVERSE)
+    if a.scenario == "heat":
+        mh = np.load(tmp / "mh_heat.npy")
+        sg = np.load(tmp / "single_heat.npy")
+        assert mh.shape == sg.shape == keys.shape
+        np.testing.assert_allclose(mh, sg, rtol=1e-9)
+        assert mh.max() > 0, "skewed trace produced no heat"
+        # same eviction victim ordering, not merely close values
+        assert int(np.argmax(mh)) == int(np.argmax(sg))
+        print("HEAT_MATCH victim", int(np.argmax(mh)), flush=True)
+    else:
+        got = np.load(tmp / "mh_counts.npy")
+        batches = make_batches(deltas=True) if a.scenario == "equivalence" \
+            else make_batches(seed={"wal_restore": 5, "handoff": 7}
+                              [a.scenario])
+        truth = truth_of(batches)
+        if a.scenario == "handoff":
+            for k, v in truth_of(make_batches(seed=11)).items():
+                truth[k] += v
+        want = np.array([truth.get(int(k), 0) for k in keys])
+        np.testing.assert_array_equal(got, want)
+        if a.scenario == "equivalence":
+            sg = np.load(tmp / "single_counts.npy")
+            np.testing.assert_array_equal(got, sg)
+            # the sim oracle agrees too (computed right here)
+            from repro.core.store import FlashStore
+            sim = FlashStore.open(backend="sim", scheme=a.scheme)
+            for toks, d in batches:
+                sim.update(toks, d)
+            sim.flush()
+            np.testing.assert_array_equal(got, np.asarray(sim.query(keys)))
+            sim.close()
+    print("MULTIHOST_OK", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--role", default="parent",
+                    choices=("parent", "worker", "single"))
+    ap.add_argument("--scenario", default="equivalence",
+                    choices=("equivalence", "heat", "wal_restore",
+                             "handoff"))
+    ap.add_argument("--scheme", default="MDB-L",
+                    choices=("MB", "MDB", "MDB-L"))
+    ap.add_argument("--tmp", required=True)
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--pid", type=int, default=0)
+    a = ap.parse_args()
+    if a.role == "parent":
+        run_parent(a)
+    elif a.role == "worker":
+        run_worker(a)
+    else:
+        run_single(a)
+
+
+if __name__ == "__main__":
+    # role != parent: the XLA device-count env was set by the spawner
+    # *before* this interpreter started; sys.path for repro comes first
+    sys.path.insert(0, str(ROOT / "src"))
+    main()
